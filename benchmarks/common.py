@@ -1,0 +1,77 @@
+"""Shared benchmark scaffolding: one synthetic world + cached pipelines."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import RankGraph2Config, RQConfig
+from repro.core.pipeline import PipelineResult, run_pipeline
+from repro.data.synthetic import SyntheticWorld, make_world
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+# benchmark scale (CPU container); --full doubles it
+# world difficulty: high feature noise (self features alone are weak —
+# neighborhood aggregation must denoise them => the graph carries the
+# signal) + sparse engagement over a larger item space (no recall
+# saturation).
+QUICK = dict(n_users=700, n_items=1800, events_per_user=14.0,
+             steps=400, batch=96, feat_noise=1.8, pop_strength=0.5,
+             temp=0.12, noise_frac=0.0)
+FULL = dict(n_users=1600, n_items=4000, events_per_user=16.0,
+            steps=700, batch=128, feat_noise=1.8, pop_strength=0.5,
+            temp=0.12, noise_frac=0.0)
+
+
+def bench_config(scale: Dict) -> RankGraph2Config:
+    return RankGraph2Config(
+        d_user_feat=64, d_item_feat=64, d_embed=48, n_heads=2,
+        d_hidden=128, k_imp=20, k_train=8, n_negatives=50, n_pool_neg=16,
+        k_cap=32, ppr_walks=32, ppr_len=4, ppr_restart=0.3,
+        rq=RQConfig(codebook_sizes=(64, 16), hist_len=100),
+        dtype="float32")
+
+
+@functools.lru_cache(maxsize=4)
+def get_world(full: bool = False) -> SyntheticWorld:
+    s = FULL if full else QUICK
+    return make_world(n_users=s["n_users"], n_items=s["n_items"],
+                      events_per_user=s["events_per_user"],
+                      feat_noise=s["feat_noise"],
+                      pop_strength=s["pop_strength"], temp=s["temp"],
+                      noise_frac=s["noise_frac"], seed=7)
+
+
+_PIPELINES: Dict[str, PipelineResult] = {}
+
+
+def get_pipeline(tag: str, full: bool = False, **kw) -> PipelineResult:
+    key = f"{tag}|{full}"
+    if key not in _PIPELINES:
+        s = FULL if full else QUICK
+        world = get_world(full)
+        cfg = kw.pop("cfg", bench_config(s))
+        t0 = time.perf_counter()
+        _PIPELINES[key] = run_pipeline(world, cfg, steps=s["steps"],
+                                       batch_per_type=s["batch"], **kw)
+        print(f"  [pipeline:{tag}] trained in "
+              f"{time.perf_counter()-t0:.1f}s")
+    return _PIPELINES[key]
+
+
+def write_result(name: str, payload: Dict) -> str:
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def fmt_recall_row(name: str, r: Dict[int, float]) -> str:
+    return (f"{name:<28s}" + "".join(
+        f"  @{k}={r[k]:.3f}" for k in sorted(r)))

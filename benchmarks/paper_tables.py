@@ -1,0 +1,264 @@
+"""Paper-table benchmarks (Tables 2-8), one function per table.
+
+All run on the shared synthetic world (see DESIGN.md §6: the paper's
+corpora are proprietary and public sets don't exhibit the scale
+phenomena; we validate the *qualitative orderings* the paper claims and
+report our absolute numbers).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (bench_config, fmt_recall_row, get_pipeline,
+                               get_world, write_result, QUICK, FULL)
+from repro.core import evaluation as EV
+
+
+# ---------------------------------------------------------------------------
+# Table 2: user-embedding recall (RankGraph-2 vs GAT-DGI vs HSTU-proxy)
+# ---------------------------------------------------------------------------
+
+def table2_user_recall(full: bool = False) -> Dict:
+    world = get_world(full)
+    s = FULL if full else QUICK
+    res = get_pipeline("main", full)
+    rows = {}
+    rows["rankgraph2"] = EV.user_recall(res.user_emb, world)
+
+    from repro.baselines.gat_dgi import GATDGIConfig, train as gat_train
+    ue, _ = gat_train(world, res.graph, GATDGIConfig(d_embed=48),
+                      steps=max(s["steps"] // 2, 100))
+    rows["gat_dgi (bipartite)"] = EV.user_recall(ue, world)
+
+    from repro.baselines.seqrec import SeqRecConfig, train as seq_train
+    ue, _ = seq_train(world.day0, SeqRecConfig(d_embed=48),
+                      steps=max(s["steps"] // 2, 100))
+    rows["seqrec (HSTU-proxy)"] = EV.user_recall(ue, world)
+
+    print("\nTable 2 — user embedding Recall@K (U2U2I protocol):")
+    for name, r in rows.items():
+        print("  " + fmt_recall_row(name, r))
+    write_result("table2_user_recall", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 3: item-embedding recall (RankGraph-2 vs PBG vs HSTU-proxy)
+# ---------------------------------------------------------------------------
+
+def table3_item_recall(full: bool = False) -> Dict:
+    world = get_world(full)
+    s = FULL if full else QUICK
+    res = get_pipeline("main", full)
+    rows = {}
+    rows["rankgraph2"] = EV.item_recall(res.item_emb, world)
+
+    from repro.baselines.biggraph import PBGConfig, train as pbg_train
+    _, ie = pbg_train(res.graph, PBGConfig(d_embed=48),
+                      steps=max(s["steps"], 200))
+    rows["pbg (translational)"] = EV.item_recall(ie, world)
+
+    from repro.baselines.seqrec import SeqRecConfig, train as seq_train
+    _, ie = seq_train(world.day0, SeqRecConfig(d_embed=48),
+                      steps=max(s["steps"] // 2, 100))
+    rows["seqrec (HSTU-proxy)"] = EV.item_recall(ie, world)
+
+    print("\nTable 3 — item embedding Recall@K (next-day I-I protocol):")
+    for name, r in rows.items():
+        print("  " + fmt_recall_row(name, r))
+    write_result("table3_item_recall", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 4: learned-index hitrate, with vs without regularization
+# ---------------------------------------------------------------------------
+
+def table4_index_hitrate(full: bool = False) -> Dict:
+    import dataclasses as dc
+    from repro.core import rq_index as RQ
+    world = get_world(full)
+    res = get_pipeline("main", full)
+    res_noreg = get_pipeline(
+        "noreg", full,
+        cfg=dc.replace(bench_config(QUICK),
+                       rq=dc.replace(bench_config(QUICK).rq,
+                                     regularize=False,
+                                     biased_selection=False)))
+    # positive pairs: day-0 U-I edges mapped into the shared embed space
+    g = res.graph
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, len(g.ui), min(400, len(g.ui)))
+    emb = np.concatenate([res.user_emb, res.item_emb], 0)
+    pairs = np.stack([g.ui.src[idx], g.n_users + g.ui.dst[idx]], 1)
+
+    def recon_of(r):
+        e = np.concatenate([r.user_emb, r.item_emb], 0)
+        codes = RQ.assign_codes(r.state.params["rq"], jnp.asarray(e),
+                                r.cfg.rq)
+        # reconstruct from codes
+        resid_codes = []
+        flat = np.asarray(codes)
+        sizes = r.cfg.rq.codebook_sizes
+        cs = []
+        rem = flat
+        for n in reversed(sizes):
+            cs.append(rem % n)
+            rem = rem // n
+        layer_codes = np.stack(list(reversed(cs)), axis=1)
+        return np.asarray(RQ.reconstruct(r.state.params["rq"],
+                                         jnp.asarray(layer_codes),
+                                         r.cfg.rq)), e
+
+    recon, emb = recon_of(res)
+    recon_nr, emb_nr = recon_of(res_noreg)
+    nrange = (g.n_users, g.n_users + res.graph.n_items)
+    hr_orig, hr_recon = EV.index_hitrate(emb, recon, pairs,
+                                         neg_range=nrange)
+    _, hr_recon_nr = EV.index_hitrate(emb_nr, recon_nr, pairs,
+                                      neg_range=nrange)
+    util = RQ.codebook_utilization(res.state.rq_state)
+    util_nr = RQ.codebook_utilization(res_noreg.state.rq_state)
+
+    rows = {"original": hr_orig, "recon (with reg)": hr_recon,
+            "recon (no reg)": hr_recon_nr,
+            "utilization": {1: util[0], 5: util[1] if len(util) > 1
+                            else util[0], 10: float(np.mean(util))},
+            "utilization_noreg": {1: util_nr[0],
+                                  5: util_nr[1] if len(util_nr) > 1
+                                  else util_nr[0],
+                                  10: float(np.mean(util_nr))}}
+    print("\nTable 4 — learned index Hitrate@K + codebook utilization:")
+    for name in ("original", "recon (with reg)", "recon (no reg)"):
+        print("  " + fmt_recall_row(name, rows[name]))
+    print(f"  codebook utilization  with reg: {util}   "
+          f"without reg: {util_nr}")
+    write_result("table4_index_hitrate", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 5: edge-type ablation
+# ---------------------------------------------------------------------------
+
+def table5_edge_types(full: bool = False) -> Dict:
+    world = get_world(full)
+    rows = {}
+    for name, types in [("U-I only", ("ui",)),
+                        ("U-I + I-I", ("ui", "ii")),
+                        ("U-I + U-U", ("ui", "uu")),
+                        ("U-I + U-U + I-I", ("ui", "uu", "ii"))]:
+        tag = "main" if len(types) == 3 else f"edges_{'_'.join(types)}"
+        res = get_pipeline(tag, full, edge_types=types)
+        rows[name] = EV.user_recall(res.user_emb, world)
+    print("\nTable 5 — edge-type ablation (user recall):")
+    for name, r in rows.items():
+        print("  " + fmt_recall_row(name, r))
+    write_result("table5_edge_types", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 6: neighbor-selection ablation
+# ---------------------------------------------------------------------------
+
+def table6_neighbors(full: bool = False) -> Dict:
+    world = get_world(full)
+    rows = {}
+    for name, strat in [("Random", "random"), ("Top-weight", "topweight"),
+                        ("PPR neighbors", "ppr")]:
+        tag = "main" if strat == "ppr" else f"nbrs_{strat}"
+        res = get_pipeline(tag, full, neighbor_strategy=strat)
+        rows[name] = EV.user_recall(res.user_emb, world)
+    print("\nTable 6 — neighbor-strategy ablation (user recall):")
+    for name, r in rows.items():
+        print("  " + fmt_recall_row(name, r))
+    write_result("table6_neighbors", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 7: popularity-bias correction ablation
+# ---------------------------------------------------------------------------
+
+def table7_popbias(full: bool = False) -> Dict:
+    world = get_world(full)
+    rows = {}
+    res = get_pipeline("nopop", full, popbias=False)
+    rows["w/o correction"] = EV.item_recall(res.item_emb, world)
+    res = get_pipeline("main", full)
+    rows["w/ correction"] = EV.item_recall(res.item_emb, world)
+    print("\nTable 7 — popularity-bias correction (item recall):")
+    for name, r in rows.items():
+        print("  " + fmt_recall_row(name, r))
+    write_result("table7_popbias", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 8 / §5.4: serving cost — cluster index vs online KNN (83% claim)
+# ---------------------------------------------------------------------------
+
+def table8_serving_cost(full: bool = False) -> Dict:
+    from repro.core.serving import (ClusterQueueStore, ServingCostModel,
+                                    build_i2i_knn, u2i2i_retrieve)
+    world = get_world(full)
+    res = get_pipeline("main", full)
+
+    # cost model at production scale (the paper's 83% claim)
+    cm = ServingCostModel()
+    reduction = cm.cost_reduction()
+
+    # measured serving-path microbenchmark at our scale
+    store = ClusterQueueStore(res.user_codes, recency_s=900.0)
+    d1 = world.day1
+    store.ingest(d1.user_id, d1.item_id, d1.timestamp)
+    now = float(d1.timestamp.max())
+    t0 = time.perf_counter()
+    n_req = 2000
+    for u in range(n_req):
+        store.retrieve(u % world.n_users, now, 32)
+    t_cluster = (time.perf_counter() - t0) / n_req
+
+    emb = res.user_emb / np.maximum(
+        np.linalg.norm(res.user_emb, axis=1, keepdims=True), 1e-8)
+    t0 = time.perf_counter()
+    for u in range(200):
+        sims = emb[u % world.n_users] @ emb.T       # online KNN per request
+        np.argpartition(-sims, 32)[:32]
+    t_knn = (time.perf_counter() - t0) / 200
+
+    # retrieval quality sanity: cluster retrieval finds relevant items
+    day1_items = EV._user_day1_items(world.day1)
+    hits = total = 0
+    for u in range(min(500, world.n_users)):
+        got = set(store.retrieve(u, now, 64))
+        if day1_items[u]:
+            hits += len(got & day1_items[u])
+            total += len(day1_items[u])
+    cluster_recall = hits / max(total, 1)
+
+    out = dict(
+        modeled_cost_reduction=reduction,
+        modeled_knn_bytes_per_req=cm.knn_bytes_per_req(),
+        modeled_cluster_bytes_per_req=cm.cluster_bytes_per_req(),
+        measured_us_cluster=t_cluster * 1e6,
+        measured_us_knn=t_knn * 1e6,
+        measured_speedup=t_knn / max(t_cluster, 1e-9),
+        cluster_recall_vs_nextday=cluster_recall,
+    )
+    print("\nTable 8 proxy — serving cost (cluster index vs online KNN):")
+    print(f"  modeled cost reduction at production scale: "
+          f"{reduction*100:.1f}%  (paper: 83%)")
+    print(f"  measured: cluster lookup {out['measured_us_cluster']:.1f}us "
+          f"vs KNN {out['measured_us_knn']:.1f}us per request "
+          f"({out['measured_speedup']:.0f}x)")
+    print(f"  cluster-queue retrieval recall vs next-day: "
+          f"{cluster_recall:.3f}")
+    write_result("table8_serving_cost", out)
+    return out

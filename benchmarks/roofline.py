@@ -1,0 +1,123 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from the compiled SPMD module (all
+quantities below are per-chip: XLA's cost analysis describes the
+partitioned per-device program, and collective bytes are parsed from the
+per-device HLO):
+
+  compute    = HLO_FLOPs / peak_FLOPs           (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw               (819 GB/s)
+  collective = collective_bytes / link_bw       (~50 GB/s/link ICI)
+
+Loop-corrected totals come from the dry-run's unrolled probe
+extrapolation (XLA counts while bodies once).  The bottleneck is the max
+term; projected MFU = ideal_compute_time / bottleneck_time where
+ideal = MODEL_FLOPS / (chips * peak).  MODEL_FLOPS is 6*N*D (train) or
+2*N*D (inference) for LMs and analytic counts elsewhere; the waste
+ratio MODEL_FLOPS / (HLO_FLOPs * chips) flags remat / routing overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def analyse_record(rec: Dict) -> Dict:
+    chips = rec["n_chips"]
+    c = rec.get("corrected") or {}
+    flops = c.get("flops", rec["flops"])             # per-chip
+    byts = c.get("bytes_accessed", rec["bytes_accessed"])
+    coll = c.get("collective_total",
+                 rec.get("collective", {}).get("total", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_star = terms[bottleneck]
+    ideal = rec["model_flops"] / (chips * PEAK_FLOPS)
+    mfu = ideal / t_star if t_star > 0 else 0.0
+    waste = rec["model_flops"] / max(flops * chips, 1e-30)
+    mem = rec.get("memory", {})
+    hbm = (mem.get("argument_size_in_bytes", 0)
+           + mem.get("temp_size_in_bytes", 0)
+           + mem.get("output_size_in_bytes", 0))
+    advice = {
+        "compute": "compute-bound: raise useful-FLOP fraction (less "
+                   "remat / routing waste) or shrink redundant compute",
+        "memory": "HBM-bound: fuse/bf16-ify intermediates, improve "
+                  "layouts, cut activation round-trips",
+        "collective": "collective-bound: reshard to cut all-gathers, "
+                      "overlap collectives with compute, compress "
+                      "cross-pod gradients",
+    }[bottleneck]
+    return dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                chips=chips, t_compute=t_compute, t_memory=t_memory,
+                t_collective=t_coll, bottleneck=bottleneck,
+                projected_mfu=mfu, useful_flop_ratio=min(waste, 10.0),
+                hbm_per_chip_gib=hbm / 2**30, ideal_s=ideal,
+                step_s=t_star, advice=advice,
+                method=c.get("method", "exact"))
+
+
+def load_all(mesh: Optional[str] = None) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*", "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec["mesh"] != mesh:
+            continue
+        out.append(analyse_record(rec))
+    return out
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "bottleneck | proj. MFU | useful/HLO | HBM GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | **{r['bottleneck']}** "
+            f"| {r['projected_mfu']*100:.1f}% "
+            f"| {r['useful_flop_ratio']:.2f} "
+            f"| {r['hbm_per_chip_gib']:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run(full: bool = False) -> Dict:
+    rows = load_all()
+    if not rows:
+        print("\nRoofline: no dry-run artifacts yet "
+              "(run python -m repro.launch.dryrun)")
+        return {}
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print(f"\nRoofline ({len(rows)} cells):")
+    for r in rows:
+        print(f"  {r['arch']:<18s} {r['shape']:<15s} {r['mesh']:<9s} "
+              f"[{r['bottleneck']:<10s}] mfu={r['projected_mfu']*100:5.1f}% "
+              f"c/m/x = {r['t_compute']:.1e}/{r['t_memory']:.1e}/"
+              f"{r['t_collective']:.1e}s hbm={r['hbm_per_chip_gib']:.1f}GiB")
+    out_path = os.path.join(os.path.dirname(__file__), "results",
+                            "roofline.json")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    with open(os.path.join(os.path.dirname(__file__), "results",
+                           "roofline.md"), "w") as f:
+        f.write(markdown_table(rows))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

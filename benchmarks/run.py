@@ -1,0 +1,82 @@
+"""Benchmark orchestrator — one function per paper table + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick (CPU scale)
+    PYTHONPATH=src python -m benchmarks.run --full
+    PYTHONPATH=src python -m benchmarks.run --only table2 table8
+
+Prints ``name,us_per_call,derived`` CSV lines at the end (harness
+contract) plus human-readable tables; JSON artifacts land in
+benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_tables as PT
+    from benchmarks import graph_build_scaling as GBS
+    from benchmarks import roofline as RL
+    from benchmarks import serving_kernels as SK
+
+    jobs = [
+        ("table2_user_recall", PT.table2_user_recall),
+        ("table3_item_recall", PT.table3_item_recall),
+        ("table4_index_hitrate", PT.table4_index_hitrate),
+        ("table5_edge_types", PT.table5_edge_types),
+        ("table6_neighbors", PT.table6_neighbors),
+        ("table7_popbias", PT.table7_popbias),
+        ("table8_serving_cost", PT.table8_serving_cost),
+        ("graph_build_scaling", GBS.run),
+        ("serving_kernels", SK.run),
+        ("roofline", RL.run),
+    ]
+    if args.only:
+        jobs = [(n, f) for n, f in jobs
+                if any(o in n for o in args.only)]
+
+    csv_rows = []
+    failures = []
+    for name, fn in jobs:
+        print(f"\n=== {name} ===")
+        t0 = time.perf_counter()
+        try:
+            out = fn(full=args.full)
+            dt = time.perf_counter() - t0
+            derived = ""
+            if isinstance(out, dict):
+                if "rankgraph2" in out:
+                    derived = f"recall@100={out['rankgraph2'].get(100, 0):.3f}"
+                elif "modeled_cost_reduction" in out:
+                    derived = (f"cost_reduction="
+                               f"{out['modeled_cost_reduction']*100:.0f}%")
+                elif "rows" in out and name == "roofline" and out["rows"]:
+                    worst = min(out["rows"],
+                                key=lambda r: r["projected_mfu"])
+                    derived = (f"cells={len(out['rows'])};worst_mfu="
+                               f"{worst['projected_mfu']*100:.1f}%")
+            csv_rows.append(f"{name},{dt*1e6:.0f},{derived}")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            csv_rows.append(f"{name},-1,FAILED")
+
+    print("\nname,us_per_call,derived")
+    for row in csv_rows:
+        print(row)
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) FAILED: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

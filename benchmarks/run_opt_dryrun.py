@@ -1,0 +1,35 @@
+"""Re-run the perf-iterated cells into REPRO_DRYRUN_DIR (see §Perf)."""
+import os
+os.environ.setdefault("REPRO_DRYRUN_DIR",
+                      os.path.join(os.path.dirname(__file__), "results",
+                                   "dryrun_opt"))
+import json
+import traceback
+
+from repro.launch import dryrun
+
+CELLS = [
+    ("dlrm-rm2", "train_batch"), ("dlrm-rm2", "serve_bulk"),
+    ("dlrm-rm2", "serve_p99"), ("dlrm-rm2", "retrieval_cand"),
+    ("wide-deep", "train_batch"), ("wide-deep", "serve_bulk"),
+    ("sasrec", "train_batch"), ("sasrec", "serve_bulk"),
+    ("bst", "train_batch"), ("bst", "serve_bulk"),
+    ("equiformer-v2", "ogb_products"), ("equiformer-v2", "minibatch_lg"),
+    ("rankgraph2", "train_batch"), ("rankgraph2", "serve_bulk"),
+]
+
+if __name__ == "__main__":
+    fails = []
+    for a, s in CELLS:
+        path = dryrun.cell_path("singlepod", a, s)
+        if os.path.exists(path):
+            print(f"cached: {a} x {s}")
+            continue
+        try:
+            rec = dryrun.run_cell(a, s, "singlepod")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:
+            traceback.print_exc()
+            fails.append((a, s, repr(e)))
+    print("FAILS:", fails)

@@ -1,0 +1,101 @@
+"""Kernel microbenchmarks on the serving/training hot paths.
+
+Wall-times here are CPU-interpret-mode and NOT indicative of TPU
+performance (the dry-run roofline covers that); what this benchmark
+establishes is (a) the kernels run and agree with their oracles at
+benchmark scale, and (b) the analytic VMEM/FLOP accounting per kernel
+that backs the kernel-level roofline notes in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import write_result
+
+
+def _time(fn, *args, n=3):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run(full: bool = False) -> Dict:
+    out = {}
+    key = jax.random.key(0)
+
+    # rq_assign: production codebooks (5000 x 50), batch tile 256
+    from repro.kernels.rq_assign.ops import rq_assign
+    from repro.kernels.rq_assign.ref import rq_assign_ref
+    B, d = (1024, 256)
+    x = jax.random.normal(key, (B, d))
+    books = [jax.random.normal(jax.random.key(1), (5000, d)) * 0.3,
+             jax.random.normal(jax.random.key(2), (50, d)) * 0.1]
+    ck, rk = rq_assign(x, books, use_kernel=True)
+    cr, rr = rq_assign_ref(x, books)
+    agree = bool((np.asarray(ck) == np.asarray(cr)).all())
+    t_ref = _time(jax.jit(lambda x: rq_assign_ref(x, books)), x)
+    vmem = sum(c.size * 4 for c in books) + 256 * d * 4 * 3
+    out["rq_assign"] = dict(
+        agree=agree, ref_us=t_ref * 1e6,
+        vmem_bytes=vmem, fits_vmem=vmem < 16 * 2**20,
+        flops_per_row=2 * d * sum(c.shape[0] for c in books) * 2)
+
+    # embedding_bag: DLRM-ish bag lookup
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    tbl = jax.random.normal(key, (200_000, 64))
+    ids = jax.random.randint(jax.random.key(3), (512, 8), -1, 200_000)
+    ok = np.allclose(np.asarray(embedding_bag(tbl, ids, None, "sum", True)),
+                     np.asarray(embedding_bag_ref(tbl, ids)), atol=2e-5)
+    t_ref = _time(jax.jit(lambda t, i: embedding_bag_ref(t, i)), tbl, ids)
+    out["embedding_bag"] = dict(agree=bool(ok), ref_us=t_ref * 1e6,
+                                bytes_gathered=512 * 8 * 64 * 4)
+
+    # fused_contrastive: training hot loop tile
+    from repro.kernels.fused_contrastive.fused_contrastive import (
+        fused_contrastive)
+    from repro.kernels.fused_contrastive.ref import contrastive_ref
+    from repro.nn.core import l2_normalize
+    src = l2_normalize(jax.random.normal(key, (512, 64)))
+    dst = l2_normalize(jax.random.normal(jax.random.key(4), (512, 64)))
+    negs = l2_normalize(jax.random.normal(jax.random.key(5),
+                                          (512, 100, 64)))
+    mk, ik = fused_contrastive(src, dst, negs)
+    mr, ir = contrastive_ref(src, dst, negs)
+    ok = (np.allclose(np.asarray(mk), np.asarray(mr), rtol=1e-3, atol=1e-4)
+          and np.allclose(np.asarray(ik), np.asarray(ir), rtol=1e-3,
+                          atol=1e-4))
+    t_ref = _time(jax.jit(lambda a, b, c: contrastive_ref(a, b, c)),
+                  src, dst, negs)
+    out["fused_contrastive"] = dict(
+        agree=bool(ok), ref_us=t_ref * 1e6,
+        hbm_saved_bytes_unfused=512 * 101 * 4 * 2)
+
+    # flash_attention: one prefill tile
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jax.random.normal(key, (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.key(6), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.key(7), (1, 2, 256, 64))
+    ok = np.allclose(np.asarray(flash_attention(q, k, v)),
+                     np.asarray(attention_ref(q, k, v)),
+                     rtol=2e-4, atol=2e-4)
+    t_ref = _time(jax.jit(lambda q, k, v: attention_ref(q, k, v)), q, k, v)
+    out["flash_attention"] = dict(agree=bool(ok), ref_us=t_ref * 1e6,
+                                  vmem_tile_bytes=(128 * 64 * 3 + 128 * 128)
+                                  * 4)
+
+    print("\nKernel microbenchmarks (interpret-mode agreement + footprint):")
+    for name, r in out.items():
+        print(f"  {name:<18s} agree={r['agree']} ref_us={r['ref_us']:.0f}")
+    assert all(r["agree"] for r in out.values()), "kernel mismatch!"
+    write_result("serving_kernels", out)
+    return out

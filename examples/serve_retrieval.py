@@ -1,0 +1,75 @@
+"""Serving example: KNN-free retrieval with the co-learned cluster index.
+
+Simulates the production serving tier: a stream of engagement events
+feeds per-cluster queues in real time; batched retrieval requests are
+answered by (a) U2U2I cluster-queue lookups and (b) U2I2I via the
+offline I2I KNN table — no online nearest-neighbor search anywhere.
+Reports per-request latency and compares against brute-force KNN.
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs.base import RankGraph2Config, RQConfig
+from repro.core.pipeline import run_pipeline
+from repro.core.serving import (ClusterQueueStore, ServingCostModel,
+                                build_i2i_knn, u2i2i_retrieve)
+from repro.data.synthetic import make_world
+
+
+def main():
+    world = make_world(n_users=600, n_items=900, seed=1)
+    cfg = RankGraph2Config(
+        d_user_feat=64, d_item_feat=64, d_embed=32, n_heads=2, d_hidden=96,
+        k_imp=12, k_train=4, n_negatives=24, n_pool_neg=8,
+        rq=RQConfig(codebook_sizes=(32, 8), hist_len=50), dtype="float32")
+    print("training (offline stage)...")
+    res = run_pipeline(world, cfg, steps=150, batch_per_type=64)
+
+    # --- offline artifacts the serving tier loads ---------------------------
+    store = ClusterQueueStore(res.user_codes, queue_len=256,
+                              recency_s=86400.0)
+    i2i = build_i2i_knn(res.item_emb, k=20)    # refreshed per embed cycle
+
+    # --- real-time ingestion -------------------------------------------------
+    d1 = world.day1
+    t0 = time.perf_counter()
+    store.ingest(d1.user_id, d1.item_id, d1.timestamp)
+    print(f"ingested {len(d1.user_id)} events in "
+          f"{time.perf_counter()-t0:.2f}s; {store.stats()}")
+
+    # --- batched request loop ------------------------------------------------
+    now = float(d1.timestamp.max())
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, world.n_users, 2000)
+    recents = [store.retrieve(int(u), now, 4) for u in users]
+
+    t0 = time.perf_counter()
+    for u in users:
+        store.retrieve(int(u), now, 32)                      # U2U2I
+    t_u2u2i = (time.perf_counter() - t0) / len(users)
+
+    t0 = time.perf_counter()
+    for u, rec in zip(users, recents):
+        u2i2i_retrieve(i2i, rec or [int(u) % world.n_items], 32)  # U2I2I
+    t_u2i2i = (time.perf_counter() - t0) / len(users)
+
+    # --- the system this replaces: online KNN per request -------------------
+    emb = res.user_emb
+    t0 = time.perf_counter()
+    for u in users[:200]:
+        sims = emb[int(u)] @ emb.T
+        np.argpartition(-sims, 32)[:32]
+    t_knn = (time.perf_counter() - t0) / 200
+
+    cm = ServingCostModel()
+    print(f"\nper-request latency:  U2U2I cluster {t_u2u2i*1e6:.0f}us | "
+          f"U2I2I table {t_u2i2i*1e6:.0f}us | online-KNN {t_knn*1e6:.0f}us")
+    print(f"modeled production-scale serving cost reduction: "
+          f"{cm.cost_reduction()*100:.1f}% (paper: 83%)")
+
+
+if __name__ == "__main__":
+    main()

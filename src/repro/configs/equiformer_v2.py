@@ -1,0 +1,18 @@
+"""equiformer-v2 [arXiv:2306.12059]: 12L d_hidden=128 l_max=6 m_max=2
+8 heads, SO(2)-eSCN equivariant graph attention.
+
+Note: the assigned shapes (Cora-like / ogbn-products-like) are
+topology+feature shapes; EquiformerV2 is geometric, so node positions
+are part of input_specs (synthesized for non-geometric graphs — the
+computational signature, which is what the dry-run measures, is
+unchanged).  ``minibatch_lg`` uses the 2-hop fanout-(15,10) sampler with
+fixed-size padded subgraphs.
+"""
+from repro.configs.base import ArchSpec, GNNConfig, GNN_SHAPES, register
+
+CONFIG = GNNConfig(
+    name="equiformer-v2", n_layers=12, d_hidden=128, l_max=6, m_max=2,
+    n_heads=8, n_radial=8, edge_chunk=65536)
+
+register(ArchSpec("equiformer-v2", "gnn", CONFIG, GNN_SHAPES,
+                  source="arXiv:2306.12059"))

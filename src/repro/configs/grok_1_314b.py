@@ -1,0 +1,20 @@
+"""grok-1-314b [hf:xai-org/grok-1]: 64L d=6144 48H (GQA kv=8) ff=32768
+vocab=131072, MoE 8 experts top-2.
+
+8 experts do not divide the 16-way model axis, so experts are
+*replicated* and tensor parallelism runs inside each expert (d_ff
+sharded) — see the rules override.  Adafactor keeps optimizer state
+factored (314B params; AdamW would need ~3.8TB of state).
+"""
+from repro.configs.base import ArchSpec, LMConfig, LM_SHAPES, register
+
+CONFIG = LMConfig(
+    name="grok-1-314b", n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, moe_d_ff=32768, vocab_size=131072, act="gelu",
+    norm="rmsnorm", n_experts=8, n_experts_per_tok=2,
+    param_dtype="bfloat16", optimizer="adafactor")
+
+RULES_OVERRIDE = {"expert": None, "expert_mlp": "model"}
+
+register(ArchSpec("grok-1-314b", "lm", CONFIG, LM_SHAPES,
+                  source="hf:xai-org/grok-1"))

@@ -1,0 +1,20 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2]: 61L d=7168 64H (GQA kv=8)
+expert-ff=2048 vocab=163840, MoE 384 experts top-8 (~1T params, 32B
+active).
+
+384 % 16 == 0, so experts shard cleanly over the model axis (24 experts
+per device, expert parallelism).  Adafactor: AdamW state for 1T params
+(~12TB) cannot fit 512 x 16GB HBM; factored stats fit comfortably.
+(The real K2 has a dense first layer + shared expert; we model the
+uniform-MoE stack and note the deviation in DESIGN.md.)
+"""
+from repro.configs.base import ArchSpec, LMConfig, LM_SHAPES, register
+
+CONFIG = LMConfig(
+    name="kimi-k2-1t-a32b", n_layers=61, d_model=7168, n_heads=64,
+    n_kv_heads=8, d_ff=2048, moe_d_ff=2048, vocab_size=163840, act="silu",
+    norm="rmsnorm", n_experts=384, n_experts_per_tok=8,
+    capacity_factor=1.25, param_dtype="bfloat16", optimizer="adafactor")
+
+register(ArchSpec("kimi-k2-1t-a32b", "lm", CONFIG, LM_SHAPES,
+                  source="arXiv:2501.kimi2 (paper-table)"))

@@ -1,0 +1,54 @@
+"""RankGraph-2 losses (paper Eq. 5-8).
+
+Margin ranking (Eq. 5, margin=0.1) + InfoNCE (Eq. 6, tau=0.06) per edge;
+per-edge-type losses combined with *learned* uncertainty weighting
+(Kendall et al. 2018).  The paper learns lambda (margin vs infoNCE) and
+beta_1..3 (edge types) via uncertainty weighting; we flatten this to one
+learned log-variance per (loss kind x edge type) task plus the RQ-index
+tasks (recon / contrastive-on-recon / regularizer), which subsumes both
+levels of weighting.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EDGE_TYPES = ("uu", "ui", "iu", "ii")
+TASKS = tuple(f"{k}_{et}" for k in ("margin", "infonce") for et in EDGE_TYPES
+              ) + ("rq_recon", "rq_contrastive", "rq_reg")
+
+
+def init_uncertainty(dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """Learned log-variances s_k; loss = sum exp(-s_k) L_k + s_k."""
+    return {t: jnp.zeros((), dtype) for t in TASKS}
+
+
+def pair_losses(src: jnp.ndarray,            # (B, d) l2-normalized
+                dst: jnp.ndarray,            # (B, d) l2-normalized
+                negs: jnp.ndarray,           # (B, N, d) l2-normalized
+                *, margin: float = 0.1, tau: float = 0.06
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (margin_loss, infonce_loss), each (B,)."""
+    s_pos = jnp.sum(src * dst, axis=-1)                       # (B,)
+    s_neg = jnp.einsum("bd,bnd->bn", src, negs)               # (B, N)
+    marg = jnp.sum(jax.nn.relu(s_neg - s_pos[:, None] + margin), axis=-1)
+    logits = jnp.concatenate([s_pos[:, None], s_neg], axis=1) / tau
+    infonce = -jax.nn.log_softmax(logits, axis=-1)[:, 0]
+    return marg, infonce
+
+
+def uncertainty_combine(task_losses: Dict[str, jnp.ndarray],
+                        log_vars: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Kendall et al.: sum_k exp(-s_k) L_k + s_k (missing tasks skipped)."""
+    total = jnp.zeros((), jnp.float32)
+    for name, loss in task_losses.items():
+        s = log_vars[name].astype(jnp.float32)
+        total = total + jnp.exp(-s) * loss.astype(jnp.float32) + s
+    return total
+
+
+def effective_weights(log_vars: Dict[str, jnp.ndarray]) -> Dict[str, float]:
+    """exp(-s_k): the learned equivalents of lambda / beta (for logging)."""
+    return {k: float(jnp.exp(-v)) for k, v in log_vars.items()}

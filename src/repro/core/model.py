@@ -1,0 +1,130 @@
+"""RankGraph-2 model (paper §4.3, Figure 2B).
+
+Multi-head type-aware feature encoders ``f_U``, ``f_I`` + heterogeneous
+aggregator ``AGG_t`` over exactly K pre-computed user and item neighbors
+(Eq. 4).  Inductive: all parameters are shared encoders over real-valued
+features; no per-node parameters.
+
+Multi-head embeddings: ``f_t`` and ``AGG_t`` produce H independent heads;
+heads are extra negatives during training (negative augmentation) and
+averaged at inference.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RankGraph2Config
+from repro.distributed.sharding import ShardingCtx, NULL_CTX
+from repro.nn import core as nn
+
+USER, ITEM = 0, 1
+
+
+def _encoder_init(key, d_in: int, d_hidden: int, n_heads: int, d_embed: int,
+                  dtype):
+    k1, k2 = jax.random.split(key)
+    p1, s1 = nn.linear_init(k1, d_in, d_hidden, in_name="embed",
+                            out_name="mlp", dtype=dtype)
+    p2, s2 = nn.linear_init(k2, d_hidden, n_heads * d_embed,
+                            in_name="mlp", out_name="heads_embed", dtype=dtype)
+    return {"l1": p1, "l2": p2}, {"l1": s1, "l2": s2}
+
+
+def _encoder_apply(params, x: jax.Array, n_heads: int, d_embed: int,
+                   ctx: ShardingCtx) -> jax.Array:
+    """(..., d_in) -> (..., H, d_embed)
+
+    The hidden constraint keeps the leading (batch) dim sharded: an
+    explicit None there *unshards* it, and GSPMD then all-gathers the
+    (B, K, d_hidden) activations in the backward pass — measured as the
+    dominant collective of the distributed train step (EXPERIMENTS.md
+    §Perf/rankgraph2)."""
+    h = jax.nn.gelu(nn.linear_apply(params["l1"], x))
+    h = ctx(h, "batch", *((None,) * (h.ndim - 2)), "mlp")
+    h = nn.linear_apply(params["l2"], h)
+    return h.reshape(*x.shape[:-1], n_heads, d_embed)
+
+
+def _agg_init(key, n_heads: int, d_embed: int, dtype):
+    # per-head combine of [self, user-nbr-mean, item-nbr-mean]
+    w = nn.variance_scaling(1.0, "fan_in", "normal")(
+        key, (n_heads, 3 * d_embed, d_embed), dtype,
+        in_axes=(1,), out_axes=(2,))
+    return ({"w": w, "b": jnp.zeros((n_heads, d_embed), dtype)},
+            {"w": ("heads", None, "embed"), "b": ("heads", "embed")})
+
+
+def _agg_apply(params, self_e, unbr_e, inbr_e) -> jax.Array:
+    """All inputs (B, H, d); output (B, H, d), l2-normalized per head."""
+    x = jnp.concatenate([self_e, unbr_e, inbr_e], axis=-1)    # (B,H,3d)
+    y = jnp.einsum("bhk,hkd->bhd", x, params["w"].astype(x.dtype))
+    y = y + params["b"].astype(x.dtype)
+    y = jax.nn.gelu(y)
+    return nn.l2_normalize(y, axis=-1)
+
+
+def init_params(key, cfg: RankGraph2Config) -> Tuple[Any, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    pu, su = _encoder_init(ks[0], cfg.d_user_feat, cfg.d_hidden, cfg.n_heads,
+                           cfg.d_embed, dtype)
+    pi, si = _encoder_init(ks[1], cfg.d_item_feat, cfg.d_hidden, cfg.n_heads,
+                           cfg.d_embed, dtype)
+    au, asu = _agg_init(ks[2], cfg.n_heads, cfg.d_embed, dtype)
+    ai, asi = _agg_init(ks[3], cfg.n_heads, cfg.d_embed, dtype)
+    params = {"f_user": pu, "f_item": pi, "agg_user": au, "agg_item": ai}
+    specs = {"f_user": su, "f_item": si, "agg_user": asu, "agg_item": asi}
+    return params, specs
+
+
+def _masked_mean(e: jax.Array, mask: jax.Array) -> jax.Array:
+    """e: (B, K, H, d), mask: (B, K) -> (B, H, d)"""
+    m = mask.astype(e.dtype)[:, :, None, None]
+    tot = jnp.sum(e * m, axis=1)
+    cnt = jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return tot / cnt
+
+
+def embed_nodes(params, cfg: RankGraph2Config, node_type: int,
+                feat: jax.Array,
+                unbr_feat: jax.Array, unbr_mask: jax.Array,
+                inbr_feat: jax.Array, inbr_mask: jax.Array,
+                ctx: ShardingCtx = NULL_CTX) -> jax.Array:
+    """Eq. 4.  Returns per-head embeddings (B, H, d_embed), l2-normalized.
+
+    feat: (B, d_feat) raw features of the node itself.
+    unbr_feat/inbr_feat: (B, K, d_*) features of pre-computed user/item
+    neighbors; masks flag padding (-1 neighbors).
+    """
+    compute = jnp.dtype(cfg.dtype)
+    f_self = params["f_user"] if node_type == USER else params["f_item"]
+    agg = params["agg_user"] if node_type == USER else params["agg_item"]
+    self_e = _encoder_apply(f_self, feat.astype(compute), cfg.n_heads,
+                            cfg.d_embed, ctx)
+    u_e = _encoder_apply(params["f_user"], unbr_feat.astype(compute),
+                         cfg.n_heads, cfg.d_embed, ctx)
+    i_e = _encoder_apply(params["f_item"], inbr_feat.astype(compute),
+                         cfg.n_heads, cfg.d_embed, ctx)
+    u_agg = _masked_mean(u_e, unbr_mask)
+    i_agg = _masked_mean(i_e, inbr_mask)
+    out = _agg_apply(agg, self_e, u_agg, i_agg)
+    return ctx(out, "batch", None, None)
+
+
+def primary_embedding(head_emb: jax.Array) -> jax.Array:
+    """Inference embedding = l2-normalized mean over heads."""
+    return nn.l2_normalize(jnp.mean(head_emb, axis=-2), axis=-1)
+
+
+def embed_side(params, cfg: RankGraph2Config, side: Dict[str, jax.Array],
+               node_type: int, ctx: ShardingCtx = NULL_CTX
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Convenience: returns (heads (B,H,d), primary (B,d)) for one endpoint
+    sub-batch with keys feat / unbr_feat / unbr_mask / inbr_feat / inbr_mask."""
+    heads = embed_nodes(params, cfg, node_type, side["feat"],
+                        side["unbr_feat"], side["unbr_mask"],
+                        side["inbr_feat"], side["inbr_mask"], ctx)
+    return heads, primary_embedding(heads)

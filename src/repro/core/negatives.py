@@ -1,0 +1,116 @@
+"""Negative sampling (paper §4.3): in-batch + out-of-batch rolling pool
++ multi-head negative augmentation.  100 negatives per positive, same
+node type as the positive's destination.
+
+The out-of-batch pool is device-resident state (one per node type): a
+FIFO ring of recent destination embeddings approximating the global
+distribution across batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class NegPoolState:
+    user: jnp.ndarray      # (P, d)
+    item: jnp.ndarray      # (P, d)
+    user_ptr: jnp.ndarray  # ()
+    item_ptr: jnp.ndarray  # ()
+    user_fill: jnp.ndarray
+    item_fill: jnp.ndarray
+
+
+def init_pool(pool_size: int, d: int, dtype=jnp.float32) -> NegPoolState:
+    # distinct buffers: the train state is donated, and XLA rejects
+    # donating the same buffer twice
+    return NegPoolState(jnp.zeros((pool_size, d), dtype),
+                        jnp.zeros((pool_size, d), dtype),
+                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    NegPoolState,
+    data_fields=["user", "item", "user_ptr", "item_ptr", "user_fill",
+                 "item_fill"],
+    meta_fields=[])
+
+
+def _push(buf: jnp.ndarray, ptr: jnp.ndarray, fill: jnp.ndarray,
+          emb: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    P = buf.shape[0]
+    B = emb.shape[0]
+    idx = (ptr + jnp.arange(B)) % P
+    buf = buf.at[idx].set(jax.lax.stop_gradient(emb.astype(buf.dtype)))
+    return buf, (ptr + B) % P, jnp.minimum(fill + B, P)
+
+
+def update_pool(state: NegPoolState, user_emb: jnp.ndarray,
+                item_emb: jnp.ndarray) -> NegPoolState:
+    ub, up, uf = _push(state.user, state.user_ptr, state.user_fill, user_emb)
+    ib, ip, if_ = _push(state.item, state.item_ptr, state.item_fill, item_emb)
+    return NegPoolState(ub, ib, up, ip, uf, if_)
+
+
+def sample_negatives(key: jax.Array,
+                     dst_primary: jnp.ndarray,    # (B, d) positives' dst
+                     dst_heads: jnp.ndarray,      # (B, H, d)
+                     pool: jnp.ndarray,           # (P, d) same type as dst
+                     pool_fill: jnp.ndarray,      # ()
+                     n_neg: int, n_pool: int,
+                     shard_block: int = 0) -> jnp.ndarray:
+    """Build the (B, n_neg, d) negative bank for each positive edge.
+
+    Composition per the paper: (1) in-batch negatives = other edges' dst
+    embeddings, (2) out-of-batch = rolling pool, (3) augmentation =
+    individual head embeddings of in-batch dst nodes (hard negatives
+    close to, but distinct from, the averaged positives).
+
+    ``shard_block`` > 0 keeps in-batch indices within blocks of that
+    size (the per-DP-shard rows): cross-shard random gathers force GSPMD
+    to all-gather the whole batch tensor — the dominant collective in
+    the distributed train step.  Shard-local in-batch negatives are the
+    standard large-scale practice and statistically equivalent here
+    (rows are i.i.d. across shards).
+    """
+    B, d = dst_primary.shape
+    H = dst_heads.shape[1]
+    n_aug = max(n_neg // 8, 1) if H > 1 else 0
+    n_pool = min(n_pool, n_neg - n_aug)
+    n_inb = n_neg - n_pool - n_aug
+    blk = shard_block if 0 < shard_block <= B and B % shard_block == 0 \
+        else B
+
+    def local_other_rows(k, n):
+        # row i -> (base of i's block) + (i + off) % blk : never crosses
+        # the block boundary, never equals i (off in [1, blk))
+        off = jax.random.randint(k, (B, n), 1, jnp.maximum(blk, 2))
+        i = jnp.arange(B)[:, None]
+        return (i // blk) * blk + (i + off) % blk
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    # (1) in-batch: random other rows within the shard block
+    neg_inb = dst_primary[local_other_rows(k1, n_inb)]   # (B, n_inb, d)
+
+    # (2) pool: uniform over filled region (fallback to in-batch when empty)
+    fill = jnp.maximum(pool_fill, 1)
+    idx_pool = jax.random.randint(k2, (B, n_pool), 0, fill)
+    neg_pool_ = pool[idx_pool].astype(dst_primary.dtype)
+    have_pool = (pool_fill > 0)
+    neg_pool_ = jnp.where(have_pool, neg_pool_,
+                          dst_primary[local_other_rows(k3, n_pool)])
+
+    parts = [neg_inb, neg_pool_]
+    # (3) augmentation: per-head embeddings of *other* in-batch dst nodes
+    if n_aug:
+        ka = jax.random.fold_in(key, 7)
+        rows = local_other_rows(ka, n_aug)
+        heads = jax.random.randint(jax.random.fold_in(key, 8),
+                                   (B, n_aug), 0, H)
+        parts.append(dst_heads[rows, heads])             # (B, n_aug, d)
+    return jnp.concatenate(parts, axis=1)

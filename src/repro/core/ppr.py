@@ -1,0 +1,271 @@
+"""Personalized-PageRank neighbor pre-computation (paper §4.2).
+
+Monte-Carlo approximation: R walks of length L with restart prob 0.15
+from every backbone node, over the *subsampled* heterogeneous graph
+(out-degree is bounded by K_CAP per edge type, so a padded adjacency is
+the natural representation).  Edge-type transition mass is balanced so
+no type dominates PPR output.
+
+Two implementations with identical semantics:
+  * numpy  (production offline pipeline; chunked, vectorized)
+  * jax    (used by benchmarks + property tests; also demonstrates that
+            the walk itself is expressible as a lax.scan if one wanted
+            accelerator-side construction)
+
+Group-2 handling (nodes without same-type neighbors) lives in
+``group2_neighbors``: KNN over previous-run Group-1 embeddings + top
+-weight U-I edges, per the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_builder import HeteroGraph, padded_adjacency
+
+
+@dataclasses.dataclass
+class PaddedHeteroAdj:
+    """Per-node fixed-width neighbor tables in a unified id space.
+
+    Global ids: users are [0, n_users), items are [n_users, n_users+n_items).
+    ``nbrs`` (n, D) int64 (-1 pad), ``cum`` (n, D) float32 cumulative
+    transition probabilities (type-balanced), row-normalized.
+    """
+    nbrs: np.ndarray
+    cum: np.ndarray
+    n_users: int
+    n_items: int
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_users + self.n_items
+
+
+def build_padded_hetero_adj(g: HeteroGraph, max_deg_per_type: int = 32
+                            ) -> PaddedHeteroAdj:
+    nu, ni = g.n_users, g.n_items
+    D = max_deg_per_type
+    # per-type padded adjacencies
+    uu_n, uu_w = padded_adjacency(g.uu, nu, D)
+    ii_n, ii_w = padded_adjacency(g.ii, ni, D)
+    ui_n, ui_w = padded_adjacency(g.ui, nu, D)
+    # reverse U-I (item -> engaging users), built from the same edges
+    from repro.core.graph_builder import EdgeSet
+    iu = EdgeSet(g.ui.dst, g.ui.src, g.ui.weight)
+    iu_n, iu_w = padded_adjacency(iu, ni, D)
+
+    n = nu + ni
+    nbrs = np.full((n, 2 * D), -1, np.int64)
+    probs = np.zeros((n, 2 * D), np.float64)
+
+    def _fill(rows_off, block, nb, wt, id_off):
+        nbrs[rows_off:rows_off + len(nb), block * D:(block + 1) * D] = \
+            np.where(nb >= 0, nb + id_off, -1)
+        probs[rows_off:rows_off + len(nb), block * D:(block + 1) * D] = wt
+
+    # users: block0 = U-U (user ids), block1 = U-I (item ids)
+    _fill(0, 0, uu_n, uu_w, 0)
+    _fill(0, 1, ui_n, ui_w, nu)
+    # items: block0 = I-I (item ids), block1 = I-U (user ids)
+    _fill(nu, 0, ii_n, ii_w, nu)
+    _fill(nu, 1, iu_n, iu_w, 0)
+
+    # type-balanced normalization: each present type gets equal mass
+    for blk in (0, 1):
+        sl = slice(blk * D, (blk + 1) * D)
+        tot = probs[:, sl].sum(axis=1, keepdims=True)
+        probs[:, sl] = np.where(tot > 0, probs[:, sl] / np.maximum(tot, 1e-12),
+                                0.0)
+    ntypes = ((probs[:, :D].sum(1) > 0).astype(np.float64)
+              + (probs[:, D:].sum(1) > 0).astype(np.float64))
+    ntypes = np.maximum(ntypes, 1.0)
+    probs /= ntypes[:, None]
+    # rows with no out-edges: self-loop semantics handled at walk time
+    cum = np.cumsum(probs, axis=1).astype(np.float32)
+    return PaddedHeteroAdj(nbrs, cum, nu, ni)
+
+
+# ---------------------------------------------------------------------------
+# numpy Monte-Carlo walker
+# ---------------------------------------------------------------------------
+
+def _step(adj: PaddedHeteroAdj, pos: np.ndarray, rng) -> np.ndarray:
+    u = rng.random(len(pos)).astype(np.float32)
+    cum = adj.cum[pos]                             # (m, D2)
+    col = (cum < u[:, None]).sum(axis=1)
+    col = np.minimum(col, adj.nbrs.shape[1] - 1)
+    nxt = adj.nbrs[pos, col]
+    dead = (nxt < 0) | (cum[:, -1] <= 0)           # dangling -> stay
+    return np.where(dead, pos, nxt)
+
+
+def ppr_visit_counts(adj: PaddedHeteroAdj, starts: np.ndarray, *,
+                     n_walks: int = 64, walk_len: int = 5,
+                     restart: float = 0.15, seed: int = 0,
+                     chunk: int = 1 << 18) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (visited, counts): (n_starts, n_walks*walk_len) node ids and
+    per-start sorted visit arrays.  Memory-chunked over starts."""
+    rng = np.random.default_rng(seed)
+    n_start = len(starts)
+    S = n_walks * walk_len
+    visited = np.empty((n_start, S), np.int64)
+    for lo in range(0, n_start, max(1, chunk // n_walks)):
+        hi = min(n_start, lo + max(1, chunk // n_walks))
+        home = np.repeat(starts[lo:hi], n_walks)
+        pos = home.copy()
+        block = np.empty((len(home), walk_len), np.int64)
+        for t in range(walk_len):
+            pos = _step(adj, pos, rng)
+            rst = rng.random(len(pos)) < restart
+            pos = np.where(rst, home, pos)
+            block[:, t] = pos
+        visited[lo:hi] = block.reshape(hi - lo, S)
+    return visited, starts
+
+
+def topk_by_count(visited: np.ndarray, starts: np.ndarray, k: int,
+                  type_boundary: int, n_users: int,
+                  hub_alpha: float = 0.0
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k most-visited user and item neighbors per start node.
+
+    Vectorized run-length counting over row-sorted visit lists.
+    Returns (user_nbrs, item_nbrs): (n, k) global-id arrays, -1 padded.
+    ``type_boundary`` == n_users splits the unified id space.
+
+    ``hub_alpha`` > 0 ranks by *relative* PPR: per-start visit counts
+    divided by each node's global visit mass**alpha (personalized score
+    relative to global PageRank).  On small dense graphs raw counts are
+    dominated by hubs that carry no personalized signal; the same
+    correction is implicit at billion-scale via the popularity-corrected
+    edge weights (Eq. 3), and explicit here.
+    """
+    n, S = visited.shape
+    srt = np.sort(visited, axis=1)
+    newrun = np.ones_like(srt, bool)
+    newrun[:, 1:] = srt[:, 1:] != srt[:, :-1]
+    # run lengths: distance to next run start
+    idx = np.arange(S)[None, :].repeat(n, 0)
+    run_start_idx = np.where(newrun, idx, 0)
+    run_start_idx = np.maximum.accumulate(run_start_idx, axis=1)
+    # count for a run start = next_run_start - this index
+    next_start = np.full((n, S + 1), S, np.int64)
+    rev = newrun[:, ::-1]
+    # compute, for each position, the index of the next run start strictly after
+    nxt = np.full((n, S), S, np.int64)
+    last = np.full(n, S, np.int64)
+    for j in range(S - 1, -1, -1):       # S is small (R*L ~ a few hundred)
+        nxt[:, j] = last
+        last = np.where(newrun[:, j], j, last)
+    counts = np.where(newrun, nxt - idx, 0)
+    # drop self visits
+    counts = np.where(srt == starts[:, None], 0, counts)
+    vals = srt
+
+    scores = counts.astype(np.float64)
+    if hub_alpha > 0.0:
+        n_all = int(visited.max()) + 1
+        glob = np.bincount(visited.reshape(-1), minlength=n_all
+                           ).astype(np.float64)
+        scores = scores / np.maximum(glob[srt], 1.0) ** hub_alpha
+
+    def _top(side_mask):
+        c = np.where(side_mask & newrun, scores, 0.0)
+        kk = min(k, S)
+        top_idx = np.argpartition(-c, kk - 1, axis=1)[:, :kk]
+        rows = np.arange(n)[:, None]
+        top_c = c[rows, top_idx]
+        top_v = np.where(top_c > 0, vals[rows, top_idx], -1)
+        # order by count desc for determinism
+        o = np.argsort(-top_c, axis=1, kind="stable")
+        out = top_v[rows, o]
+        if kk < k:
+            out = np.pad(out, ((0, 0), (0, k - kk)), constant_values=-1)
+        return out
+
+    users = _top(vals < type_boundary)
+    items = _top(vals >= type_boundary)
+    return users, items
+
+
+def precompute_ppr_neighbors(g: HeteroGraph, *, k_imp: int = 50,
+                             n_walks: int = 64, walk_len: int = 5,
+                             restart: float = 0.15, seed: int = 0,
+                             max_deg_per_type: int = 32,
+                             hub_alpha: float = 0.5
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """(user_nbrs, item_nbrs): (n_users+n_items, k_imp) global ids, -1 pad."""
+    adj = build_padded_hetero_adj(g, max_deg_per_type)
+    starts = np.arange(adj.n_nodes, dtype=np.int64)
+    visited, _ = ppr_visit_counts(adj, starts, n_walks=n_walks,
+                                  walk_len=walk_len, restart=restart,
+                                  seed=seed)
+    return topk_by_count(visited, starts, k_imp, g.n_users, g.n_users,
+                         hub_alpha=hub_alpha)
+
+
+# ---------------------------------------------------------------------------
+# Group 2 fallback (paper: KNN over previous Group-1 embeddings)
+# ---------------------------------------------------------------------------
+
+def group2_neighbors(prev_emb: np.ndarray, group1_ids: np.ndarray,
+                     group2_ids: np.ndarray, k: int,
+                     chunk: int = 4096) -> np.ndarray:
+    """Same-type neighbors for Group-2 nodes = KNN (cosine) over Group-1
+    embeddings from the previous training run (refreshed daily)."""
+    if len(group1_ids) == 0 or len(group2_ids) == 0:
+        return np.full((len(group2_ids), k), -1, np.int64)
+    e1 = prev_emb[group1_ids]
+    e1 = e1 / np.maximum(np.linalg.norm(e1, axis=1, keepdims=True), 1e-8)
+    out = np.empty((len(group2_ids), k), np.int64)
+    kk = min(k, len(group1_ids))
+    for lo in range(0, len(group2_ids), chunk):
+        hi = min(len(group2_ids), lo + chunk)
+        q = prev_emb[group2_ids[lo:hi]]
+        q = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-8)
+        sims = q @ e1.T
+        top = np.argpartition(-sims, kk - 1, axis=1)[:, :kk]
+        rows = np.arange(hi - lo)[:, None]
+        o = np.argsort(-sims[rows, top], axis=1, kind="stable")
+        sel = group1_ids[top[rows, o]]
+        if kk < k:
+            sel = np.pad(sel, ((0, 0), (0, k - kk)), constant_values=-1)
+        out[lo:hi] = sel
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JAX walker (benchmark / property-test path; identical semantics)
+# ---------------------------------------------------------------------------
+
+def ppr_walk_jax(nbrs: jnp.ndarray, cum: jnp.ndarray, starts: jnp.ndarray,
+                 *, n_walks: int, walk_len: int, restart: float,
+                 key: jax.Array) -> jnp.ndarray:
+    """Vectorized Monte-Carlo walks; returns (n_starts, n_walks*walk_len)."""
+    home = jnp.repeat(starts, n_walks)
+    d2 = nbrs.shape[1]
+
+    def step(pos, k):
+        ku, kr = jax.random.split(k)
+        u = jax.random.uniform(ku, (pos.shape[0],), jnp.float32)
+        c = cum[pos]
+        col = jnp.minimum(jnp.sum(c < u[:, None], axis=1), d2 - 1)
+        nxt = nbrs[pos, col]
+        dead = (nxt < 0) | (c[:, -1] <= 0)
+        nxt = jnp.where(dead, pos, nxt)
+        rst = jax.random.uniform(kr, (pos.shape[0],)) < restart
+        return jnp.where(rst, home, nxt)
+
+    def body(pos, k):
+        nxt = step(pos, k)
+        return nxt, nxt
+
+    keys = jax.random.split(key, walk_len)
+    _, trace = jax.lax.scan(body, home, keys)
+    return jnp.transpose(trace, (1, 0)).reshape(len(starts),
+                                                n_walks * walk_len)

@@ -1,0 +1,166 @@
+"""Co-learned residual-quantization cluster index (paper §4.4).
+
+Two-layer residual quantization (production: 5000 x 50 = 250k clusters)
+trained jointly with the graph model:
+
+  * hard assignment (Eq. 9) with *biased code selection* (Eq. 13) that
+    favors under-used codes (anti-collapse under continuous training);
+  * reconstruction loss ||h - h'||^2 (Eq. 10) split VQ-VAE style:
+    codebook term + commitment term;
+  * contrastive loss on reconstructed embeddings (straight-through to
+    the encoder; codebook learns via the reconstruction term);
+  * code-balance regularizer  L_reg = p_hat . p_batch  (Eq. 11-12) with
+    soft assignment p(h,C)[j] = softmax_j( zeta1 / (zeta2 + d_j) ) and a
+    rolling 1000-batch empirical code histogram p_hat.
+
+State (the rolling histograms) is device-resident and carried through
+train_step like optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RQConfig
+
+
+@dataclasses.dataclass
+class RQState:
+    """Ring buffers of per-batch code counts, one per codebook layer."""
+    hists: Tuple[jnp.ndarray, ...]     # (hist_len, n_codes_l) float32
+    ptr: jnp.ndarray                   # ()
+    filled: jnp.ndarray                # ()
+
+
+jax.tree_util.register_dataclass(
+    RQState, data_fields=["hists", "ptr", "filled"], meta_fields=[])
+
+
+def init_rq(key, cfg: RQConfig, d: int, dtype=jnp.float32
+            ) -> Tuple[Dict[str, Any], Dict[str, Any], RQState]:
+    keys = jax.random.split(key, len(cfg.codebook_sizes))
+    books, specs = {}, {}
+    for l, n in enumerate(cfg.codebook_sizes):
+        # small init: residuals shrink per layer
+        scale = 0.1 / (l + 1)
+        books[f"layer{l}"] = jax.random.normal(keys[l], (n, d), dtype) * scale
+        specs[f"layer{l}"] = ("codes", "code_dim")
+    hists = tuple(jnp.zeros((cfg.hist_len, n), jnp.float32)
+                  for n in cfg.codebook_sizes)
+    state = RQState(hists, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    return {"codebooks": books}, {"codebooks": specs}, state
+
+
+def _phat(hist: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    tot = jnp.sum(hist, axis=0)
+    return (tot + eps) / (jnp.sum(tot) + eps * hist.shape[1])
+
+
+def _soft_assign(dist: jnp.ndarray, zeta1: float, zeta2: float) -> jnp.ndarray:
+    """Eq. 11: p[j] = softmax_j( zeta1 / (zeta2 + d_j) )."""
+    return jax.nn.softmax(zeta1 / (zeta2 + dist), axis=-1)
+
+
+def rq_forward(params: Dict[str, Any], state: RQState, h: jnp.ndarray,
+               cfg: RQConfig, *, train: bool = True
+               ) -> Dict[str, jnp.ndarray]:
+    """Quantize h (B, d).  Returns codes, recon, losses and new state.
+
+    Differentiability: code *selection* is discrete; the reconstruction
+    h' = sum_l C_l[k_l] is differentiable w.r.t. the codebooks, and the
+    straight-through output ``recon_st`` is differentiable w.r.t. h.
+    """
+    h32 = h.astype(jnp.float32)
+    resid = h32
+    recon = jnp.zeros_like(h32)
+    codes: List[jnp.ndarray] = []
+    reg_terms: List[jnp.ndarray] = []
+    new_counts: List[jnp.ndarray] = []
+    books = params["codebooks"]
+    biased = cfg.biased_selection and train
+
+    for l in range(len(cfg.codebook_sizes)):
+        C = books[f"layer{l}"].astype(jnp.float32)          # (n, d)
+        r = jax.lax.stop_gradient(resid)
+        d2 = (jnp.sum(r * r, axis=1, keepdims=True)
+              - 2.0 * r @ C.T + jnp.sum(C * C, axis=1)[None, :])
+        dist = jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-12)       # (B, n)
+        p_soft = _soft_assign(dist, cfg.zeta1, cfg.zeta2)
+        phat = _phat(state.hists[l])
+        if biased:
+            k = jnp.argmax(p_soft / phat[None, :], axis=1)  # Eq. 13
+        else:
+            k = jnp.argmin(dist, axis=1)                    # Eq. 9
+        codes.append(k)
+        sel = jnp.take(C, k, axis=0)                        # diff w.r.t. C
+        recon = recon + sel
+        resid = resid - sel
+        # regularizer (Eq. 12): batch soft frequency . rolling histogram
+        p_batch = jnp.sum(p_soft, axis=0)
+        p_batch = p_batch / jnp.maximum(jnp.sum(p_batch), 1e-12)
+        reg_terms.append(jnp.dot(jax.lax.stop_gradient(phat), p_batch)
+                         * cfg.codebook_sizes[l])
+        # hard counts for the rolling histogram
+        new_counts.append(
+            jnp.zeros(cfg.codebook_sizes[l], jnp.float32).at[k].add(1.0))
+
+    # losses
+    sg = jax.lax.stop_gradient
+    recon_loss = jnp.mean(jnp.sum((sg(h32) - recon) ** 2, axis=1))
+    commit = jnp.mean(jnp.sum((h32 - sg(recon)) ** 2, axis=1))
+    l_recon = recon_loss + cfg.commit_coef * commit
+    l_reg = (jnp.mean(jnp.stack(reg_terms)) if cfg.regularize
+             else jnp.zeros((), jnp.float32))
+    recon_st = h32 + sg(recon - h32)                        # encoder path
+
+    # state update (ring buffer push)
+    if train:
+        p = state.ptr % cfg.hist_len
+        hists = tuple(hh.at[p].set(c) for hh, c in zip(state.hists,
+                                                       new_counts))
+        new_state = RQState(hists, state.ptr + 1,
+                            jnp.minimum(state.filled + 1, cfg.hist_len))
+    else:
+        new_state = state
+
+    return dict(codes=jnp.stack(codes, axis=1),             # (B, L)
+                recon=recon, recon_st=recon_st.astype(h.dtype),
+                l_recon=l_recon, l_reg=l_reg, state=new_state)
+
+
+def assign_codes(params: Dict[str, Any], h: jnp.ndarray,
+                 cfg: RQConfig) -> jnp.ndarray:
+    """Inference-time hard assignment (Eq. 9).  (B,) flat cluster ids."""
+    resid = h.astype(jnp.float32)
+    flat = jnp.zeros(h.shape[0], jnp.int32)
+    for l in range(len(cfg.codebook_sizes)):
+        C = params["codebooks"][f"layer{l}"].astype(jnp.float32)
+        d2 = (jnp.sum(resid * resid, axis=1, keepdims=True)
+              - 2.0 * resid @ C.T + jnp.sum(C * C, axis=1)[None, :])
+        k = jnp.argmin(d2, axis=1)
+        resid = resid - jnp.take(C, k, axis=0)
+        flat = flat * cfg.codebook_sizes[l] + k.astype(jnp.int32)
+    return flat
+
+
+def codebook_utilization(state: RQState) -> List[float]:
+    """Fraction of codes used at least once in the rolling window —
+    the paper's collapse diagnostic (100% with regularization)."""
+    out = []
+    for hist in state.hists:
+        tot = jnp.sum(hist, axis=0)
+        out.append(float(jnp.mean((tot > 0).astype(jnp.float32))))
+    return out
+
+
+def reconstruct(params: Dict[str, Any], codes: jnp.ndarray,
+                cfg: RQConfig) -> jnp.ndarray:
+    """codes (B, L) -> reconstructed embeddings (Eq. 10)."""
+    out = None
+    for l in range(len(cfg.codebook_sizes)):
+        sel = jnp.take(params["codebooks"][f"layer{l}"], codes[:, l], axis=0)
+        out = sel if out is None else out + sel
+    return out

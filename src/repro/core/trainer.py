@@ -1,0 +1,211 @@
+"""RankGraph-2 training loop (paper §4.3 + §4.4 co-learning).
+
+One jit'd ``train_step`` consumes an edge-centric batch (all edge types),
+computes per-type contrastive losses in both U-I directions, co-learns
+the RQ index (reconstruction + contrastive-on-recon + balance
+regularizer) and combines everything with learned uncertainty weights.
+State (params, optimizer, RQ histograms, negative pool) is one pytree —
+checkpointable and donate-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RankGraph2Config
+from repro.core import losses as L
+from repro.core import model as M
+from repro.core import negatives as N
+from repro.core import rq_index as RQ
+from repro.distributed.sharding import ShardingCtx, NULL_CTX
+from repro.optim import optimizers as opt_lib
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    rq_state: RQ.RQState
+    pool: N.NegPoolState
+    step: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt_state", "rq_state", "pool",
+                             "step"], meta_fields=[])
+
+
+def init_state(key, cfg: RankGraph2Config, *, pool_size: int = 8192,
+               optimizer: Optional[opt_lib.Optimizer] = None
+               ) -> Tuple[TrainState, Any, opt_lib.Optimizer]:
+    k1, k2 = jax.random.split(key)
+    params, specs = M.init_params(k1, cfg)
+    rq_params, rq_specs, rq_state = RQ.init_rq(k2, cfg.rq, cfg.d_embed)
+    params["rq"] = rq_params
+    specs["rq"] = rq_specs
+    params["uncertainty"] = L.init_uncertainty()
+    specs["uncertainty"] = {k: None for k in params["uncertainty"]}
+    optimizer = optimizer or opt_lib.rankgraph2_optimizer()
+    opt_state = optimizer.init(params)
+    pool = N.init_pool(pool_size, cfg.d_embed)
+    state = TrainState(params, opt_state, rq_state, pool,
+                       jnp.zeros((), jnp.int32))
+    return state, specs, optimizer
+
+
+# edge type -> (src node type, dst node type)
+_ET_TYPES = {"uu": (M.USER, M.USER), "ui": (M.USER, M.ITEM),
+             "ii": (M.ITEM, M.ITEM)}
+
+
+def _forward_losses(params, cfg: RankGraph2Config, batch, pool, rq_state,
+                    key, ctx: ShardingCtx, train: bool):
+    """Returns (task_losses, aux) where aux carries pool/rq updates."""
+    tasks: Dict[str, jnp.ndarray] = {}
+    user_embs, item_embs = [], []
+    endpoint_prims, endpoint_splits = [], []
+
+    per_type = {}
+    for et, sub in batch.items():
+        st, dt = _ET_TYPES[et]
+        src_heads, src_prim = M.embed_side(params, cfg, sub["src"], st, ctx)
+        dst_heads, dst_prim = M.embed_side(params, cfg, sub["dst"], dt, ctx)
+        per_type[et] = (src_heads, src_prim, dst_heads, dst_prim)
+        (user_embs if st == M.USER else item_embs).append(src_prim)
+        (user_embs if dt == M.USER else item_embs).append(dst_prim)
+        endpoint_prims += [src_prim, dst_prim]
+        endpoint_splits += [(et, "src"), (et, "dst")]
+
+    dp_size = ctx.axis_size("batch")
+
+    def _neg(k, prim, heads, node_type):
+        buf = pool.user if node_type == M.USER else pool.item
+        fill = pool.user_fill if node_type == M.USER else pool.item_fill
+        blk = prim.shape[0] // dp_size if dp_size > 1 and \
+            prim.shape[0] % dp_size == 0 else 0
+        return N.sample_negatives(k, prim, heads, buf, fill,
+                                  cfg.n_negatives, cfg.n_pool_neg,
+                                  shard_block=blk)
+
+    keys = jax.random.split(key, 8)
+    ki = 0
+    loss_dirs = []   # (task_suffix, src_prim, dst_prim, dst_heads, dst_type)
+    for et, (sh, sp, dh, dp) in per_type.items():
+        st, dt = _ET_TYPES[et]
+        loss_dirs.append((et, sp, dp, dh, dt))
+        if et == "ui":  # bidirectional U-I (paper computes L_UI and L_IU)
+            loss_dirs.append(("iu", dp, sp, sh, st))
+
+    for suffix, sp, dp, dh, dt in loss_dirs:
+        negs = _neg(keys[ki], dp, dh, dt)
+        ki += 1
+        marg, info = L.pair_losses(sp, dp, negs, margin=cfg.margin,
+                                   tau=cfg.tau)
+        tasks[f"margin_{suffix}"] = jnp.mean(marg)
+        tasks[f"infonce_{suffix}"] = jnp.mean(info)
+
+    # --- RQ co-learning on all endpoint embeddings -------------------------
+    all_prim = jnp.concatenate(endpoint_prims, axis=0)
+    rq_out = RQ.rq_forward(params["rq"], rq_state, all_prim, cfg.rq,
+                           train=train)
+    tasks["rq_recon"] = rq_out["l_recon"]
+    tasks["rq_reg"] = rq_out["l_reg"]
+    # contrastive on reconstructed embeddings (L'): recompute the positive
+    # pair similarity with straight-through recon endpoints.
+    recon_st = rq_out["recon_st"]
+    sizes = [p.shape[0] for p in endpoint_prims]
+    offs = np.cumsum([0] + sizes)
+    recon_parts = {}
+    for (et, side), lo, hi in zip(endpoint_splits, offs[:-1], offs[1:]):
+        recon_parts[(et, side)] = recon_st[lo:hi]
+    lprime = []
+    for et, (sh, sp, dh, dp) in per_type.items():
+        st, dt = _ET_TYPES[et]
+        rs = recon_parts[(et, "src")]
+        rd = recon_parts[(et, "dst")]
+        negs = _neg(keys[ki], dp, dh, dt)
+        ki += 1
+        marg, info = L.pair_losses(rs, rd, negs, margin=cfg.margin,
+                                   tau=cfg.tau)
+        lprime.append(jnp.mean(0.5 * marg + 0.5 * info))
+    tasks["rq_contrastive"] = jnp.mean(jnp.stack(lprime))
+
+    aux = dict(rq_state=rq_out["state"],
+               user_emb=jnp.concatenate(user_embs, axis=0)
+               if user_embs else None,
+               item_emb=jnp.concatenate(item_embs, axis=0)
+               if item_embs else None,
+               codes=rq_out["codes"])
+    return tasks, aux
+
+
+def make_train_step(cfg: RankGraph2Config, optimizer: opt_lib.Optimizer,
+                    ctx: ShardingCtx = NULL_CTX, *,
+                    grad_clip: float = 1.0):
+    """Builds the (jit-able) train_step(state, batch, key)."""
+
+    def train_step(state: TrainState, batch, key):
+        def loss_fn(params):
+            tasks, aux = _forward_losses(params, cfg, batch, state.pool,
+                                         state.rq_state, key, ctx, True)
+            total = L.uncertainty_combine(tasks, params["uncertainty"])
+            return total, (tasks, aux)
+
+        (total, (tasks, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = opt_lib.apply_updates(state.params, updates)
+        pool = N.update_pool(state.pool, aux["user_emb"], aux["item_emb"])
+        new_state = TrainState(params, opt_state, aux["rq_state"], pool,
+                               state.step + 1)
+        metrics = {k: v for k, v in tasks.items()}
+        metrics["total"] = total
+        metrics["grad_norm"] = gnorm
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: RankGraph2Config, ctx: ShardingCtx = NULL_CTX):
+    def eval_step(state: TrainState, batch, key):
+        tasks, _ = _forward_losses(state.params, cfg, batch, state.pool,
+                                   state.rq_state, key, ctx, False)
+        return tasks
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# embedding generation (paper: embeddings regenerated after each rebuild)
+# ---------------------------------------------------------------------------
+
+def embed_all(params, cfg: RankGraph2Config, dataset, *, node_type: int,
+              ids: np.ndarray, batch: int = 4096,
+              ctx: ShardingCtx = NULL_CTX) -> np.ndarray:
+    """Generate primary embeddings for nodes (global ids)."""
+    fn = jax.jit(functools.partial(_embed_batch, cfg=cfg,
+                                   node_type=node_type, ctx=ctx))
+    out = []
+    for lo in range(0, len(ids), batch):
+        chunk = ids[lo:lo + batch]
+        pad = 0
+        if len(chunk) < batch and lo > 0:
+            pad = batch - len(chunk)
+            chunk = np.r_[chunk, np.repeat(chunk[-1:], pad)]
+        side = dataset.node_inference_batch(chunk)
+        emb = np.asarray(fn(params, {k: jnp.asarray(v)
+                                     for k, v in side.items()}))
+        out.append(emb[: len(emb) - pad] if pad else emb)
+    return np.concatenate(out, axis=0)
+
+
+def _embed_batch(params, side, *, cfg, node_type, ctx):
+    _, prim = M.embed_side(params, cfg, side, node_type, ctx)
+    return prim

@@ -1,0 +1,108 @@
+"""Gradient compression for the cross-pod data-parallel axis.
+
+At 2+ pods the DP all-reduce crosses the slow inter-pod links (~50 GB/s
+per link vs 819 GB/s HBM); compressing gradients before the cross-pod
+reduction shrinks the collective term of the roofline.  Two schemes, both
+with error feedback (residual accumulation) so convergence is preserved:
+
+  * int8: per-tensor scale quantization (8x over fp32 / 4x over bf16);
+  * powersgd: rank-r factorization for matrices (Vogels et al. 2019),
+    compression ratio ~ (n*m) / (r*(n+m)).
+
+These are exposed as optimizer *wrappers*: grads are compressed,
+(all-reduced in deployment — GSPMD inserts the reduction), decompressed,
+and the quantization error is fed back into the next step.  The
+compress->decompress round-trip runs under jit, so the dry-run shows the
+reduced collective bytes when enabled on the pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+
+class CompressionState(NamedTuple):
+    error: Any        # error-feedback residual, same structure as grads
+    inner: Any        # wrapped optimizer state
+    rng: jax.Array    # for powersgd init
+
+
+def _quant_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_roundtrip(x: jnp.ndarray) -> jnp.ndarray:
+    q, s = _quant_int8(x)
+    return _dequant_int8(q, s)
+
+
+def powersgd_roundtrip(x: jnp.ndarray, rank: int,
+                       key: jax.Array) -> jnp.ndarray:
+    """One power-iteration low-rank approximation (rank r)."""
+    if x.ndim < 2 or min(x.shape[-2:], default=0) <= rank:
+        return int8_roundtrip(x)
+    shape = x.shape
+    m = x.reshape(-1, shape[-1])
+    q = jax.random.normal(key, (shape[-1], rank), jnp.float32)
+    p = m @ q                       # (n, r)   <- all-reduced in PowerSGD
+    p, _ = jnp.linalg.qr(p)
+    q2 = m.T @ p                    # (m, r)   <- all-reduced
+    return (p @ q2.T).reshape(shape)
+
+
+def compressed(inner: Optimizer, *, scheme: str = "int8",
+               rank: int = 4, seed: int = 0) -> Optimizer:
+    """Wrap an optimizer with compress->decompress + error feedback."""
+
+    def init(params):
+        err = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return CompressionState(err, inner.init(params),
+                                jax.random.key(seed))
+
+    def update(grads, state: CompressionState, params):
+        key, sub = jax.random.split(state.rng)
+        # error feedback: compress (grad + residual)
+        g_in = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                            grads, state.error)
+        if scheme == "int8":
+            g_hat = jax.tree.map(int8_roundtrip, g_in)
+        elif scheme == "powersgd":
+            leaves, treedef = jax.tree.flatten(g_in)
+            keys = jax.random.split(sub, len(leaves))
+            g_hat = treedef.unflatten(
+                [powersgd_roundtrip(l, rank, k)
+                 for l, k in zip(leaves, keys)])
+        else:
+            raise ValueError(f"unknown scheme {scheme!r}")
+        new_err = jax.tree.map(lambda a, b: a - b, g_in, g_hat)
+        upd, inner_state = inner.update(g_hat, state.inner, params)
+        return upd, CompressionState(new_err, inner_state, key)
+
+    return Optimizer(init, update)
+
+
+def compression_ratio(params, scheme: str = "int8", rank: int = 4) -> float:
+    """Bytes on the wire with / without compression (for the roofline)."""
+    full = comp = 0.0
+    for p in jax.tree.leaves(params):
+        n = float(p.size)
+        full += n * 4
+        if scheme == "int8":
+            comp += n * 1 + 4
+        else:
+            if p.ndim >= 2:
+                rows = n / p.shape[-1]
+                comp += 4 * rank * (rows + p.shape[-1])
+            else:
+                comp += n * 1 + 4
+    return comp / max(full, 1.0)

@@ -1,0 +1,152 @@
+"""Logical-axis sharding system (MaxText-style, self-contained).
+
+Every parameter / activation is annotated with *logical* axis names
+(strings).  A rules table maps logical names -> mesh axes.  This keeps
+model code mesh-agnostic: the dry-run, the single-pod mesh and the
+multi-pod mesh all reuse the same annotations with different rules, and
+perf hillclimbing = editing the rules table, not the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A logical spec is a tuple of logical axis names (or None for unsharded
+# dims), e.g. ("batch", "seq", "embed").
+LogicalSpec = Sequence[Optional[str]]
+
+# Default rules for the production meshes.  ``pod`` is folded into the
+# data-parallel dimension when present (see make_rules).
+DEFAULT_RULES: dict[str, Union[None, str, tuple[str, ...]]] = {
+    # data-parallel axes
+    "batch": ("pod", "data"),
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    # sequence / context axes (unsharded by default; SP variants remap)
+    "seq": None,
+    "kv_seq": None,
+    # model-parallel axes
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "table_rows": "model",       # embedding-table row sharding (recsys)
+    "table_dim": None,
+    "candidates": ("pod", "data"),  # retrieval candidate sharding
+    "channels": "model",          # GNN feature channels
+    "irreps": None,
+    "codes": None,                # RQ codebooks are small -> replicated
+    "code_dim": None,
+    "stack": None,                # scan-over-layers leading axis
+}
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Mapping[str, Any]] = None
+               ) -> dict[str, Any]:
+    """Build a rules table valid for ``mesh`` (drops absent mesh axes)."""
+    axes = set(mesh.axis_names)
+    rules: dict[str, Any] = {}
+    for name, target in {**DEFAULT_RULES, **(overrides or {})}.items():
+        if target is None:
+            rules[name] = None
+        elif isinstance(target, str):
+            rules[name] = target if target in axes else None
+        else:  # tuple of axes -> keep the ones this mesh has
+            kept = tuple(a for a in target if a in axes)
+            rules[name] = kept if kept else None
+    return rules
+
+
+def logical_to_spec(logical: Optional[LogicalSpec],
+                    rules: Mapping[str, Any]) -> P:
+    """Map a tuple of logical names to a PartitionSpec under ``rules``."""
+    if logical is None:
+        return P()
+    out = []
+    used: set[str] = set()
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        target = rules.get(name, None)
+        if target is None:
+            out.append(None)
+        elif isinstance(target, str):
+            if target in used:   # a mesh axis may appear only once
+                out.append(None)
+            else:
+                used.add(target)
+                out.append(target)
+        else:
+            fresh = tuple(a for a in target if a not in used)
+            if fresh:
+                used.update(fresh)
+                out.append(fresh if len(fresh) > 1 else fresh[0])
+            else:
+                out.append(None)
+    return P(*out)
+
+
+def tree_logical_to_spec(tree: Any, rules: Mapping[str, Any]) -> Any:
+    """Convert a pytree of logical specs (tuples) into PartitionSpecs."""
+    return jax.tree.map(
+        lambda l: logical_to_spec(l, rules),
+        tree,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)),
+    )
+
+
+def tree_shardings(tree: Any, mesh: Mesh, rules: Mapping[str, Any]) -> Any:
+    specs = tree_logical_to_spec(tree, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x: jax.Array, logical: LogicalSpec,
+              rules: Optional[Mapping[str, Any]]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without rules)."""
+    if rules is None:
+        return x
+    spec = logical_to_spec(logical, rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # outside a mesh context (e.g. plain CPU tests)
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Carried through model apply functions; rules=None disables all
+    constraints (single-device tests).  ``mesh`` enables manual
+    shard_map regions (e.g. the expert-parallel MoE dispatch)."""
+    rules: Optional[Mapping[str, Any]] = None
+    mesh: Optional[Mesh] = None
+
+    def __call__(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        return constrain(x, logical, self.rules)
+
+    def axis_size(self, logical: str) -> int:
+        """Product of mesh-axis sizes a logical name maps to (1 if
+        unmapped or no mesh)."""
+        if self.mesh is None or self.rules is None:
+            return 1
+        target = self.rules.get(logical)
+        if target is None:
+            return 1
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        out = 1
+        for a in axes:
+            out *= sizes.get(a, 1)
+        return out
+
+
+NULL_CTX = ShardingCtx(rules=None)

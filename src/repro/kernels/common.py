@@ -1,0 +1,25 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def should_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode off-TPU (CPU container);
+    on real TPU they compile to Mosaic."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0.0):
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value), n
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

@@ -1,0 +1,67 @@
+"""Public EmbeddingBag op with kernel/reference dispatch + custom VJP.
+
+The backward of an embedding bag is a scatter-add into the table
+(jax.ops.segment_sum) — defined explicitly so training works with either
+forward implementation (the Pallas kernel has no autodiff rule).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import (
+    embedding_bag as embedding_bag_kernel)
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def embedding_bag(table, ids, weights=None, mode: str = "sum",
+                  use_kernel: bool = False):
+    """table (V, D), ids (B, L) int (-1 pad), weights (B, L) -> (B, D)."""
+    if use_kernel:
+        return embedding_bag_kernel(table, ids, weights, mode)
+    return embedding_bag_ref(table, ids, weights, mode)
+
+
+def _fwd(table, ids, weights, mode, use_kernel):
+    out = embedding_bag(table, ids, weights, mode, use_kernel)
+    return out, (table, ids, weights)
+
+
+def _bwd(mode, use_kernel, res, g):
+    table, ids, weights = res
+    V = table.shape[0]
+    B, L = ids.shape
+    mask = ids >= 0
+    w = mask.astype(jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+        w_eff = w / cnt
+    else:
+        w_eff = w
+    g32 = g.astype(jnp.float32)
+    # d table: scatter-add of per-(b,l) weighted upstream grads
+    contrib = (g32[:, None, :] * w_eff[:, :, None]).reshape(B * L, -1)
+    flat = jnp.where(mask, ids, V).reshape(-1)       # pads -> dropped row V
+    dtab = jax.ops.segment_sum(contrib, flat, num_segments=V + 1)[:-1]
+    dw = None
+    if weights is not None:
+        rows = jnp.take(table, jnp.where(mask, ids, 0), axis=0
+                        ).astype(jnp.float32)        # (B, L, D)
+        if mode == "mean":
+            # d/dw of (sum w_l r_l / sum w_l): (r_l - out) / cnt
+            out = jnp.sum(rows * w_eff[..., None], axis=1)
+            dw = jnp.einsum("bd,bld->bl", g32,
+                            (rows - out[:, None, :]) / cnt[..., None])
+        else:
+            dw = jnp.einsum("bd,bld->bl", g32, rows)
+        dw = (dw * mask).astype(weights.dtype)
+    return dtab.astype(table.dtype), None, dw
+
+
+embedding_bag.defvjp(_fwd, _bwd)

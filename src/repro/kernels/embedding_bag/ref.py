@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for EmbeddingBag (gather + weighted segment reduce).
+
+JAX has no native EmbeddingBag; the reference is the canonical
+jnp.take + weighted-sum formulation (ids < 0 are padding).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      weights: Optional[jnp.ndarray] = None,
+                      mode: str = "sum") -> jnp.ndarray:
+    """table (V, D), ids (B, L) int (-1 = pad), weights (B, L) optional.
+
+    Returns (B, D): per-bag weighted sum (or mean over valid entries).
+    """
+    mask = (ids >= 0)
+    safe = jnp.where(mask, ids, 0)
+    rows = jnp.take(table, safe, axis=0)              # (B, L, D)
+    w = mask.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    out = jnp.sum(rows * w[..., None], axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1e-9)
+        out = out / cnt
+    return out

@@ -1,0 +1,142 @@
+"""Pallas TPU flash attention (forward) — IO-aware online softmax.
+
+Canonical 3-D grid (batch*head, q_block, kv_block): Q/K/V stream through
+VMEM one (block_q x d) / (block_k x d) tile at a time; running max /
+normalizer / accumulator live in VMEM scratch and never touch HBM; the
+output tile is written once on the last kv step.  Causal blocks that are
+fully masked are skipped via a whole-block predicate (the elementwise
+mask still applies within diagonal blocks).  Ragged (non-block-aligned)
+sequence lengths are handled with an explicit kv-length mask, so both
+training (S == T) and decode (S == 1, T = cache length) shapes work.
+
+Block sizes are MXU-aligned (multiples of 128 on the matmul dims).  On
+this CPU container the kernel runs in interpret mode; on TPU it compiles
+to Mosaic as-is.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv, should_interpret
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            n_kv: int, valid_q: int, valid_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    offset = valid_k - valid_q          # decode: q row i is key position
+                                        # offset + i
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip blocks that are entirely beyond the causal frontier
+    q_last = (qi + 1) * block_q - 1 + offset
+    live = (not causal) or (ki * block_k <= q_last)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+            + qi * block_q + offset
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) \
+            + ki * block_k
+        mask = cols < valid_k
+        if causal:
+            mask = mask & (rows >= cols)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "valid_q",
+                                             "valid_k", "interpret"))
+def _run(q, k, v, *, causal, scale, block_q, block_k, valid_q, valid_k,
+         interpret):
+    BH, S, D = q.shape
+    T = k.shape[1]
+    n_q, n_kv = cdiv(S, block_q), cdiv(T, block_k)
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             block_q=block_q, block_k=block_k, n_kv=n_kv,
+                             valid_q=valid_q, valid_k=valid_k)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q (B, Hq, S, D); k/v (B, Hkv, T, D), GQA via head repeat.
+
+    Returns (B, Hq, S, D).  Inputs are padded to block multiples; padded
+    key columns are masked exactly inside the kernel.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, max(S, 8))
+    bk = min(block_k, max(T, 8))
+    pad_s = (-S) % bq
+    pad_t = (-T) % bk
+    qf = q.reshape(B * Hq, S, D)
+    kf = k.reshape(B * Hq, T, D)
+    vf = v.reshape(B * Hq, T, D)
+    if pad_s:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_s), (0, 0)))
+    if pad_t:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_t), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_t), (0, 0)))
+    out = _run(qf, kf, vf, causal=causal, scale=scale, block_q=bq,
+               block_k=bk, valid_q=S, valid_k=T, interpret=bool(interpret))
+    return out[:, :S].reshape(B, Hq, S, D)

@@ -1,0 +1,17 @@
+"""Public attention op with kernel/reference dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True,
+              scale: Optional[float] = None,
+              use_kernel: bool = False, **kw) -> jnp.ndarray:
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, scale=scale, **kw)
+    return attention_ref(q, k, v, causal=causal, scale=scale)

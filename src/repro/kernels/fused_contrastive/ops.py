@@ -1,0 +1,17 @@
+"""Public fused-contrastive op with kernel/reference dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.fused_contrastive.fused_contrastive import (
+    fused_contrastive)
+from repro.kernels.fused_contrastive.ref import contrastive_ref
+
+
+def contrastive(src, dst, negs, *, margin: float = 0.1, tau: float = 0.06,
+                use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if use_kernel:
+        return fused_contrastive(src, dst, negs, margin=margin, tau=tau)
+    return contrastive_ref(src, dst, negs, margin=margin, tau=tau)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: fused margin + InfoNCE contrastive losses (Eq. 5-6)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def contrastive_ref(src: jnp.ndarray, dst: jnp.ndarray, negs: jnp.ndarray,
+                    *, margin: float = 0.1, tau: float = 0.06
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """src/dst (B, d) l2-normalized, negs (B, N, d) l2-normalized.
+
+    Returns (margin_loss (B,), infonce_loss (B,)).
+    """
+    s_pos = jnp.sum(src * dst, axis=-1).astype(jnp.float32)
+    s_neg = jnp.einsum("bd,bnd->bn", src, negs).astype(jnp.float32)
+    marg = jnp.sum(jax.nn.relu(s_neg - s_pos[:, None] + margin), axis=-1)
+    logits = jnp.concatenate([s_pos[:, None], s_neg], axis=1) / tau
+    infonce = -jax.nn.log_softmax(logits, axis=-1)[:, 0]
+    return marg, infonce

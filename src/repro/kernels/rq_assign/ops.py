@@ -1,0 +1,25 @@
+"""Public op: RQ assignment with kernel/reference dispatch."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.rq_assign.ref import rq_assign_ref
+from repro.kernels.rq_assign.rq_assign import rq_assign as rq_assign_kernel
+
+
+def rq_assign(x: jnp.ndarray, codebooks: Sequence[jnp.ndarray], *,
+              use_kernel: bool = True, block_b: int = 256
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if use_kernel:
+        return rq_assign_kernel(x, codebooks, block_b=block_b)
+    return rq_assign_ref(x, codebooks)
+
+
+def flat_codes(codes: jnp.ndarray, sizes: Sequence[int]) -> jnp.ndarray:
+    """(B, L) layer codes -> flat cluster id."""
+    flat = jnp.zeros(codes.shape[0], jnp.int32)
+    for l, n in enumerate(sizes):
+        flat = flat * n + codes[:, l]
+    return flat

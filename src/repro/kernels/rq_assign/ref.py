@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for residual-quantization assignment (Eq. 9/10)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def rq_assign_ref(x: jnp.ndarray, codebooks: Sequence[jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, d); codebooks list of (n_l, d).
+
+    Returns (codes (B, L) int32, recon (B, d) float32).
+    """
+    resid = x.astype(jnp.float32)
+    recon = jnp.zeros_like(resid)
+    codes = []
+    for C in codebooks:
+        C = C.astype(jnp.float32)
+        d2 = (jnp.sum(resid * resid, axis=1, keepdims=True)
+              - 2.0 * resid @ C.T + jnp.sum(C * C, axis=1)[None, :])
+        k = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        sel = jnp.take(C, k, axis=0)
+        resid = resid - sel
+        recon = recon + sel
+        codes.append(k)
+    return jnp.stack(codes, axis=1), recon

@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing never touches jax
+device state.  The dry-run sets XLA_FLAGS host-device-count=512 *before*
+importing jax; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: Optional[int] = None) -> Mesh:
+    """Best-effort mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    model = model or 1
+    data = max(1, n // model)
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    return int(np.prod(mesh.devices.shape))

@@ -1,0 +1,665 @@
+"""Per-(arch x shape) step builders for the dry-run and roofline.
+
+For every cell this module produces:
+  * ``fn``            — the exact function a production job would jit
+                        (full train step incl. optimizer update, or the
+                        serving step);
+  * ``args``          — ShapeDtypeStruct stand-ins for every input
+                        (params, optimizer state, batch) — *no device
+                        allocation*;
+  * ``in_shardings``  — NamedShardings resolved from the model's logical
+                        specs under the mesh's rules;
+  * ``model_flops``   — the useful-FLOPs estimate (6*N*D train / 2*N*D
+                        inference for LMs; analytic counts elsewhere)
+                        used by the roofline's waste ratio.
+
+Optimizer state shardings are derived structurally: a state leaf with
+the same (shape, dtype) as a parameter inherits that parameter's
+sharding (mu/nu/accumulators); everything else (scalars, factored
+stats) replicates — a baseline the perf pass can iterate on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec, get_arch
+from repro.distributed import sharding as shd
+from repro.optim import optimizers as opt_lib
+
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+i32 = jnp.int32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    model_flops: float
+    notes: str = ""
+    # cost probe: rebuild this cell with n_layers=L, all loops unrolled.
+    # XLA's cost analysis counts while-loop bodies ONCE, so scanned models
+    # are measured via two unrolled probe lowerings (L=1,2) and linear
+    # extrapolation F(L) = F1 + (L-1)(F2-F1) — exact for layer-linear
+    # architectures.  None => the cell has no loops (counts are exact).
+    probe: Optional[Callable[[int], "Cell"]] = None
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _safe(mesh: Mesh, spec: P, sds) -> NamedSharding:
+    """pjit *arguments* need sharded dims divisible by the axis size;
+    drop (replicate) any axis that does not divide its dim."""
+    sizes = _axis_sizes(mesh)
+    shape = tuple(getattr(sds, "shape", ()) or ())
+    new = []
+    for i, s in enumerate(spec):
+        if s is None or i >= len(shape):
+            new.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        n = int(np.prod([sizes[a] for a in axes]))
+        new.append(s if shape[i] % n == 0 else None)
+    return NamedSharding(mesh, P(*new))
+
+
+def _param_shardings(specs, rules, mesh, shapes=None):
+    pspecs = shd.tree_logical_to_spec(specs, rules)
+    if shapes is None:
+        return jax.tree.map(lambda s: _named(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(lambda s, sds: _safe(mesh, s, sds), pspecs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _state_shardings(state_shapes, params_shapes, params_shardings, mesh):
+    """Shape-matching inheritance of param shardings.
+
+    Full-shape matches (mu/nu/accumulators) inherit the param sharding.
+    Adafactor's factored stats match a param's shape minus its last
+    (vr) or second-to-last (vc) dim and inherit the corresponding spec
+    prefix; anything else replicates."""
+    rep = _named(mesh, P())
+    table: Dict[Tuple, Any] = {}
+    row_table: Dict[Tuple, Any] = {}
+    col_table: Dict[Tuple, Any] = {}
+    for p, s in zip(jax.tree.leaves(params_shapes),
+                    jax.tree.leaves(params_shardings)):
+        spec = tuple(s.spec) + (None,) * (len(p.shape) - len(s.spec))
+        table.setdefault(tuple(p.shape), s)
+        if len(p.shape) >= 2:
+            row_table.setdefault(tuple(p.shape[:-1]),
+                                 NamedSharding(mesh, P(*spec[:-1])))
+            col_table.setdefault(tuple(p.shape[:-2] + p.shape[-1:]),
+                                 NamedSharding(
+                                     mesh, P(*(spec[:-2] + spec[-1:]))))
+
+    def pick(leaf):
+        shp = tuple(leaf.shape)
+        for t in (table, row_table, col_table):
+            if shp in t:
+                return t[shp]
+        return rep
+
+    return jax.tree.map(pick, state_shapes)
+
+
+def _batch_spec(rules) -> P:
+    return shd.logical_to_spec(("batch",), rules)
+
+
+# REPRO_BASELINE=1 reverts the post-baseline perf iterations (sharding
+# rules below + the shard_map embedding lookup) so the EXPERIMENTS.md
+# before/after numbers stay reproducible.
+BASELINE = os.environ.get("REPRO_BASELINE") == "1"
+
+
+def _rules_for(arch_id: str, shape: ShapeSpec, mesh: Mesh,
+               overrides: Optional[dict] = None) -> dict:
+    ov = dict(overrides or {})
+    if arch_id == "grok-1-314b":
+        from repro.configs.grok_1_314b import RULES_OVERRIDE
+        ov.update(RULES_OVERRIDE)
+    fam = get_arch(arch_id).family
+    if not BASELINE:
+        if fam == "gnn":
+            # perf iteration (EXPERIMENTS.md §Perf/equiformer): replicate
+            # the node dim, shard feature channels — per-edge gathers
+            # become device-local; aggregation is one psum per layer.
+            ov.setdefault("nodes", None)
+        # (rankgraph2 DP-only rules were tried and REFUTED — the
+        # dominant all-gather is cross-shard in-batch negative indexing,
+        # not encoder TP; see EXPERIMENTS.md §Perf. Fixed instead by
+        # shard-local negative sampling in core/negatives.py.)
+    if shape.step == "train" and get_arch(arch_id).family == "lm":
+        # FSDP: weights shard over the data axis too (gathered per use);
+        # mandatory for the MoE giants, harmless for the small LMs.
+        ov.setdefault("embed", "data")
+        # sequence parallelism: residual-stream activations (the per-layer
+        # remat saves) shard over the model axis as well.
+        ov.setdefault("seq", "model")
+    if shape.step == "decode":
+        # decode: shard the KV cache over sequence; heads replicate
+        ov.setdefault("kv_seq", ("model",) if shape.dims.get(
+            "global_batch", 2) > 1 else ("data", "model"))
+        ov.setdefault("heads", None)
+        ov.setdefault("kv_heads", None)
+        if shape.dims.get("global_batch", 2) == 1:
+            ov.setdefault("batch", None)
+    return shd.make_rules(mesh, ov)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+             cfg=None) -> Cell:
+    from repro.models.lm import model as LM
+    import dataclasses as dc
+    is_probe = cfg is not None
+    cfg = cfg or arch.config
+
+    def probe(L: int) -> Cell:
+        pcfg = dc.replace(arch.config, n_layers=L, scan_layers=False,
+                          unroll_chunks=True)
+        return _lm_cell(arch, shape, mesh, cfg=pcfg)
+
+    probe = None if is_probe else probe
+    rules = _rules_for(arch.arch_id, shape, mesh)
+    ctx = shd.ShardingCtx(rules, mesh)
+    B = shape.dims["global_batch"]
+    S = shape.dims["seq_len"]
+
+    params_shapes = jax.eval_shape(
+        lambda: LM.init_params(jax.random.key(0), cfg)[0])
+    specs = _lm_specs(cfg)   # static python data; built from a 1L clone
+    pshard = _param_shardings(specs, rules, mesh, params_shapes)
+    bspec = _batch_spec(rules)
+
+    n = cfg.n_params()
+    if shape.step == "train":
+        optimizer = opt_lib.make_optimizer(cfg.optimizer)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        oshard = _state_shardings(opt_shapes, params_shapes, pshard, mesh)
+        tokens = _sds((B, S), i32)
+
+        # (a tree-wide cast-before-gather of fp32 params to bf16 was
+        # tried and REFUTED: XLA's convert motion already gathers most
+        # weights post-cast — llama unchanged, olmo -17% collective but
+        # +20% HBM from double-precision residency.  See §Perf.)
+        def step(params, opt_state, tokens):
+            loss, grads = jax.value_and_grad(
+                lambda p: LM.lm_loss(p, cfg, tokens, ctx=ctx))(params)
+            grads, gnorm = opt_lib.clip_by_global_norm(grads, 1.0)
+            upd, opt_state = optimizer.update(grads, opt_state, params)
+            params = opt_lib.apply_updates(params, upd)
+            return loss, params, opt_state
+
+        flops = 6.0 * cfg.n_active_params() * B * S
+        return Cell(arch.arch_id, shape.name, step,
+                    (params_shapes, opt_shapes, tokens),
+                    (pshard, oshard, _safe(mesh, bspec, tokens)), flops,
+                    probe=probe)
+
+    if shape.step == "prefill":
+        tokens = _sds((B, S), i32)
+
+        def step(params, tokens):
+            return LM.prefill(params, cfg, tokens, ctx=ctx)
+
+        flops = 2.0 * cfg.n_active_params() * B * S
+        return Cell(arch.arch_id, shape.name, step,
+                    (params_shapes, tokens),
+                    (pshard, _safe(mesh, bspec, tokens)), flops,
+                    probe=probe)
+
+    # decode
+    hd = cfg.resolved_head_dim
+    cache_sds = {
+        "k": _sds((cfg.n_layers, B, S, cfg.n_kv_heads, hd), bf16),
+        "v": _sds((cfg.n_layers, B, S, cfg.n_kv_heads, hd), bf16)}
+    cache_spec = shd.logical_to_spec(
+        (None, "batch", "kv_seq", "kv_heads", None), rules)
+    cshard = jax.tree.map(lambda c: _safe(mesh, cache_spec, c), cache_sds)
+    tokens = _sds((B, 1), i32)
+
+    def step(params, caches, tokens):
+        return LM.decode_step(params, cfg, tokens, caches, S - 1, ctx=ctx)
+
+    flops = 2.0 * cfg.n_active_params() * B * 1
+    return Cell(arch.arch_id, shape.name, step,
+                (params_shapes, cache_sds, tokens),
+                (pshard, cshard, _safe(mesh, bspec, tokens)), flops,
+                notes="decode: 1 new token against a filled KV cache",
+                probe=probe)
+
+
+def _lm_specs(cfg):
+    """Spec tree from a tiny clone (specs are plain python data).
+    Scanned params: layer-count-agnostic stacked tree.  Unrolled params
+    (probe mode): a list with one entry per layer — keep the count."""
+    from repro.models.lm import model as LM
+    import dataclasses as dc
+    n_layers = 1 if cfg.scan_layers else cfg.n_layers
+    tiny = dc.replace(cfg, n_layers=n_layers, vocab_size=8, d_model=8,
+                      n_heads=2,
+                      n_kv_heads=max(1, min(2, cfg.n_kv_heads)), head_dim=4,
+                      d_ff=8, moe_d_ff=8 if cfg.n_experts else None,
+                      n_experts=min(cfg.n_experts, 2))
+    _, specs = LM.init_params(jax.random.key(0), tiny)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    from repro.models.recsys import models as R
+    cfg = arch.config
+    rules = _rules_for(arch.arch_id, shape, mesh)
+    ctx = shd.ShardingCtx(rules, mesh)
+    B = shape.dims["batch"]
+    kind = cfg.kind
+
+    inits = {"dlrm": R.dlrm_init, "wide_deep": R.wide_deep_init,
+             "sasrec": R.sasrec_init, "bst": R.bst_init}[kind]
+    params_shapes = jax.eval_shape(
+        lambda: inits(jax.random.key(0), cfg)[0])
+    specs = inits(jax.random.key(0), dataclasses_replace_small(cfg))[1]
+    pshard = _param_shardings(specs, rules, mesh, params_shapes)
+    bspec = _batch_spec(rules)
+
+    def batch_sds():
+        if kind == "dlrm":
+            return {"dense": _sds((B, cfg.n_dense), f32),
+                    "sparse": _sds((B, cfg.n_sparse), i32),
+                    "labels": _sds((B,), f32)}
+        if kind == "wide_deep":
+            return {"sparse": _sds((B, cfg.n_sparse), i32),
+                    "labels": _sds((B,), f32)}
+        if kind == "sasrec":
+            return {"seq": _sds((B, cfg.seq_len), i32),
+                    "pos": _sds((B,), i32),
+                    "neg": _sds((B, 100), i32)}
+        return {"seq": _sds((B, cfg.seq_len), i32),
+                "target": _sds((B,), i32),
+                "other": _sds((B, cfg.n_sparse), i32),
+                "labels": _sds((B,), f32)}
+
+    def fwd(params, batch):
+        if kind == "dlrm":
+            return R.dlrm_forward(params, cfg, batch["dense"],
+                                  batch["sparse"], ctx)
+        if kind == "wide_deep":
+            return R.wide_deep_forward(params, cfg, None, batch["sparse"],
+                                       ctx)
+        if kind == "sasrec":
+            u = R.sasrec_user_repr(params, cfg, batch["seq"], ctx)
+            return u
+        return R.bst_forward(params, cfg, batch["seq"], batch["target"],
+                             batch["other"], ctx)
+
+    flops = _recsys_flops(cfg, B)
+
+    if shape.step == "train":
+        optimizer = opt_lib.rankgraph2_optimizer()
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        oshard = _state_shardings(opt_shapes, params_shapes, pshard, mesh)
+        batch = batch_sds()
+        bsh = jax.tree.map(lambda v: _safe(mesh, bspec, v), batch)
+
+        def step(params, opt_state, batch):
+            def loss_fn(p):
+                if kind == "sasrec":
+                    return R.sasrec_loss(p, cfg, batch["seq"], batch["pos"],
+                                         batch["neg"], ctx)
+                return R.bce_loss(fwd(p, batch), batch["labels"])
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            grads, _ = opt_lib.clip_by_global_norm(grads, 1.0)
+            upd, opt_state = optimizer.update(grads, opt_state, params)
+            return loss, opt_lib.apply_updates(params, upd), opt_state
+
+        return Cell(arch.arch_id, shape.name, step,
+                    (params_shapes, opt_shapes, batch),
+                    (pshard, oshard, bsh), 3.0 * flops)
+
+    if shape.name == "retrieval_cand":
+        N = shape.dims["n_candidates"]
+        cand = _sds((N,), i32)
+        cshard = _safe(mesh, shd.logical_to_spec(("candidates",), rules),
+                       cand)
+        user_batch = {k: v for k, v in batch_sds().items()
+                      if k not in ("labels", "pos", "neg")}
+        ushard = jax.tree.map(lambda _: _named(mesh, P()), user_batch)
+
+        def step(params, batch, cand_ids):
+            if kind == "sasrec":
+                u = R.sasrec_user_repr(params, cfg, batch["seq"], ctx)
+            elif kind == "bst":
+                V = params["items"].shape[0]
+                e = R.take_rows(params["items"], batch["seq"][0] % V, ctx)
+                u = jnp.mean(e, axis=0, keepdims=True).astype(
+                    jnp.dtype(cfg.dtype))
+            else:
+                tab = params["tables"]
+                e = R.take_rows(tab[0], batch["sparse"][0] % tab.shape[1],
+                                ctx)
+                u = jnp.mean(e, axis=0, keepdims=True).astype(
+                    jnp.dtype(cfg.dtype))
+            key = "items" if kind in ("sasrec", "bst") else "tables"
+            table = params[key] if kind in ("sasrec", "bst") \
+                else params[key][0]
+            cvec = R.take_rows(table, cand_ids % table.shape[0], ctx)
+            cvec = ctx(cvec.astype(u.dtype), "candidates", None)
+            scores = (u @ cvec.T)[0]
+            return jax.lax.top_k(scores, 100)
+
+        flops_r = 2.0 * N * cfg.embed_dim
+        return Cell(arch.arch_id, shape.name, step,
+                    (params_shapes, user_batch, cand),
+                    (pshard, ushard, cshard), flops_r,
+                    notes="retrieval: query embedding vs 1M candidates, "
+                          "sharded dot + distributed top-k")
+
+    # serve_p99 / serve_bulk
+    batch = {k: v for k, v in batch_sds().items() if k != "labels"}
+    if kind == "sasrec":
+        batch = {"seq": batch["seq"]}
+    bsh = jax.tree.map(lambda v: _safe(mesh, bspec, v), batch)
+
+    def step(params, batch):
+        return fwd(params, batch)
+
+    return Cell(arch.arch_id, shape.name, step, (params_shapes, batch),
+                (pshard, bsh), flops)
+
+
+def dataclasses_replace_small(cfg):
+    """Clone a recsys config with a tiny vocab (specs are vocab-agnostic;
+    avoids allocating 10M-row tables just to read the spec tree)."""
+    import dataclasses as dc
+    return dc.replace(cfg, default_vocab=8)
+
+
+def _recsys_flops(cfg, B: int) -> float:
+    D = cfg.embed_dim
+    if cfg.kind == "dlrm":
+        mlp = 0
+        dims = [cfg.n_dense, *cfg.bot_mlp]
+        mlp += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        n_vec = cfg.n_sparse + 1
+        inter = n_vec * n_vec * D * 2
+        dims = [n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1], *cfg.top_mlp]
+        mlp += sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        return float(B) * (mlp + inter)
+    if cfg.kind == "wide_deep":
+        dims = [cfg.n_sparse * D, *cfg.bot_mlp, 1]
+        return float(B) * sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    if cfg.kind == "sasrec":
+        S = cfg.seq_len
+        per_block = 2 * S * (4 * D * D) + 2 * 2 * S * S * D + 2 * S * 8 * D * D
+        return float(B) * cfg.n_blocks * per_block
+    S = cfg.seq_len + 1
+    per_block = 2 * S * (4 * D * D) + 2 * 2 * S * S * D + 2 * S * 8 * D * D
+    dims = [S * D + cfg.n_sparse * D, *cfg.top_mlp]
+    mlp = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    return float(B) * (cfg.n_blocks * per_block + mlp)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+              cfg=None) -> Cell:
+    from repro.models.gnn import equiformer as EQ
+    import dataclasses as dc
+    is_probe = cfg is not None
+    cfg = cfg or arch.config
+    rules = _rules_for(arch.arch_id, shape, mesh)
+    ctx = shd.ShardingCtx(rules, mesh)
+    d = shape.dims
+    DF = d.get("d_feat", cfg.d_feat)
+
+    if shape.name == "minibatch_lg":
+        B, f1, f2 = d["batch_nodes"], d["fanout1"], d["fanout2"]
+        N = B + B * f1 + B * f1 * f2
+        E = B * f1 + B * f1 * f2
+    elif shape.name == "molecule":
+        N = d["n_nodes"] * d["batch"]
+        E = d["n_edges"] * d["batch"]
+    else:
+        N, E = d["n_nodes"], d["n_edges"]
+    # pad to /32 (pod x data): pjit argument divisibility; pads are masked
+    N = -(-N // 32) * 32
+    E = -(-E // 32) * 32
+
+    def probe(L: int) -> Cell:
+        pcfg = dc.replace(arch.config, n_layers=L, unroll=True,
+                          edge_chunk=max(E // 2, 1), d_feat=DF)
+        if not BASELINE:
+            pcfg = dc.replace(pcfg, edge_chunk=max(E // 2, pcfg.edge_chunk))
+        return _gnn_cell(arch, shape, mesh, cfg=pcfg)
+
+    probe = None if is_probe else probe
+    cfg = dc.replace(cfg, d_feat=DF)
+    if not is_probe and not BASELINE:
+        # perf iteration (§Perf/equiformer #2): with the node accumulator
+        # replicated over data, GSPMD all-reduces it once per edge chunk;
+        # bound the chunk COUNT (<= ~24) instead of the chunk size so the
+        # per-layer reduction traffic shrinks ~chunks/24 x.
+        cfg = dc.replace(cfg, edge_chunk=max(cfg.edge_chunk, -(-E // 24)))
+    params_shapes = jax.eval_shape(
+        lambda: EQ.init_params(jax.random.key(0), cfg, DF)[0])
+    specs = EQ.init_params(jax.random.key(0),
+                           dc.replace(cfg, n_layers=1), DF)[1]
+    pshard = _param_shardings(specs, rules, mesh)
+    nspec = shd.logical_to_spec(("nodes",), rules)
+    espec = shd.logical_to_spec(("edges",), rules)
+
+    batch = {"feats": _sds((N, DF), f32), "src": _sds((E,), i32),
+             "dst": _sds((E,), i32), "pos": _sds((N, 3), f32),
+             "targets": _sds((N,), f32),
+             "edge_mask": _sds((E,), jnp.bool_)}
+    n2spec = shd.logical_to_spec(("nodes", None), rules)
+    bsh = {"feats": _safe(mesh, n2spec, batch["feats"]),
+           "src": _safe(mesh, espec, batch["src"]),
+           "dst": _safe(mesh, espec, batch["dst"]),
+           "pos": _safe(mesh, n2spec, batch["pos"]),
+           "targets": _safe(mesh, nspec, batch["targets"]),
+           "edge_mask": _safe(mesh, espec, batch["edge_mask"])}
+
+    optimizer = opt_lib.make_optimizer("adamw", 1e-3)
+    opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+    oshard = _state_shardings(opt_shapes, params_shapes, pshard, mesh)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return EQ.node_mse_loss(
+                p, cfg, batch["feats"], batch["src"], batch["dst"],
+                batch["pos"], batch["targets"],
+                edge_mask=batch["edge_mask"], ctx=ctx)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, _ = opt_lib.clip_by_global_norm(grads, 1.0)
+        upd, opt_state = optimizer.update(grads, opt_state, params)
+        return loss, opt_lib.apply_updates(params, upd), opt_state
+
+    flops = _gnn_flops(cfg, N, E) * 3.0
+    return Cell(arch.arch_id, shape.name, step,
+                (params_shapes, opt_shapes, batch),
+                (pshard, oshard, bsh), flops, probe=probe)
+
+
+def _gnn_flops(cfg, N: int, E: int) -> float:
+    C, L, M = cfg.d_hidden, cfg.l_max, cfg.m_max
+    S = (L + 1) ** 2
+    # wigner apply fwd+bwd rotate: 2 x sum (2l+1)^2 C
+    rot = 2 * sum((2 * l + 1) ** 2 for l in range(L + 1)) * C * 2
+    n0 = L + 1
+    so2 = 2 * (n0 * C) ** 2 + sum(4 * 2 * ((L + 1 - m) * C) ** 2
+                                  for m in range(1, M + 1))
+    per_edge = rot + so2
+    per_node = 2 * (L + 1) * C * C * 2 + 2 * C * 2 * C * 2 * 2
+    return float(cfg.n_layers) * (E * per_edge + N * per_node)
+
+
+# ---------------------------------------------------------------------------
+# RankGraph-2 cells
+# ---------------------------------------------------------------------------
+
+def _rankgraph2_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    from repro.core import trainer as T
+    from repro.core import model as M
+    from repro.core import rq_index as RQ
+    cfg = arch.config
+    rules = _rules_for(arch.arch_id, shape, mesh)
+    ctx = shd.ShardingCtx(rules, mesh)
+
+    def side_sds(B, d_feat):
+        K = cfg.k_train
+        return {"feat": _sds((B, d_feat), f32),
+                "unbr_feat": _sds((B, K, cfg.d_user_feat), f32),
+                "unbr_mask": _sds((B, K), f32),
+                "inbr_feat": _sds((B, K, cfg.d_item_feat), f32),
+                "inbr_mask": _sds((B, K), f32)}
+
+    # specs are static python data: build from a tiny-RQ clone
+    _, specs, optimizer = T.init_state(jax.random.key(0), cfg_small(cfg))
+    params_shapes = jax.eval_shape(
+        lambda: T.init_state(jax.random.key(0), cfg)[0].params)
+    pshard = _param_shardings(specs, rules, mesh, params_shapes)
+    bspec = _batch_spec(rules)
+    rep = _named(mesh, P())
+
+    if shape.step == "train":
+        B = shape.dims["batch"] // 3
+        batch = {
+            "uu": {"src": side_sds(B, cfg.d_user_feat),
+                   "dst": side_sds(B, cfg.d_user_feat),
+                   "weight": _sds((B,), f32)},
+            "ui": {"src": side_sds(B, cfg.d_user_feat),
+                   "dst": side_sds(B, cfg.d_item_feat),
+                   "weight": _sds((B,), f32)},
+            "ii": {"src": side_sds(B, cfg.d_item_feat),
+                   "dst": side_sds(B, cfg.d_item_feat),
+                   "weight": _sds((B,), f32)},
+        }
+        bsh = jax.tree.map(lambda v: _safe(mesh, bspec, v), batch)
+        full_state = jax.eval_shape(
+            lambda: T.init_state(jax.random.key(0), cfg)[0])
+        sshard = dataclasses_set(full_state, pshard, rep, mesh, specs)
+
+        step = T.make_train_step(cfg, optimizer, ctx)
+        key = jax.eval_shape(lambda: jax.random.key(0))
+        flops = 3.0 * _rg2_flops(cfg, B * 3)
+        return Cell(arch.arch_id, shape.name, step,
+                    (full_state, batch, key),
+                    (sshard, bsh, rep), flops)
+
+    if shape.name == "retrieval_cand":
+        # the online-KNN cost this system replaces: 1 query vs 1M users
+        N = shape.dims["n_candidates"]
+        q = _sds((1, cfg.d_embed), f32)
+        pool = _sds((N, cfg.d_embed), f32)
+        cshard = _safe(mesh, shd.logical_to_spec(("candidates", None),
+                                                 rules), pool)
+
+        def step(q, pool):
+            scores = (q @ pool.T)[0]
+            return jax.lax.top_k(scores, 100)
+
+        return Cell(arch.arch_id, shape.name, step, (q, pool),
+                    (rep, cshard), 2.0 * N * cfg.d_embed,
+                    notes="online-KNN baseline the cluster index replaces")
+
+    # serve_*: embedding generation + fused RQ cluster assignment
+    B = shape.dims["batch"]
+    side = side_sds(B, cfg.d_user_feat)
+    ssh = jax.tree.map(lambda v: _safe(mesh, bspec, v), side)
+
+    def step(params, side):
+        _, prim = M.embed_side(params, cfg, side, M.USER, ctx)
+        codes = RQ.assign_codes(params["rq"], prim, cfg.rq)
+        return prim, codes
+
+    flops = _rg2_flops(cfg, B) / 3.0 \
+        + 2.0 * B * cfg.d_embed * sum(cfg.rq.codebook_sizes)
+    return Cell(arch.arch_id, shape.name, step, (params_shapes, side),
+                (pshard, ssh), flops,
+                notes="embedding refresh + RQ cluster assignment")
+
+
+def cfg_small(cfg):
+    import dataclasses as dc
+    return dc.replace(cfg, rq=dc.replace(cfg.rq, codebook_sizes=(8, 4),
+                                         hist_len=4))
+
+
+def dataclasses_set(full_state, pshard, rep, mesh, specs):
+    """TrainState shardings: params from specs, rest replicated/matched."""
+    from repro.core import trainer as T
+    opt = jax.tree.map(lambda _: rep, full_state.opt_state)
+    rq = jax.tree.map(lambda _: rep, full_state.rq_state)
+    pool = jax.tree.map(lambda _: rep, full_state.pool)
+    return T.TrainState(pshard, opt, rq, pool, rep)
+
+
+def _rg2_flops(cfg, B: int) -> float:
+    d, h, de, K = (cfg.d_user_feat, cfg.d_hidden, cfg.d_embed, cfg.k_train)
+    H = cfg.n_heads
+    enc = 2 * d * h + 2 * h * H * de
+    per_node = (1 + 2 * K) * enc + H * 2 * 3 * de * de
+    contrastive = 2 * cfg.n_negatives * de + 2 * de
+    rq = 2 * de * sum(cfg.rq.codebook_sizes)
+    return float(B) * (2 * per_node + 4 * contrastive + 2 * rq)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        return _lm_cell(arch, shape, mesh)
+    if arch.family == "recsys":
+        return _recsys_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape, mesh)
+    if arch.family == "rankgraph2":
+        return _rankgraph2_cell(arch, shape, mesh)
+    raise ValueError(arch.family)
+
+
+def all_cells() -> list[Tuple[str, str]]:
+    from repro.configs.base import list_archs
+    out = []
+    for a in list_archs():
+        arch = get_arch(a)
+        for s in arch.shapes:
+            out.append((a, s.name))
+    return out

@@ -1,0 +1,187 @@
+"""Generic architecture launcher (``--arch <id>``).
+
+Runs a reduced-size training (or serving) loop for any registered
+architecture on the host devices — the single-process development entry
+point; the production meshes are exercised via dryrun.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch dlrm-rm2 --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 10
+    PYTHONPATH=src python -m repro.launch.train --arch equiformer-v2
+    PYTHONPATH=src python -m repro.launch.train --arch rankgraph2
+"""
+import argparse
+import dataclasses as dc
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch, list_archs
+from repro.optim import optimizers as opt_lib
+
+
+def _reduced(cfg):
+    from repro.configs.base import LMConfig, GNNConfig, RecsysConfig
+    if isinstance(cfg, LMConfig):
+        return dc.replace(cfg, n_layers=2, d_model=128, n_heads=4,
+                          n_kv_heads=min(cfg.n_kv_heads, 4), head_dim=32,
+                          d_ff=256, moe_d_ff=256 if cfg.n_experts else None,
+                          n_experts=min(cfg.n_experts, 4), vocab_size=512,
+                          dtype="float32", param_dtype="float32")
+    if isinstance(cfg, GNNConfig):
+        return dc.replace(cfg, n_layers=2, d_hidden=32, l_max=2,
+                          edge_chunk=256, dtype="float32",
+                          param_dtype="float32", remat=False)
+    if isinstance(cfg, RecsysConfig):
+        return dc.replace(cfg, default_vocab=5000, dtype="float32",
+                          param_dtype="float32")
+    return cfg
+
+
+def run_lm(cfg, steps, batch=4, seq=64):
+    from repro.models.lm import model as LM
+    params, _ = LM.init_params(jax.random.key(0), cfg)
+    opt = opt_lib.make_optimizer("adamw", 1e-3)
+    st = opt.init(params)
+
+    @jax.jit
+    def step(params, st, toks):
+        loss, g = jax.value_and_grad(
+            lambda p: LM.lm_loss(p, cfg, toks, block_q=32))(params)
+        upd, st = opt.update(g, st, params)
+        return opt_lib.apply_updates(params, upd), st, loss
+
+    rng = np.random.default_rng(0)
+    for t in range(steps):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)))
+        params, st, loss = step(params, st, toks)
+        if t % max(steps // 5, 1) == 0:
+            print(f"[{t}] lm loss {float(loss):.3f}")
+    return float(loss)
+
+
+def run_recsys(cfg, steps, batch=256):
+    from repro.models.recsys import models as R
+    rng = np.random.default_rng(0)
+    key = jax.random.key(0)
+    opt = opt_lib.rankgraph2_optimizer()
+    if cfg.kind == "dlrm":
+        params, _ = R.dlrm_init(key, cfg)
+        fwd = lambda p, b: R.dlrm_forward(p, cfg, b["dense"], b["sparse"])
+        mk = lambda: {"dense": jnp.asarray(rng.normal(
+            size=(batch, cfg.n_dense)).astype(np.float32)),
+            "sparse": jnp.asarray(rng.integers(
+                0, cfg.default_vocab, (batch, cfg.n_sparse))),
+            "labels": jnp.asarray((rng.random(batch) > .5
+                                   ).astype(np.float32))}
+    elif cfg.kind == "wide_deep":
+        params, _ = R.wide_deep_init(key, cfg)
+        fwd = lambda p, b: R.wide_deep_forward(p, cfg, None, b["sparse"])
+        mk = lambda: {"sparse": jnp.asarray(rng.integers(
+            0, cfg.default_vocab, (batch, cfg.n_sparse))),
+            "labels": jnp.asarray((rng.random(batch) > .5
+                                   ).astype(np.float32))}
+    elif cfg.kind == "bst":
+        params, _ = R.bst_init(key, cfg)
+        fwd = lambda p, b: R.bst_forward(p, cfg, b["seq"], b["tgt"],
+                                         b["other"])
+        mk = lambda: {"seq": jnp.asarray(rng.integers(
+            -1, cfg.default_vocab, (batch, cfg.seq_len))),
+            "tgt": jnp.asarray(rng.integers(0, cfg.default_vocab, batch)),
+            "other": jnp.asarray(rng.integers(
+                0, cfg.default_vocab, (batch, cfg.n_sparse))),
+            "labels": jnp.asarray((rng.random(batch) > .5
+                                   ).astype(np.float32))}
+    else:  # sasrec
+        params, _ = R.sasrec_init(key, cfg)
+        st = opt.init(params)
+
+        @jax.jit
+        def step(params, st, seq, pos, neg):
+            loss, g = jax.value_and_grad(
+                lambda p: R.sasrec_loss(p, cfg, seq, pos, neg))(params)
+            upd, st = opt.update(g, st, params)
+            return opt_lib.apply_updates(params, upd), st, loss
+
+        for t in range(steps):
+            seq = jnp.asarray(rng.integers(-1, cfg.default_vocab,
+                                           (batch, cfg.seq_len)))
+            pos = jnp.asarray(rng.integers(0, cfg.default_vocab, batch))
+            neg = jnp.asarray(rng.integers(0, cfg.default_vocab,
+                                           (batch, 20)))
+            params, st, loss = step(params, st, seq, pos, neg)
+            if t % max(steps // 5, 1) == 0:
+                print(f"[{t}] sasrec loss {float(loss):.3f}")
+        return float(loss)
+
+    st = opt.init(params)
+
+    @jax.jit
+    def step(params, st, b):
+        loss, g = jax.value_and_grad(
+            lambda p: R.bce_loss(fwd(p, b), b["labels"]))(params)
+        upd, st = opt.update(g, st, params)
+        return opt_lib.apply_updates(params, upd), st, loss
+
+    for t in range(steps):
+        params, st, loss = step(params, st, mk())
+        if t % max(steps // 5, 1) == 0:
+            print(f"[{t}] {cfg.kind} bce {float(loss):.3f}")
+    return float(loss)
+
+
+def run_gnn(cfg, steps):
+    from repro.models.gnn import equiformer as EQ
+    from repro.models.gnn.sampler import make_random_graph
+    rng = np.random.default_rng(0)
+    N, E, DF = 200, 800, 16
+    cfg = dc.replace(cfg, d_feat=DF)
+    params, _ = EQ.init_params(jax.random.key(0), cfg, DF)
+    feats = jnp.asarray(rng.normal(size=(N, DF)).astype(np.float32))
+    pos = jnp.asarray(rng.normal(size=(N, 3)).astype(np.float32))
+    src, dst = make_random_graph(N, E, seed=0)
+    targets = jnp.asarray(rng.normal(size=N).astype(np.float32))
+    opt = opt_lib.make_optimizer("adamw", 1e-3)
+    st = opt.init(params)
+
+    @jax.jit
+    def step(params, st):
+        loss, g = jax.value_and_grad(
+            lambda p: EQ.node_mse_loss(p, cfg, feats, jnp.asarray(src),
+                                       jnp.asarray(dst), pos, targets)
+        )(params)
+        upd, st = opt.update(g, st, params)
+        return opt_lib.apply_updates(params, upd), st, loss
+
+    for t in range(steps):
+        params, st, loss = step(params, st)
+        if t % max(steps // 5, 1) == 0:
+            print(f"[{t}] equiformer mse {float(loss):.3f}")
+    return float(loss)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=False, default="rankgraph2",
+                    choices=list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args(argv)
+    arch = get_arch(args.arch)
+    cfg = _reduced(arch.config)
+    t0 = time.perf_counter()
+    if arch.family == "lm":
+        run_lm(cfg, args.steps)
+    elif arch.family == "recsys":
+        run_recsys(cfg, args.steps)
+    elif arch.family == "gnn":
+        run_gnn(cfg, args.steps)
+    else:
+        print("rankgraph2: see examples/train_rankgraph2.py (full driver)")
+    print(f"done in {time.perf_counter()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

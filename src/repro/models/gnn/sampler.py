@@ -1,0 +1,108 @@
+"""Neighbor sampling for minibatch GNN training (GraphSAGE-style).
+
+``minibatch_lg`` (232,965 nodes / 114.6M edges, batch 1024, fanout
+15-10) needs a *real* sampler: host-side CSR with per-seed uniform
+neighbor sampling, emitting fixed-size padded arrays (JAX needs static
+shapes; invalid slots are masked, never silently reused).
+
+The padded subgraph layout for fanouts (f1, f2):
+  nodes:  [seeds (B)] + [hop1 (B*f1)] + [hop2 (B*f1*f2)]   (local ids)
+  edges:  hop1->seed (B*f1) + hop2->hop1 (B*f1*f2), masked where the
+          CSR ran out of neighbors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray
+    indices: np.ndarray
+    n_nodes: int
+
+    @staticmethod
+    def from_edges(src: np.ndarray, dst: np.ndarray, n_nodes: int
+                   ) -> "CSRGraph":
+        order = np.argsort(src, kind="stable")
+        s, d = src[order], dst[order]
+        indptr = np.zeros(n_nodes + 1, np.int64)
+        np.add.at(indptr, s + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return CSRGraph(indptr, d.copy(), n_nodes)
+
+    def sample_neighbors(self, nodes: np.ndarray, fanout: int,
+                         rng: np.random.Generator
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """Uniform with-replacement sampling; returns ((n, fanout) ids,
+        mask) — mask False where a node has no neighbors."""
+        deg = self.indptr[nodes + 1] - self.indptr[nodes]
+        has = deg > 0
+        offs = (rng.random((len(nodes), fanout))
+                * np.maximum(deg, 1)[:, None]).astype(np.int64)
+        idx = self.indptr[nodes][:, None] + offs
+        nbrs = self.indices[np.minimum(idx, len(self.indices) - 1)]
+        mask = np.broadcast_to(has[:, None], nbrs.shape)
+        return np.where(mask, nbrs, -1), mask.copy()
+
+
+@dataclasses.dataclass
+class SampledSubgraph:
+    """Fixed-size padded 2-hop computation graph."""
+    node_ids: np.ndarray       # (n_total,) global ids (-1 pad)
+    feats_idx: np.ndarray      # == node_ids clipped for feature gather
+    src: np.ndarray            # (n_edges,) local ids
+    dst: np.ndarray            # (n_edges,)
+    edge_mask: np.ndarray      # (n_edges,)
+    seed_mask: np.ndarray      # (n_total,) True for seed slots
+    n_seeds: int
+
+
+def sample_two_hop(g: CSRGraph, seeds: np.ndarray, fanout1: int,
+                   fanout2: int, rng: Optional[np.random.Generator] = None
+                   ) -> SampledSubgraph:
+    rng = rng or np.random.default_rng(0)
+    B = len(seeds)
+    h1, m1 = g.sample_neighbors(seeds, fanout1, rng)          # (B, f1)
+    h1f = h1.reshape(-1)
+    h2, m2 = g.sample_neighbors(np.maximum(h1f, 0), fanout2, rng)
+    m2 = m2 & (h1f >= 0)[:, None]                              # (B*f1, f2)
+
+    n_seed, n_h1, n_h2 = B, B * fanout1, B * fanout1 * fanout2
+    node_ids = np.concatenate([seeds, h1f, h2.reshape(-1)])
+    # edges: hop1 -> seeds
+    src1 = n_seed + np.arange(n_h1)
+    dst1 = np.repeat(np.arange(B), fanout1)
+    em1 = m1.reshape(-1)
+    # edges: hop2 -> hop1
+    src2 = n_seed + n_h1 + np.arange(n_h2)
+    dst2 = n_seed + np.repeat(np.arange(n_h1), fanout2)
+    em2 = m2.reshape(-1)
+    return SampledSubgraph(
+        node_ids=node_ids,
+        feats_idx=np.maximum(node_ids, 0),
+        src=np.concatenate([src1, src2]).astype(np.int64),
+        dst=np.concatenate([dst1, dst2]).astype(np.int64),
+        edge_mask=np.concatenate([em1, em2]),
+        seed_mask=np.r_[np.ones(B, bool),
+                        np.zeros(n_h1 + n_h2, bool)],
+        n_seeds=B)
+
+
+def make_random_graph(n_nodes: int, n_edges: int, seed: int = 0,
+                      power_law: bool = True
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Synthetic edge list with (optionally) power-law degree skew —
+    stand-in for ogbn-* at dry-run scale (topology only matters here)."""
+    rng = np.random.default_rng(seed)
+    if power_law:
+        w = 1.0 / np.arange(1, n_nodes + 1) ** 0.8
+        w /= w.sum()
+        src = rng.choice(n_nodes, n_edges, p=w)
+    else:
+        src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    return src.astype(np.int64), dst.astype(np.int64)

@@ -1,0 +1,168 @@
+"""Real spherical-harmonic rotation matrices (Wigner D, real basis).
+
+Ivanic & Ruedenberg (1996, + 1998 errata) recursion: given a 3x3
+rotation matrix R, build the block-diagonal representation
+D(R) = diag(D^0, D^1, ..., D^L) acting on real-SH vectors with
+per-l component order m = -l..l (l=1 order corresponds to (y, z, x)).
+
+Vectorized over a leading batch of rotations (the per-edge case in eSCN
+message passing: one rotation per edge aligning the edge with +y).
+
+All loops below run at *trace* time over (l, m, n) index triples — the
+generated program is pure vectorized arithmetic over the edge batch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def _p(i: int, l: int, mu: int, m_: int, r1, rlm1):
+    """Helper P_i(l; mu, m') — batch-shaped (...)."""
+    # r1: (..., 3, 3) with index offset 1; rlm1: (..., 2l-1, 2l-1) offset l-1
+    if m_ == l:
+        return (r1[..., i + 1, 2] * rlm1[..., mu + l - 1, 2 * l - 2]
+                - r1[..., i + 1, 0] * rlm1[..., mu + l - 1, 0])
+    if m_ == -l:
+        return (r1[..., i + 1, 2] * rlm1[..., mu + l - 1, 0]
+                + r1[..., i + 1, 0] * rlm1[..., mu + l - 1, 2 * l - 2])
+    return r1[..., i + 1, 1] * rlm1[..., mu + l - 1, m_ + l - 1]
+
+
+def _u_fn(l, m, n, r1, rlm1):
+    return _p(0, l, m, n, r1, rlm1)
+
+
+def _v_fn(l, m, n, r1, rlm1):
+    if m == 0:
+        return _p(1, l, 1, n, r1, rlm1) + _p(-1, l, -1, n, r1, rlm1)
+    if m > 0:
+        a = _p(1, l, m - 1, n, r1, rlm1)
+        if m == 1:
+            return a * math.sqrt(2.0)
+        return a - _p(-1, l, -m + 1, n, r1, rlm1)
+    # m < 0
+    a = _p(-1, l, -m - 1, n, r1, rlm1)
+    if m == -1:
+        return a * math.sqrt(2.0)
+    return _p(1, l, m + 1, n, r1, rlm1) + a
+
+
+def _w_fn(l, m, n, r1, rlm1):
+    if m == 0:
+        return None
+    if m > 0:
+        return (_p(1, l, m + 1, n, r1, rlm1)
+                + _p(-1, l, -m - 1, n, r1, rlm1))
+    return (_p(1, l, m - 1, n, r1, rlm1)
+            - _p(-1, l, -m + 1, n, r1, rlm1))
+
+
+def _uvw_coeff(l: int, m: int, n: int):
+    d = 1.0 if m == 0 else 0.0
+    if abs(n) < l:
+        denom = float((l + n) * (l - n))
+    else:
+        denom = float((2 * l) * (2 * l - 1))
+    u = math.sqrt((l + m) * (l - m) / denom)
+    v = 0.5 * math.sqrt((1 + d) * (l + abs(m) - 1) * (l + abs(m))
+                        / denom) * (1 - 2 * d)
+    w = -0.5 * math.sqrt((l - abs(m) - 1) * (l - abs(m)) / denom) * (1 - d)
+    return u, v, w
+
+
+def sh_rotation_blocks(R: jnp.ndarray, l_max: int) -> List[jnp.ndarray]:
+    """R (..., 3, 3) -> list of per-l blocks [(...,1,1), (...,3,3), ...]."""
+    batch = R.shape[:-2]
+    blocks = [jnp.ones(batch + (1, 1), R.dtype)]
+    if l_max == 0:
+        return blocks
+    # l=1: real-SH order (-1,0,1) = (y,z,x)
+    perm = jnp.array([1, 2, 0])
+    r1 = R[..., perm[:, None], perm[None, :]]
+    blocks.append(r1)
+    rlm1 = r1
+    for l in range(2, l_max + 1):
+        rows = []
+        for m in range(-l, l + 1):
+            row = []
+            for n in range(-l, l + 1):
+                u, v, w = _uvw_coeff(l, m, n)
+                val = 0.0
+                if u != 0.0:
+                    val = val + u * _u_fn(l, m, n, r1, rlm1)
+                if v != 0.0:
+                    val = val + v * _v_fn(l, m, n, r1, rlm1)
+                if w != 0.0:
+                    wt = _w_fn(l, m, n, r1, rlm1)
+                    if wt is not None:
+                        val = val + w * wt
+                if isinstance(val, float):
+                    val = jnp.zeros(batch, R.dtype)
+                row.append(val)
+            rows.append(jnp.stack(row, axis=-1))
+        blk = jnp.stack(rows, axis=-2)
+        blocks.append(blk)
+        rlm1 = blk
+    return blocks
+
+
+def rotation_to_z(r_hat: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Rotation matrix mapping unit vectors r_hat (..., 3) onto +z.
+
+    +z is the real-SH polar axis in this basis: rotations about z act as
+    2x2 rotations within each (+m, -m) pair, which is exactly the gauge
+    freedom the SO(2) convolution must commute with (eSCN requirement).
+    Rodrigues' formula about axis = r_hat x z; degenerate (anti)parallel
+    cases handled explicitly.
+    """
+    x, y, z = r_hat[..., 0], r_hat[..., 1], r_hat[..., 2]
+    c = z                               # cos(theta) = r . z
+    axis = jnp.stack([y, -x, jnp.zeros_like(z)], axis=-1)  # r x z
+    s = jnp.linalg.norm(axis, axis=-1)
+    safe_s = jnp.maximum(s, eps)
+    k = axis / safe_s[..., None]
+    kx, ky, kz = k[..., 0], k[..., 1], k[..., 2]
+    zero = jnp.zeros_like(kx)
+    K = jnp.stack([
+        jnp.stack([zero, -kz, ky], -1),
+        jnp.stack([kz, zero, -kx], -1),
+        jnp.stack([-ky, kx, zero], -1)], -2)
+    I = jnp.broadcast_to(jnp.eye(3, dtype=r_hat.dtype), K.shape)
+    R = I + s[..., None, None] * K + (1 - c)[..., None, None] * (K @ K)
+    # degenerate: r ~ +z -> I ; r ~ -z -> rotate pi about x
+    flip = jnp.broadcast_to(jnp.array(
+        [[1., 0., 0.], [0., -1., 0.], [0., 0., -1.]], r_hat.dtype), K.shape)
+    R = jnp.where((s < eps)[..., None, None],
+                  jnp.where((c > 0)[..., None, None], I, flip), R)
+    return R
+
+
+def block_apply(blocks: List[jnp.ndarray], x: jnp.ndarray,
+                transpose: bool = False) -> jnp.ndarray:
+    """Apply block-diagonal D to x (..., S, C) with S = (l_max+1)^2."""
+    outs = []
+    off = 0
+    for l, blk in enumerate(blocks):
+        w = 2 * l + 1
+        seg = x[..., off:off + w, :]
+        if transpose:
+            outs.append(jnp.einsum("...ji,...jc->...ic", blk, seg))
+        else:
+            outs.append(jnp.einsum("...ij,...jc->...ic", blk, seg))
+        off += w
+    return jnp.concatenate(outs, axis=-2)
+
+
+@functools.lru_cache(maxsize=None)
+def m_order_indices(l_max: int):
+    """Component indices grouped by m: returns dict m -> list of flat
+    indices (l, m) with l >= |m| (flat index = l^2 + l + m)."""
+    out = {}
+    for m in range(-l_max, l_max + 1):
+        out[m] = [l * l + l + m for l in range(abs(m), l_max + 1)]
+    return out

@@ -1,0 +1,575 @@
+"""Shared LM transformer family: dense + MoE, GQA, RoPE, scan-over-layers.
+
+Covers the five assigned LM architectures via LMConfig:
+  olmo-1b      non-parametric LayerNorm, SwiGLU, GQA kv=16
+  llama3.2-3b  RMSNorm, SwiGLU, GQA kv=8
+  gemma-2b     RMSNorm(+1), GeGLU, MQA (kv=1), head_dim 256, embed scaling
+  grok-1-314b  MoE 8e top-2 (d_ff 32768), GQA kv=8
+  kimi-k2-1t   MoE 384e top-8 (expert d_ff 2048), GQA kv=8
+
+Execution paths:
+  train    : causal-LM step (tokens -> loss), chunked attention for long
+             sequences, remat + lax.scan over stacked layer params;
+  prefill  : forward that also fills a KV cache, returns last logits;
+  decode   : single-token step against a pre-filled KV cache (linear in
+             cache length — this is why long_500k decode is tractable
+             with full attention; see DESIGN.md).
+
+Sharding is expressed through logical axis names only (see
+repro.distributed.sharding); the same model lowers on 1 CPU device, the
+16x16 pod and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed.sharding import ShardingCtx, NULL_CTX
+from repro.nn import core as nn
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x (B, S, H, D), positions (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameter init (stacked per layer for lax.scan)
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig, dtype):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    init = nn.variance_scaling(1.0, "fan_in", "normal")
+    p = {
+        "wq": init(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype),
+        "wk": init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        "wv": init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        "wo": init(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype,
+                   in_axes=(0,), out_axes=(1,)),
+    }
+    s = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.norm != "layernorm_np":     # olmo: non-parametric -> no params
+        p["ln1"] = jnp.ones((cfg.d_model,), dtype) * (
+            0.0 if cfg.norm == "rmsnorm_p1" else 1.0)
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype) * (
+            0.0 if cfg.norm == "rmsnorm_p1" else 1.0)
+        s["ln1"] = ("embed",)
+        s["ln2"] = ("embed",)
+    if cfg.n_experts:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        E = cfg.n_experts
+        p["router"] = init(ks[4], (cfg.d_model, E), dtype)
+        s["router"] = ("embed", None)
+        p["w_gate"] = init(ks[5], (E, cfg.d_model, ff), dtype,
+                           in_axes=(1,), out_axes=(2,))
+        p["w_up"] = init(ks[6], (E, cfg.d_model, ff), dtype,
+                         in_axes=(1,), out_axes=(2,))
+        p["w_down"] = init(ks[7], (E, ff, cfg.d_model), dtype,
+                           in_axes=(1,), out_axes=(2,))
+        s["w_gate"] = ("expert", "embed", "expert_mlp")
+        s["w_up"] = ("expert", "embed", "expert_mlp")
+        s["w_down"] = ("expert", "expert_mlp", "embed")
+    else:
+        p["w_gate"] = init(ks[4], (cfg.d_model, cfg.d_ff), dtype)
+        p["w_up"] = init(ks[5], (cfg.d_model, cfg.d_ff), dtype)
+        p["w_down"] = init(ks[6], (cfg.d_ff, cfg.d_model), dtype,
+                           in_axes=(0,), out_axes=(1,))
+        s["w_gate"] = ("embed", "mlp")
+        s["w_up"] = ("embed", "mlp")
+        s["w_down"] = ("mlp", "embed")
+    return p, s
+
+
+def init_params(key, cfg: LMConfig) -> Tuple[Any, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    if cfg.scan_layers:
+        layer_params = jax.vmap(
+            lambda k: _layer_init(k, cfg, dtype)[0])(layer_keys)
+        layer_specs = jax.tree.map(lambda s: ("stack",) + s,
+                                   _layer_init(key, cfg, dtype)[1],
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        ps, ss = zip(*[_layer_init(k, cfg, dtype) for k in layer_keys])
+        layer_params = list(ps)
+        layer_specs = list(ss)
+    emb = jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                            dtype) * 0.02
+    params = {"embed": emb, "layers": layer_params,
+              "final_norm": jnp.ones((cfg.d_model,), dtype)}
+    specs = {"embed": ("vocab", "embed"), "layers": layer_specs,
+             "final_norm": ("embed",)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            k_out, (cfg.d_model, cfg.vocab_size), dtype) * 0.02
+        specs["lm_head"] = ("embed", "vocab")
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: LMConfig, x: jnp.ndarray, scale: Optional[jnp.ndarray]
+          ) -> jnp.ndarray:
+    if cfg.norm == "layernorm_np":
+        return nn.layernorm_apply(None, x)
+    if cfg.norm == "rmsnorm_p1":      # gemma (weights stored as delta)
+        return nn.rmsnorm_apply({"scale": scale}, x, plus_one=True)
+    return nn.rmsnorm_apply({"scale": scale}, x)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset: int,
+                       kv_len: Optional[jnp.ndarray], block_q: int,
+                       scale: float, ctx: ShardingCtx,
+                       unroll: bool = False) -> jnp.ndarray:
+    """Memory-bounded attention: lax.scan over q blocks; scores never
+    exceed (B, H, block_q, T).  Equivalent to softmax attention.
+
+    q (B, S, H, D); k/v (B, T, Hkv, D).  kv_len: optional (B,) valid kv
+    length (decode); q_offset: absolute position of q[0].
+    """
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    nb = max(1, (S + block_q - 1) // block_q)
+    pad = nb * block_q - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, nb, block_q, H, D).transpose(1, 0, 2, 3, 4)
+
+    kT = k.astype(jnp.float32)
+    vT = v.astype(jnp.float32)
+
+    def block(carry, inp):
+        qi, idx = inp
+        s = jnp.einsum("bqhd,bthd->bhqt", qi.astype(jnp.float32), kT,
+                       preferred_element_type=jnp.float32) * scale
+        s = ctx(s, "batch", "heads", None, "kv_seq")
+        rows = (idx * block_q + q_offset
+                + jnp.arange(block_q))[None, None, :, None]
+        cols = jnp.arange(T)[None, None, None, :]
+        mask = jnp.ones_like(s, bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if kv_len is not None:
+            mask = mask & (cols < kv_len[:, None, None, None])
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqt,bthd->bqhd", p, vT)
+        return carry, o.astype(q.dtype)
+
+    if nb == 1:
+        _, out = block(None, (qb[0], jnp.int32(0)))
+        out = out[:, :S]
+    elif unroll:
+        outs = [block(None, (qb[i], jnp.int32(i)))[1] for i in range(nb)]
+        out = jnp.stack(outs, 1).reshape(B, nb * block_q, H, D)[:, :S]
+    else:
+        _, outs = jax.lax.scan(block, None,
+                               (qb, jnp.arange(nb, dtype=jnp.int32)))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_q, H, D)
+        out = out[:, :S]
+    return out
+
+
+def _router(p, cfg: LMConfig, xt: jnp.ndarray):
+    """Shared router: returns (gate (T,k), eid (T,k), aux scalar)."""
+    E, k = cfg.n_experts, cfg.n_experts_per_tok
+    T = xt.shape[0]
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+    # aux load-balancing loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros(E, jnp.float32).at[eid.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+    return gate, eid, aux
+
+
+def _pos_in_group(flat_e: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each slot within its expert group — sort-based
+    (argsort + searchsorted), avoiding a (T*k, E) one-hot cumsum."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    grp_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(n, dtype=jnp.int32) - grp_start.astype(jnp.int32)
+    return jnp.zeros(n, jnp.int32).at[order].set(rank)
+
+
+def _moe_dense(p, cfg: LMConfig, x: jnp.ndarray, ctx: ShardingCtx
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked loop-over-experts MoE (no dropping, no dispatch).
+
+    The right structure when E is small relative to the model axis
+    (grok: 8 experts under 16-way TP): each expert is a dense TP matmul
+    over all tokens with a gate mask — E/k x extra FLOPs but no
+    scatter / all-to-all, and trivially shardable.
+    """
+    B, S, d = x.shape
+    E = cfg.n_experts
+    T = B * S
+    xt = x.reshape(T, d)
+    gate, eid, aux = _router(p, cfg, xt)
+    w = jnp.zeros((T, E), x.dtype)
+    w = w.at[jnp.arange(T)[:, None], eid].add(gate.astype(x.dtype))
+    out = jnp.zeros_like(xt)
+    for e in range(E):
+        g = xt @ p["w_gate"][e].astype(x.dtype)
+        u = xt @ p["w_up"][e].astype(x.dtype)
+        h = (jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)) * u
+        h = ctx(h, "batch", "expert_mlp")
+        out = out + (h @ p["w_down"][e].astype(x.dtype)) * w[:, e:e + 1]
+    return out.reshape(B, S, d), aux
+
+
+def _moe_shard_map(p, cfg: LMConfig, x: jnp.ndarray, ctx: ShardingCtx
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Manual expert-parallel dispatch (production path for big-E MoE).
+
+    Per device: take a 1/nm slice of this DP shard's tokens, route
+    locally, pack a (nm, E_loc, cap, d) send buffer, all_to_all over the
+    model axis (each peer owns E/nm experts), run the expert FFNs on the
+    received tokens, all_to_all back, combine, all_gather the token
+    slices.  Avoids the GSPMD global-scatter pathology entirely: every
+    scatter/gather is device-local; cross-device traffic is exactly two
+    all_to_alls + one all_gather (+ FSDP weight gathers).
+    """
+    mesh = ctx.mesh
+    rules = ctx.rules or {}
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_per_tok
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nm = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    E_loc = E // nm
+    fsdp = rules.get("embed")
+    fsdp_axes = (fsdp,) if isinstance(fsdp, str) else tuple(fsdp or ())
+
+    P_ = jax.sharding.PartitionSpec
+    wspec2 = P_("model", fsdp, None)                 # w_gate / w_up
+    wspec3 = P_("model", None, fsdp)                 # w_down
+    rspec = P_(fsdp, None)                           # router
+
+    def body(xb, router_w, wg, wu, wd):
+        T_dp = xb.shape[0] * xb.shape[1]
+        xt = xb.reshape(T_dp, d)
+        mi = jax.lax.axis_index("model")
+        T_my = T_dp // nm
+        x_my = jax.lax.dynamic_slice_in_dim(xt, mi * T_my, T_my, 0)
+        # FSDP weight gathers (the traffic GSPMD would emit anyway)
+        for ax in fsdp_axes:
+            router_w = jax.lax.all_gather(router_w, ax, axis=0, tiled=True)
+            wg = jax.lax.all_gather(wg, ax, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, ax, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, ax, axis=2, tiled=True)
+
+        gate, eid, aux = _router({"router": router_w}, cfg, x_my)
+        flat_e = eid.reshape(-1)                      # (T_my*k,)
+        owner = flat_e // E_loc
+        e_loc = flat_e % E_loc
+        pos = _pos_in_group(flat_e)
+        cap = max(8, -(-int(k * T_my / E * cfg.capacity_factor) // 8) * 8)
+        keep = pos < cap
+        slot_x = jnp.repeat(x_my, k, axis=0)          # (T_my*k, d)
+        send = jnp.zeros((nm, E_loc, cap, d), x.dtype)
+        send = send.at[jnp.where(keep, owner, 0),
+                       jnp.where(keep, e_loc, 0),
+                       jnp.where(keep, pos, cap - 1)].add(
+            slot_x * keep[:, None].astype(x.dtype))
+        recv = jax.lax.all_to_all(send, "model", 0, 0, tiled=True)
+        tok = recv.reshape(nm, E_loc, cap, d).transpose(1, 0, 2, 3)
+        tok = tok.reshape(E_loc, nm * cap, d)         # my experts' tokens
+        g = jnp.einsum("ecd,edf->ecf", tok, wg.astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", tok, wu.astype(x.dtype))
+        h = (jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)) * u
+        eout = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+        back = eout.reshape(E_loc, nm, cap, d).transpose(1, 0, 2, 3)
+        ret = jax.lax.all_to_all(
+            back.reshape(nm, E_loc, cap, d), "model", 0, 0, tiled=True)
+        got = ret[jnp.where(keep, owner, 0),
+                  jnp.where(keep, e_loc, 0),
+                  jnp.where(keep, pos, cap - 1)]
+        got = got * (keep[:, None] * gate.reshape(-1)[:, None]
+                     ).astype(x.dtype)
+        out_my = jnp.sum(got.reshape(T_my, k, d), axis=1)
+        out = jax.lax.all_gather(out_my, "model", axis=0, tiled=True)
+        aux = jax.lax.pmean(aux, "model")
+        return out.reshape(xb.shape), aux
+
+    xspec = P_(dp_axes if dp_axes else None, None, None)
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, rspec, wspec2, wspec2, wspec3),
+        out_specs=(xspec, P_()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux
+
+
+def _moe_block(p, cfg: LMConfig, x: jnp.ndarray, ctx: ShardingCtx
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-choice top-k MoE.  Implementation dispatch:
+
+      * shard_map expert parallelism — big E divisible by the model
+        axis with enough tokens to split (train / prefill);
+      * dense masked loop — small E (grok: 8 experts, 16-way TP);
+      * GSPMD scatter with capacity — small token counts (decode) and
+        meshless unit tests, where the buffers are tiny.
+    """
+    B, S, d = x.shape
+    E = cfg.n_experts
+    T = B * S
+    if ctx.mesh is not None and "model" in ctx.mesh.axis_names:
+        sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+        nm = sizes.get("model", 1)
+        dp = 1
+        for a in ("pod", "data"):
+            dp *= sizes.get(a, 1)
+        expert_sharded = (ctx.rules or {}).get("expert") == "model"
+        if (expert_sharded and E % nm == 0 and T % (dp * nm) == 0
+                and T // dp >= nm):
+            return _moe_shard_map(p, cfg, x, ctx)
+        if E <= 16 and T // max(dp, 1) >= 1024:
+            return _moe_dense(p, cfg, x, ctx)
+    return _moe_scatter(p, cfg, x, ctx)
+
+
+def _moe_scatter(p, cfg: LMConfig, x: jnp.ndarray, ctx: ShardingCtx
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based scatter dispatch (decode / unit-test path).
+
+    x (B, S, d) -> (out, aux_loss).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, d)
+    gate, eid, aux = _router(p, cfg, xt)
+    flat_e = eid.reshape(-1)                             # (T*k,)
+    pos = _pos_in_group(flat_e)
+    cap = max(int(k * T / E * cfg.capacity_factor) + 1, 8)
+    keep = pos < cap
+
+    src = jnp.repeat(xt, k, axis=0)                      # (T*k, d)
+    buf = jnp.zeros((E, cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, flat_e, E - 1),
+                 jnp.where(keep, pos, cap - 1)].add(
+        src * keep[:, None].astype(x.dtype))
+    buf = ctx(buf, "expert", None, None)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    h = ctx(act * u, "expert", None, "expert_mlp")
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    eout = ctx(eout, "expert", None, None)
+
+    # combine: gather per (token, slot), weight by gate, sum slots
+    got = eout[jnp.where(keep, flat_e, 0), jnp.where(keep, pos, 0)]
+    got = got * (keep[:, None] * gate.reshape(-1)[:, None]).astype(x.dtype)
+    out = jnp.sum(got.reshape(T, k, d), axis=1)
+    return out.reshape(B, S, d), aux
+
+
+def _dense_mlp(p, cfg: LMConfig, x: jnp.ndarray, ctx: ShardingCtx
+               ) -> jnp.ndarray:
+    g = x @ p["w_gate"].astype(x.dtype)
+    u = x @ p["w_up"].astype(x.dtype)
+    act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    h = ctx(act * u, "batch", None, "mlp")
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def _attn_block(p, cfg: LMConfig, x, positions, kv_cache, cache_len,
+                causal, block_q, ctx: ShardingCtx):
+    """Returns (out, new_kv).  kv_cache: None (train/prefill from scratch)
+    or dict(k=(B,T,Hkv,D), v=...) pre-allocated cache (decode)."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, Hkv, hd)
+    q = ctx(q, "batch", None, "heads", None)
+    k = ctx(k, "batch", None, "kv_heads", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        # decode: write new k/v at cache_len, attend over the full cache
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_len, axis=1)
+        ck = ctx(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = ctx(cv, "batch", "kv_seq", "kv_heads", None)
+        kv_len = jnp.full((B,), cache_len + S, jnp.int32)
+        out = _chunked_attention(q, ck, cv, causal=False, q_offset=0,
+                                 kv_len=kv_len, block_q=block_q,
+                                 scale=hd ** -0.5, ctx=ctx,
+                                 unroll=cfg.unroll_chunks)
+        new_kv = {"k": ck, "v": cv}
+    else:
+        out = _chunked_attention(q, k, v, causal=causal, q_offset=0,
+                                 kv_len=None, block_q=block_q,
+                                 scale=hd ** -0.5, ctx=ctx,
+                                 unroll=cfg.unroll_chunks)
+        new_kv = {"k": k, "v": v}
+    out = out.reshape(B, S, H * hd)
+    out = ctx(out, "batch", None, "heads")
+    return out @ p["wo"].astype(x.dtype), new_kv
+
+
+def _layer(p, cfg: LMConfig, x, positions, kv_cache, cache_len, causal,
+           block_q, ctx: ShardingCtx):
+    # residual stream layout (sequence-parallel when rules map seq->model):
+    # the per-layer saved activations shard over BOTH batch and seq.
+    x = ctx(x, "batch", "seq", None)
+    ln1 = p.get("ln1")
+    ln2 = p.get("ln2")
+    h = _norm(cfg, x, ln1)
+    attn, new_kv = _attn_block(p, cfg, h, positions, kv_cache, cache_len,
+                               causal, block_q, ctx)
+    x = x + attn
+    h = _norm(cfg, x, ln2)
+    if cfg.n_experts:
+        mlp, aux = _moe_block(p, cfg, h, ctx)
+    else:
+        mlp, aux = _dense_mlp(p, cfg, h, ctx), jnp.zeros((), jnp.float32)
+    return x + mlp, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray, *,
+            positions: Optional[jnp.ndarray] = None,
+            kv_caches: Optional[Dict[str, jnp.ndarray]] = None,
+            cache_len: int = 0, causal: bool = True,
+            block_q: int = 1024, ctx: ShardingCtx = NULL_CTX,
+            return_cache: bool = False):
+    """tokens (B, S) -> logits (B, S, V) [+ caches (L, B, T, Hkv, D)]."""
+    compute = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute)
+    if cfg.norm == "rmsnorm_p1":     # gemma scales embeddings by sqrt(d)
+        x = x * (cfg.d_model ** 0.5)
+    x = ctx(x, "batch", "seq", None)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.scan_layers:
+        def body(carry, layer_p_and_cache):
+            xx, aux = carry
+            lp, kvc = layer_p_and_cache
+            out, new_kv, a = _layer(lp, cfg, xx, positions, kvc, cache_len,
+                                    causal, block_q, ctx)
+            # don't stack caches through scan unless the caller needs them
+            return (out, aux + a), (new_kv if return_cache else None)
+
+        body_fn = body
+        if cfg.remat:
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux_total), new_caches = jax.lax.scan(
+            body_fn, (x, aux_total), (params["layers"], kv_caches))
+    else:
+        new_caches = []
+        for i, lp in enumerate(params["layers"]):
+            kvc = None if kv_caches is None else jax.tree.map(
+                lambda c: c[i], kv_caches)
+            x, nkv, a = _layer(lp, cfg, x, positions, kvc, cache_len,
+                               causal, block_q, ctx)
+            aux_total = aux_total + a
+            new_caches.append(nkv)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+
+    x = nn.rmsnorm_apply({"scale": params["final_norm"]}, x)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute)
+    logits = x @ head
+    logits = ctx(logits, "batch", "seq", "vocab")
+    if return_cache:
+        return logits, new_caches, aux_total
+    return logits, aux_total
+
+
+def lm_loss(params, cfg: LMConfig, tokens: jnp.ndarray, *,
+            block_q: int = 1024, ctx: ShardingCtx = NULL_CTX) -> jnp.ndarray:
+    logits, aux = forward(params, cfg, tokens, causal=True,
+                          block_q=block_q, ctx=ctx)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold) + aux
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int,
+                  dtype=None) -> Dict[str, jnp.ndarray]:
+    """Stacked (L, B, T, Hkv, D) caches (scan-compatible)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, cfg: LMConfig, tokens: jnp.ndarray,
+                kv_caches, cache_len, *, ctx: ShardingCtx = NULL_CTX):
+    """One decode step: tokens (B, 1) + caches filled to cache_len.
+
+    Cost is linear in cache length (one query row); attention runs
+    chunked over the cache so the (B, H, 1, T) score tensor is the peak.
+    """
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    logits, new_caches, _ = forward(
+        params, cfg, tokens, positions=positions, kv_caches=kv_caches,
+        cache_len=cache_len, causal=False, block_q=1,
+        ctx=ctx, return_cache=True)
+    return logits[:, -1], new_caches
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray, *,
+            block_q: int = 1024, ctx: ShardingCtx = NULL_CTX):
+    """Prefill: returns (last-token logits, caches of shape (L,B,S,...))."""
+    logits, caches, _ = forward(params, cfg, tokens, causal=True,
+                                block_q=block_q, ctx=ctx, return_cache=True)
+    return logits[:, -1], caches

@@ -1,0 +1,359 @@
+"""RecSys architecture family: dlrm-rm2, wide-deep, sasrec, bst.
+
+Shared substrate: huge sparse embedding tables (row-sharded over the
+model axis) accessed through the EmbeddingBag op (jnp.take +
+segment-sum semantics; Pallas kernel on TPU) — JAX has no native
+EmbeddingBag, so this *is* part of the system (see kernels/embedding_bag).
+
+Steps per the assigned shape table:
+  train_batch    train_step: CTR binary cross-entropy (dlrm / wide_deep /
+                 bst) or sampled-softmax next-item (sasrec);
+  serve_p99 /    serve_step: forward scoring of a request batch;
+  serve_bulk
+  retrieval_cand retrieval_step: one query representation against 10^6
+                 candidate item embeddings — a sharded batched dot +
+                 distributed top-k, never a loop.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.distributed.sharding import ShardingCtx, NULL_CTX
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.nn import core as nn
+
+
+# ---------------------------------------------------------------------------
+# shared sparse-embedding substrate
+# ---------------------------------------------------------------------------
+
+def _tables_init(key, n_fields: int, vocab: int, dim: int, dtype):
+    tbl = jax.random.normal(key, (n_fields, vocab, dim), dtype) * 0.01
+    return tbl, (None, "table_rows", "table_dim")
+
+
+def _lookup_local(tables, ids, ctx):
+    """Per-field gather (single-device / replicated-table path)."""
+    V = tables.shape[1]
+    flat = (jnp.arange(tables.shape[0])[None, :] * V + ids % V)   # (B, F)
+    out = jnp.take(tables.reshape(-1, tables.shape[-1]), flat, axis=0)
+    return ctx(out, "batch", None, "table_dim")
+
+
+def _lookup_sharded(tables, ids, ctx):
+    """Distributed embedding lookup over row-sharded tables (shard_map).
+
+    The GSPMD gather from a row-sharded table replicates the whole table
+    (tens of GB for production vocabs) — the dominant collective in the
+    recsys baseline roofline.  Instead: each model-axis peer gathers the
+    rows it *owns* (ids outside its range contribute zeros) and a psum
+    over the model axis assembles the embeddings — communication drops
+    from O(F*V*D) table bytes to O(B*F*D) activation bytes per step.
+    """
+    mesh = ctx.mesh
+    F, V, D = tables.shape
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nm = sizes.get("model", 1)
+    v_loc = V // nm
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in dp_axes:
+        dp *= sizes[a]
+    P_ = jax.sharding.PartitionSpec
+
+    n = ids.shape[0]
+    pad = (-n) % max(dp, 1)
+    if pad:  # e.g. a single request's short id list vs 16 DP shards
+        ids = jnp.pad(ids, ((0, pad), (0, 0)))
+
+    def body(tab, ids_loc):
+        mi = jax.lax.axis_index("model")
+        rel = ids_loc % V - mi * v_loc                   # (B_loc, F)
+        ok = (rel >= 0) & (rel < v_loc)
+        safe = jnp.clip(rel, 0, v_loc - 1)
+        flat = jnp.arange(F)[None, :] * v_loc + safe
+        rows = jnp.take(tab.reshape(F * v_loc, D), flat, axis=0)
+        rows = rows * ok[..., None].astype(rows.dtype)
+        return jax.lax.psum(rows, "model")
+
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P_(None, "model", None), P_(dp_axes or None, None)),
+        out_specs=P_(dp_axes or None, None, None),
+        check_vma=False)(tables, ids)
+    if pad:
+        out = out[:n]
+    return ctx(out, "batch", None, "table_dim")
+
+
+def _lookup_simple(tables, ids, ctx):
+    """Embedding lookup with implementation dispatch: shard_map
+    distributed lookup when a mesh with a model axis is present and the
+    vocab divides it; local gather otherwise (tests / single device)."""
+    if (ctx.mesh is not None and "model" in ctx.mesh.axis_names
+            and os.environ.get("REPRO_BASELINE") != "1"):
+        nm = dict(zip(ctx.mesh.axis_names,
+                      ctx.mesh.devices.shape)).get("model", 1)
+        if tables.shape[1] % nm == 0 and nm > 1 and \
+                (ctx.rules or {}).get("table_rows") == "model":
+            return _lookup_sharded(tables, ids, ctx)
+    return _lookup_local(tables, ids, ctx)
+
+
+def take_rows(table, ids, ctx):
+    """(V, D) table row gather with distributed dispatch; ids any shape.
+    Callers sanitize negative ids (padding) before/after."""
+    shape = ids.shape
+    out = _lookup_simple(table[None], ids.reshape(-1, 1), ctx)
+    return out.reshape(*shape, table.shape[-1])
+
+
+def _bag_lookup(tables, ids, ctx):
+    """Multi-hot bags: tables (F, V, D), ids (B, F, L) -> (B, F, D) via
+    the EmbeddingBag op (segment-sum semantics, kernel on TPU)."""
+    B, F, L = ids.shape
+    V, D = tables.shape[1], tables.shape[2]
+    flat_tab = tables.reshape(F * V, D)
+    offs = (jnp.arange(F) * V)[None, :, None]
+    # one bag per (b, f): reshape to (B*F, L)
+    bag_ids = jnp.where(ids >= 0, ids % V + offs, -1).reshape(B * F, L)
+    out = embedding_bag(flat_tab, bag_ids, None, "sum", False)
+    return ctx(out.reshape(B, F, D), "batch", None, "table_dim")
+
+
+# ---------------------------------------------------------------------------
+# DLRM  [arXiv:1906.00091]
+# ---------------------------------------------------------------------------
+
+def dlrm_init(key, cfg: RecsysConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    tbl, tspec = _tables_init(ks[0], cfg.n_sparse, cfg.default_vocab,
+                              cfg.embed_dim, dtype)
+    bot, bspec = nn.mlp_init(ks[1], [cfg.n_dense, *cfg.bot_mlp], dtype=dtype)
+    n_vec = cfg.n_sparse + 1
+    d_inter = n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1]
+    top, tpspec = nn.mlp_init(ks[2], [d_inter, *cfg.top_mlp], dtype=dtype,
+                              final_name=None)
+    return ({"tables": tbl, "bot": bot, "top": top},
+            {"tables": tspec, "bot": bspec, "top": tpspec})
+
+
+def dlrm_forward(params, cfg: RecsysConfig, dense: jnp.ndarray,
+                 sparse_ids: jnp.ndarray, ctx: ShardingCtx = NULL_CTX
+                 ) -> jnp.ndarray:
+    compute = jnp.dtype(cfg.dtype)
+    if sparse_ids.ndim == 3:          # multi-hot bags
+        emb = _bag_lookup(params["tables"].astype(compute), sparse_ids, ctx)
+    else:
+        emb = _lookup_simple(params["tables"].astype(compute), sparse_ids,
+                             ctx)
+    bot = nn.mlp_apply(params["bot"], dense.astype(compute),
+                       act=jax.nn.relu, final_act=jax.nn.relu)   # (B, D)
+    vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)       # (B, F+1, D)
+    # dot interaction: upper triangle of (F+1)x(F+1) gram matrix
+    gram = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    n = vecs.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    inter = gram[:, iu, ju]                                      # (B, nC2)
+    x = jnp.concatenate([bot, inter], axis=1)
+    logit = nn.mlp_apply(params["top"], x, act=jax.nn.relu)
+    return logit[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep  [arXiv:1606.07792]
+# ---------------------------------------------------------------------------
+
+def wide_deep_init(key, cfg: RecsysConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    tbl, tspec = _tables_init(ks[0], cfg.n_sparse, cfg.default_vocab,
+                              cfg.embed_dim, dtype)
+    wide, wspec = _tables_init(ks[1], cfg.n_sparse, cfg.default_vocab, 1,
+                               dtype)
+    deep, dspec = nn.mlp_init(
+        ks[2], [cfg.n_sparse * cfg.embed_dim, *cfg.bot_mlp, 1], dtype=dtype,
+        final_name=None)
+    return ({"tables": tbl, "wide": wide, "deep": deep},
+            {"tables": tspec, "wide": wspec, "deep": dspec})
+
+
+def wide_deep_forward(params, cfg: RecsysConfig, dense, sparse_ids,
+                      ctx: ShardingCtx = NULL_CTX) -> jnp.ndarray:
+    compute = jnp.dtype(cfg.dtype)
+    emb = _lookup_simple(params["tables"].astype(compute), sparse_ids, ctx)
+    deep_in = emb.reshape(emb.shape[0], -1)                # concat interaction
+    deep = nn.mlp_apply(params["deep"], deep_in, act=jax.nn.relu)[:, 0]
+    # wide: sum of per-field scalar weights (embedding-bag with dim 1)
+    wide_e = _lookup_simple(params["wide"].astype(compute), sparse_ids, ctx)
+    wide = jnp.sum(wide_e[..., 0], axis=1)
+    return deep + wide
+
+
+# ---------------------------------------------------------------------------
+# small transformer encoder shared by sasrec / bst
+# ---------------------------------------------------------------------------
+
+def _tx_block_init(key, d: int, n_heads: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 6)
+    init = nn.variance_scaling(1.0, "fan_in", "normal")
+    hd = max(d // n_heads, 1)
+    p = {"wq": init(ks[0], (d, n_heads * hd), dtype),
+         "wk": init(ks[1], (d, n_heads * hd), dtype),
+         "wv": init(ks[2], (d, n_heads * hd), dtype),
+         "wo": init(ks[3], (n_heads * hd, d), dtype),
+         "ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype)}
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "heads"),
+         "wv": ("embed", "heads"), "wo": ("heads", "embed"),
+         "ln1": ("embed",), "ln2": ("embed",)}
+    p["ff1"], s["ff1"] = nn.linear_init(ks[4], d, d_ff, out_name="mlp",
+                                        dtype=dtype)
+    p["ff2"], s["ff2"] = nn.linear_init(ks[5], d_ff, d, in_name="mlp",
+                                        out_name="embed", dtype=dtype)
+    return p, s
+
+
+def _tx_block_apply(p, x, n_heads: int, causal: bool, ctx: ShardingCtx):
+    B, S, d = x.shape
+    hd = max(d // n_heads, 1)
+    h = nn.rmsnorm_apply({"scale": p["ln1"]}, x)
+    q = (h @ p["wq"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    k = (h @ p["wk"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    v = (h @ p["wv"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    s = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    att = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", att, v).reshape(B, S, n_heads * hd)
+    x = x + o @ p["wo"].astype(x.dtype)
+    h = nn.rmsnorm_apply({"scale": p["ln2"]}, x)
+    h = jax.nn.relu(nn.linear_apply(p["ff1"], h))
+    h = ctx(h, "batch", None, "mlp")
+    return x + nn.linear_apply(p["ff2"], h)
+
+
+# ---------------------------------------------------------------------------
+# SASRec  [arXiv:1808.09781]
+# ---------------------------------------------------------------------------
+
+def sasrec_init(key, cfg: RecsysConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    d = cfg.embed_dim
+    items = jax.random.normal(ks[0], (cfg.default_vocab, d), dtype) * 0.01
+    pos = jax.random.normal(ks[1], (cfg.seq_len, d), dtype) * 0.01
+    blocks, bspecs = [], []
+    for i in range(cfg.n_blocks):
+        p, s = _tx_block_init(ks[2 + i], d, cfg.n_heads, 4 * d, dtype)
+        blocks.append(p)
+        bspecs.append(s)
+    return ({"items": items, "pos": pos, "blocks": blocks},
+            {"items": ("table_rows", "table_dim"), "pos": (None, None),
+             "blocks": bspecs})
+
+
+def sasrec_user_repr(params, cfg: RecsysConfig, seq_ids: jnp.ndarray,
+                     ctx: ShardingCtx = NULL_CTX) -> jnp.ndarray:
+    """seq_ids (B, S) item history (-1 pad) -> (B, D) user representation
+    (hidden state at the last position)."""
+    compute = jnp.dtype(cfg.dtype)
+    V = params["items"].shape[0]
+    x = take_rows(params["items"].astype(compute),
+                  jnp.where(seq_ids >= 0, seq_ids, 0) % V, ctx)
+    x = x * (seq_ids >= 0).astype(compute)[..., None]
+    x = x + params["pos"].astype(compute)[None, : x.shape[1]]
+    x = ctx(x, "batch", "seq", None)
+    for p in params["blocks"]:
+        x = _tx_block_apply(p, x, cfg.n_heads, causal=True, ctx=ctx)
+    return x[:, -1]
+
+
+def sasrec_scores(params, cfg: RecsysConfig, user_repr: jnp.ndarray,
+                  cand_ids: jnp.ndarray, ctx: ShardingCtx = NULL_CTX
+                  ) -> jnp.ndarray:
+    """(B, D) x (N,) candidate ids -> (B, N) dot scores (retrieval)."""
+    compute = user_repr.dtype
+    V = params["items"].shape[0]
+    cand = take_rows(params["items"].astype(compute), cand_ids % V, ctx)
+    cand = ctx(cand, "candidates", None)
+    return user_repr @ cand.T
+
+
+# ---------------------------------------------------------------------------
+# BST  [arXiv:1905.06874]
+# ---------------------------------------------------------------------------
+
+def bst_init(key, cfg: RecsysConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    d = cfg.embed_dim
+    items = jax.random.normal(ks[0], (cfg.default_vocab, d), dtype) * 0.01
+    pos = jax.random.normal(ks[1], (cfg.seq_len + 1, d), dtype) * 0.01
+    other, ospec = _tables_init(ks[2], cfg.n_sparse, cfg.default_vocab, d,
+                                dtype)
+    blocks, bspecs = [], []
+    for i in range(cfg.n_blocks):
+        p, s = _tx_block_init(ks[3 + i], d, cfg.n_heads, 4 * d, dtype)
+        blocks.append(p)
+        bspecs.append(s)
+    d_in = (cfg.seq_len + 1) * d + cfg.n_sparse * d
+    mlp, mspec = nn.mlp_init(ks[-1], [d_in, *cfg.top_mlp], dtype=dtype,
+                             final_name=None)
+    return ({"items": items, "pos": pos, "other": other, "blocks": blocks,
+             "mlp": mlp},
+            {"items": ("table_rows", "table_dim"), "pos": (None, None),
+             "other": ospec, "blocks": bspecs, "mlp": mspec})
+
+
+def bst_forward(params, cfg: RecsysConfig, seq_ids: jnp.ndarray,
+                target_id: jnp.ndarray, other_ids: jnp.ndarray,
+                ctx: ShardingCtx = NULL_CTX) -> jnp.ndarray:
+    """Behavior sequence (B, S) + target item (B,) + profile fields
+    (B, F) -> CTR logit (B,)."""
+    compute = jnp.dtype(cfg.dtype)
+    V = params["items"].shape[0]
+    B, S = seq_ids.shape
+    seq = jnp.concatenate([seq_ids, target_id[:, None]], axis=1)
+    x = take_rows(params["items"].astype(compute),
+                  jnp.where(seq >= 0, seq, 0) % V, ctx)
+    x = x * (seq >= 0).astype(compute)[..., None]
+    x = x + params["pos"].astype(compute)[None, : S + 1]
+    x = ctx(x, "batch", "seq", None)
+    for p in params["blocks"]:
+        x = _tx_block_apply(p, x, cfg.n_heads, causal=False, ctx=ctx)
+    other = _lookup_simple(params["other"].astype(compute), other_ids, ctx)
+    feats = jnp.concatenate([x.reshape(B, -1), other.reshape(B, -1)], axis=1)
+    logit = nn.mlp_apply(params["mlp"], feats, act=jax.nn.relu)
+    return logit[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    l32 = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(l32, 0) - l32 * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(l32))))
+
+
+def sasrec_loss(params, cfg: RecsysConfig, seq_ids, pos_ids, neg_ids,
+                ctx: ShardingCtx = NULL_CTX) -> jnp.ndarray:
+    """BPR-style: positive next item vs sampled negatives."""
+    u = sasrec_user_repr(params, cfg, seq_ids, ctx)
+    compute = u.dtype
+    V = params["items"].shape[0]
+    pos = take_rows(params["items"].astype(compute), pos_ids % V, ctx)
+    neg = take_rows(params["items"].astype(compute), neg_ids % V, ctx)
+    s_pos = jnp.sum(u * pos, axis=-1, keepdims=True)        # (B, 1)
+    s_neg = jnp.einsum("bd,bnd->bn", u, neg)                # (B, N)
+    logits = jnp.concatenate([s_pos, s_neg], axis=1).astype(jnp.float32)
+    return -jnp.mean(jax.nn.log_softmax(logits, axis=-1)[:, 0])

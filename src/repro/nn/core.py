@@ -1,0 +1,192 @@
+"""Minimal functional NN layer library with logical sharding specs.
+
+Design: every ``*_init`` returns ``(params, specs)`` where ``specs`` is a
+parallel pytree whose leaves are tuples of logical axis names (consumed
+by repro.distributed.sharding).  ``*_apply`` are pure functions.  No
+framework dependency (flax is unavailable offline); this keeps parameter
+layout and sharding fully explicit, which the dry-run and roofline work
+rely on.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Specs = Any
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def variance_scaling(scale: float, mode: str, distribution: str):
+    def init(key, shape, dtype, in_axes=(0,), out_axes=(1,)):
+        fan_in = math.prod(shape[a] for a in in_axes) or 1
+        fan_out = math.prod(shape[a] for a in out_axes) or 1
+        if mode == "fan_in":
+            denom = fan_in
+        elif mode == "fan_out":
+            denom = fan_out
+        else:
+            denom = (fan_in + fan_out) / 2
+        var = scale / denom
+        if distribution == "normal":
+            return jax.random.normal(key, shape, dtype) * jnp.asarray(
+                math.sqrt(var), dtype)
+        lim = math.sqrt(3 * var)
+        return jax.random.uniform(key, shape, dtype, -lim, lim)
+    return init
+
+
+lecun_normal = variance_scaling(1.0, "fan_in", "normal")
+he_normal = variance_scaling(2.0, "fan_in", "normal")
+xavier_uniform = variance_scaling(1.0, "fan_avg", "uniform")
+
+
+def normal_init(stddev: float):
+    def init(key, shape, dtype, **_):
+        return jax.random.normal(key, shape, dtype) * jnp.asarray(stddev, dtype)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# linear / mlp
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *,
+                in_name: Optional[str] = "embed",
+                out_name: Optional[str] = "mlp",
+                use_bias: bool = True,
+                dtype=jnp.float32,
+                init: Callable = xavier_uniform):
+    kw, _ = jax.random.split(key)
+    params = {"w": init(kw, (d_in, d_out), dtype)}
+    specs = {"w": (in_name, out_name)}
+    if use_bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        specs["b"] = (out_name,)
+    return params, specs
+
+
+def linear_apply(params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def mlp_init(key, dims: Sequence[int], *, use_bias=True, dtype=jnp.float32,
+             final_name: Optional[str] = "mlp", init=he_normal):
+    """Plain MLP: dims = [d_in, h1, ..., d_out]."""
+    params, specs = [], []
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        last = i == len(dims) - 2
+        out_name = final_name if last else "mlp"
+        in_name = "embed" if i == 0 else "mlp"
+        p, s = linear_init(keys[i], a, b, in_name=in_name, out_name=out_name,
+                           use_bias=use_bias, dtype=dtype, init=init)
+        params.append(p)
+        specs.append(s)
+    return params, specs
+
+
+def mlp_apply(params, x: jax.Array, *, act=jax.nn.relu,
+              final_act: Optional[Callable] = None) -> jax.Array:
+    n = len(params)
+    for i, p in enumerate(params):
+        x = linear_apply(p, x)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm_apply(params, x: jax.Array, *, eps: float = 1e-6,
+                  plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if plus_one:   # gemma convention: weight is (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(dt)
+
+
+def layernorm_apply(params: Optional[Params], x: jax.Array, *,
+                    eps: float = 1e-5) -> jax.Array:
+    """LayerNorm; with params=None it is non-parametric (OLMo style)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if params is not None:
+        y = y * params["scale"].astype(jnp.float32)
+        if "bias" in params:
+            y = y + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layernorm_init(d: int, *, bias: bool = True, dtype=jnp.float32):
+    params = {"scale": jnp.ones((d,), dtype)}
+    specs = {"scale": ("embed",)}
+    if bias:
+        params["bias"] = jnp.zeros((d,), dtype)
+        specs["bias"] = ("embed",)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32,
+                   stddev: float = 0.02,
+                   row_name: str = "vocab", col_name: Optional[str] = "embed"):
+    tbl = jax.random.normal(key, (vocab, d), dtype) * stddev
+    return {"table": tbl}, {"table": (row_name, col_name)}
+
+
+def embedding_lookup(params, ids: jax.Array, dtype=None) -> jax.Array:
+    tbl = params["table"]
+    if dtype is not None:
+        tbl = tbl.astype(dtype)
+    return jnp.take(tbl, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree.leaves(params))
+
+
+def cosine_similarity(a: jax.Array, b: jax.Array, axis: int = -1,
+                      eps: float = 1e-8) -> jax.Array:
+    an = a / (jnp.linalg.norm(a, axis=axis, keepdims=True) + eps)
+    bn = b / (jnp.linalg.norm(b, axis=axis, keepdims=True) + eps)
+    return jnp.sum(an * bn, axis=axis)
+
+
+def l2_normalize(x: jax.Array, axis: int = -1, eps: float = 1e-8) -> jax.Array:
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)

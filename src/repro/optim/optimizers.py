@@ -1,0 +1,258 @@
+"""Self-contained optimizer library (optax is unavailable offline).
+
+All optimizers are (init, update) pairs over pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Includes the paper's production recipe (§5.1): AdaGrad lr=0.02 for
+"sparse" (embedding-ish) parameters and AdamW lr=0.004 for dense ones,
+via ``partition`` — plus Adafactor (factored second moments) which the
+MoE giants (grok-314B / kimi-1T) need to fit optimizer state in HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype))
+                        if u is not None else p, params, updates,
+                        is_leaf=lambda x: x is None)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# sgd / adagrad / adamw
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                params)
+        return ()
+
+    def update(grads, state, params=None):
+        if momentum:
+            state = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state, grads)
+            upd = jax.tree.map(lambda m: -lr * m, state)
+        else:
+            upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float = 0.02, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        state = jax.tree.map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)), state, grads)
+        upd = jax.tree.map(
+            lambda a, g: -lr * g.astype(jnp.float32)
+            / (jnp.sqrt(a) + eps), state, grads)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw(lr: float = 0.004, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+        return AdamState(z(), z(), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                          * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            return -lr * (step + weight_decay * p.astype(jnp.float32))
+
+        return (jax.tree.map(upd, mu, nu, params),
+                AdamState(mu, nu, c))
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# adafactor (Shazeer & Stern) — factored second moments, O(n+m) state
+# ---------------------------------------------------------------------------
+
+class FactorState(NamedTuple):
+    vr: Any       # row stats  (or full v for <2D params)
+    vc: Any       # col stats
+    count: jnp.ndarray
+
+
+def adafactor(lr: float = 0.01, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              lr_schedule: bool = True) -> Optimizer:
+    """Factored AdaGrad-style stats over the last two dims; params with
+    ndim < 2 keep full stats (they are tiny).  ``lr_schedule`` applies
+    the standard Shazeer-Stern 1/sqrt(t) relative-step decay (without it
+    the update clipping makes constant-lr Adafactor oscillate)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def row(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros_like(p, jnp.float32))
+
+        def col(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((), jnp.float32))
+
+        return FactorState(jax.tree.map(row, params),
+                           jax.tree.map(col, params),
+                           jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+        step_lr = lr * (jax.lax.rsqrt(c.astype(jnp.float32))
+                        if lr_schedule else 1.0)
+
+        def upd(g, vr, vc, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p):
+                nvr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                nvc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    nvr / jnp.mean(nvr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(nvc + eps)
+                step = g32 * rfac[..., None] * cfac[..., None, :]
+            else:
+                nvr = beta * vr + (1 - beta) * g2
+                nvc = vc
+                step = g32 * jax.lax.rsqrt(nvr + eps)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-12)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            return -step_lr * step, nvr, nvc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        treedef = jax.tree.structure(grads)
+        flat = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+        upds = treedef.unflatten([t[0] for t in flat])
+        vrs = treedef.unflatten([t[1] for t in flat])
+        vcs = treedef.unflatten([t[2] for t in flat])
+        return upds, FactorState(vrs, vcs, c)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# partitioned optimizer (paper: adagrad for sparse + adamw for dense)
+# ---------------------------------------------------------------------------
+
+def partition(predicate: Callable[[Tuple[Any, ...], Any], bool],
+              opt_true: Optimizer, opt_false: Optimizer) -> Optimizer:
+    """Route each leaf to one of two optimizers by (path, leaf).
+
+    The routing mask is recomputed from the (static) tree structure at
+    trace time, so the returned state is jit-friendly.
+    """
+
+    def _mask(params):
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        return [bool(predicate(path, leaf)) for path, leaf in flat]
+
+    def _split(tree, mask):
+        leaves, treedef = jax.tree.flatten(tree)
+        # routed-away leaves become 0-d zeros: uniform trees for the
+        # sub-optimizers; their updates are discarded at merge.
+        t = treedef.unflatten([l if m else jnp.zeros(())
+                               for l, m in zip(leaves, mask)])
+        f = treedef.unflatten([jnp.zeros(()) if m else l
+                               for l, m in zip(leaves, mask)])
+        return t, f, treedef
+
+    def _merge(a, b, mask, treedef):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        return treedef.unflatten([x if m else y
+                                  for x, y, m in zip(la, lb, mask)])
+
+    def init(params):
+        mask = _mask(params)
+        pt, pf, _ = _split(params, mask)
+        return {"true": opt_true.init(pt), "false": opt_false.init(pf)}
+
+    def update(grads, state, params):
+        mask = _mask(params)
+        gt, gf, treedef = _split(grads, mask)
+        pt, pf, _ = _split(params, mask)
+        ut, st = opt_true.update(gt, state["true"], pt)
+        uf, sf = opt_false.update(gf, state["false"], pf)
+        upd = _merge(ut, uf, mask, treedef)
+        return upd, {"true": st, "false": sf}
+
+    return Optimizer(init, update)
+
+
+def rankgraph2_optimizer(lr_sparse: float = 0.02, lr_dense: float = 0.004
+                         ) -> Optimizer:
+    """Paper §5.1: AdaGrad for sparse/embedding-like params, AdamW for
+    dense.  'Sparse' = any path containing 'table' or 'codebooks'."""
+    def is_sparse(path, leaf) -> bool:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        return ("table" in keys) or ("codebooks" in keys)
+
+    return partition(is_sparse, adagrad(lr_sparse), adamw(lr_dense))
+
+
+def make_optimizer(name: str, lr: Optional[float] = None) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr or 3e-4)
+    if name == "adagrad":
+        return adagrad(lr or 0.02)
+    if name == "adafactor":
+        return adafactor(lr or 0.01)
+    if name == "sgd":
+        return sgd(lr or 0.1)
+    if name == "rankgraph2":
+        return rankgraph2_optimizer()
+    raise ValueError(f"unknown optimizer {name!r}")

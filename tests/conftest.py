@@ -1,0 +1,44 @@
+import os
+
+# tests run single-device (the dry-run alone uses 512 host devices);
+# keep CPU determinism and silence accidental x64 drift.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_world():
+    from repro.data.synthetic import make_world
+    return make_world(n_users=300, n_items=400, events_per_user=25.0,
+                      seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_graph(tiny_world):
+    from repro.core.graph_builder import build_graph
+    return build_graph(tiny_world.day0, k_cap=16, hub_cap=12)
+
+
+@pytest.fixture(scope="session")
+def tiny_tables(tiny_graph):
+    from repro.data.edge_dataset import build_neighbor_tables
+    return build_neighbor_tables(tiny_graph, k_imp=10, n_walks=12,
+                                 walk_len=3)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from repro.configs.base import RankGraph2Config, RQConfig
+    return RankGraph2Config(
+        d_user_feat=64, d_item_feat=64, d_embed=24, n_heads=2, d_hidden=48,
+        k_imp=10, k_train=4, n_negatives=16, n_pool_neg=4,
+        rq=RQConfig(codebook_sizes=(16, 8), hist_len=20), dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset(tiny_world, tiny_graph, tiny_tables, tiny_cfg):
+    from repro.data.edge_dataset import EdgeDataset
+    return EdgeDataset(tiny_graph, tiny_tables, tiny_world.user_feat,
+                       tiny_world.item_feat, k_train=tiny_cfg.k_train)

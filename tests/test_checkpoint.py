@@ -1,0 +1,114 @@
+"""Fault-tolerance: checkpoint/restore, retention, preemption, elastic."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "b": {"c": jnp.arange(5), "d": jnp.float32(3.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = _tree()
+    ck.save(7, tree, metadata={"seed": 0, "data_step": 7})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = ck.restore(like)
+    assert meta["step"] == 7 and meta["data_step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_restore_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    with pytest.raises(ValueError):
+        ck.restore({"only": jnp.zeros(3)})
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree())
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_train_state_roundtrip(tmp_path, tiny_cfg, tiny_dataset):
+    from repro.core import trainer as T
+    state, _, opt = T.init_state(jax.random.key(0), tiny_cfg, pool_size=64)
+    step = jax.jit(T.make_train_step(tiny_cfg, opt))
+    for t in range(3):
+        batch = jax.tree.map(jnp.asarray, tiny_dataset.sample_batch(
+            t, 0, {"uu": 8, "ui": 8, "ii": 8}))
+        state, _ = step(state, batch, jax.random.key(t))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(int(state.step), state, metadata={"data_seed": 0})
+    restored, meta = ck.restore(jax.tree.map(
+        lambda x: jnp.zeros_like(x), state))
+    assert int(restored.step) == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+ELASTIC_SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(sys.argv[1])
+    mesh = jax.make_mesh((%d, %d), ("data", "model"))
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    if sys.argv[2] == "save":
+        sh = NamedSharding(mesh, P("data", "model"))
+        tree = jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+        ck.save(1, tree)
+    else:
+        sh = {"w": NamedSharding(mesh, P("data", "model"))}
+        restored, _ = ck.restore({"w": jnp.zeros((8, 8))}, shardings=sh)
+        assert restored["w"].sharding.mesh.devices.size == %d
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"]), np.arange(64.0).reshape(8, 8))
+        print("ELASTIC_OK")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_mesh_sizes(tmp_path):
+    """Write on a 4x2 mesh, restore onto 2x2 — the elastic-rescale path."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable, "-c", ELASTIC_SCRIPT % (8, 4, 2, 8),
+         str(tmp_path), "save"], env=env, capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    r = subprocess.run(
+        [sys.executable, "-c", ELASTIC_SCRIPT % (4, 2, 2, 4),
+         str(tmp_path), "load"], env=env, capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "ELASTIC_OK" in r.stdout

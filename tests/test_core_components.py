@@ -1,0 +1,236 @@
+"""Core RankGraph-2 components: model, negatives, losses, PPR, serving."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as L
+from repro.core import model as M
+from repro.core import negatives as N
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def test_embed_shapes_and_norm(tiny_cfg):
+    params, specs = M.init_params(jax.random.key(0), tiny_cfg)
+    B, K = 6, tiny_cfg.k_train
+    key = jax.random.key(1)
+    side = dict(
+        feat=jax.random.normal(key, (B, tiny_cfg.d_user_feat)),
+        unbr_feat=jax.random.normal(key, (B, K, tiny_cfg.d_user_feat)),
+        unbr_mask=jnp.ones((B, K)),
+        inbr_feat=jax.random.normal(key, (B, K, tiny_cfg.d_item_feat)),
+        inbr_mask=jnp.ones((B, K)))
+    heads, prim = M.embed_side(params, tiny_cfg, side, M.USER)
+    assert heads.shape == (B, tiny_cfg.n_heads, tiny_cfg.d_embed)
+    assert prim.shape == (B, tiny_cfg.d_embed)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(prim), axis=1),
+                               1.0, atol=1e-4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(heads), axis=-1), 1.0, atol=1e-4)
+
+
+def test_padded_neighbors_do_not_affect_embedding(tiny_cfg):
+    """Masked (padding) neighbors must not change the output — the
+    correctness condition for fixed-shape edge-centric batches."""
+    params, _ = M.init_params(jax.random.key(0), tiny_cfg)
+    B, K = 4, tiny_cfg.k_train
+    key = jax.random.key(2)
+    base = dict(
+        feat=jax.random.normal(key, (B, tiny_cfg.d_user_feat)),
+        unbr_feat=jax.random.normal(key, (B, K, tiny_cfg.d_user_feat)),
+        unbr_mask=jnp.ones((B, K)).at[:, -1].set(0.0),
+        inbr_feat=jax.random.normal(key, (B, K, tiny_cfg.d_item_feat)),
+        inbr_mask=jnp.ones((B, K)))
+    _, p1 = M.embed_side(params, tiny_cfg, base, M.USER)
+    poisoned = dict(base)
+    poisoned["unbr_feat"] = base["unbr_feat"].at[:, -1].set(1e3)
+    _, p2 = M.embed_side(params, tiny_cfg, poisoned, M.USER)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# negatives
+# ---------------------------------------------------------------------------
+
+def test_pool_fifo_and_wraparound():
+    pool = N.init_pool(8, 4)
+    e1 = jnp.ones((5, 4))
+    pool = N.update_pool(pool, e1, e1 * 2)
+    assert int(pool.user_fill) == 5 and int(pool.user_ptr) == 5
+    pool = N.update_pool(pool, e1 * 3, e1 * 4)
+    assert int(pool.user_fill) == 8          # capped
+    assert int(pool.user_ptr) == 2           # wrapped
+    # newest rows overwrote the oldest
+    assert float(pool.user[1, 0]) == 3.0
+
+
+def test_sample_negatives_shape_and_no_self():
+    key = jax.random.key(0)
+    B, d, H = 16, 8, 2
+    dst = jax.random.normal(key, (B, d))
+    heads = jax.random.normal(key, (B, H, d))
+    pool = jax.random.normal(key, (32, d))
+    negs = N.sample_negatives(key, dst, heads, pool, jnp.int32(32),
+                              n_neg=20, n_pool=6)
+    assert negs.shape == (B, 20, d)
+    # in-batch negatives never equal the positive row itself
+    for b in range(B):
+        assert not np.any(np.all(np.asarray(negs[b]) ==
+                                 np.asarray(dst[b]), axis=-1)[:12])
+
+
+def test_sample_negatives_empty_pool_fallback():
+    key = jax.random.key(1)
+    dst = jax.random.normal(key, (8, 4))
+    heads = jax.random.normal(key, (8, 2, 4))
+    pool = jnp.zeros((16, 4))
+    negs = N.sample_negatives(key, dst, heads, pool, jnp.int32(0),
+                              n_neg=10, n_pool=4)
+    # fallback must not produce zero vectors from the empty pool
+    norms = np.linalg.norm(np.asarray(negs), axis=-1)
+    assert (norms > 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def test_pair_losses_match_manual():
+    key = jax.random.key(0)
+    from repro.nn.core import l2_normalize
+    src = l2_normalize(jax.random.normal(key, (4, 8)))
+    dst = l2_normalize(jax.random.normal(jax.random.key(1), (4, 8)))
+    negs = l2_normalize(jax.random.normal(jax.random.key(2), (4, 5, 8)))
+    marg, info = L.pair_losses(src, dst, negs, margin=0.1, tau=0.06)
+    s_pos = np.sum(np.asarray(src) * np.asarray(dst), -1)
+    s_neg = np.einsum("bd,bnd->bn", np.asarray(src), np.asarray(negs))
+    m_ref = np.maximum(s_neg - s_pos[:, None] + 0.1, 0).sum(-1)
+    logits = np.concatenate([s_pos[:, None], s_neg], 1) / 0.06
+    i_ref = (np.log(np.exp(logits - logits.max(1, keepdims=True)).sum(1))
+             + logits.max(1) - logits[:, 0])
+    np.testing.assert_allclose(np.asarray(marg), m_ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(info), i_ref, rtol=1e-4)
+
+
+def test_uncertainty_combine_gradients():
+    lv = L.init_uncertainty()
+    tasks = {k: jnp.float32(1.0) for k in L.TASKS}
+    g = jax.grad(lambda lv: L.uncertainty_combine(tasks, lv))(lv)
+    # d/ds [e^-s L + s] at s=0, L=1 -> 0: stationary where weight matches
+    for k in L.TASKS:
+        np.testing.assert_allclose(float(g[k]), 0.0, atol=1e-6)
+    tasks2 = dict(tasks, margin_uu=jnp.float32(5.0))
+    g2 = jax.grad(lambda lv: L.uncertainty_combine(tasks2, lv))(lv)
+    assert float(g2["margin_uu"]) < 0   # big loss -> raise its variance
+
+
+@given(st.floats(0.01, 0.5), st.floats(0.01, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_infonce_bounds_property(tau, margin):
+    """InfoNCE >= 0 and increases as positives get worse."""
+    key = jax.random.key(42)
+    from repro.nn.core import l2_normalize
+    src = l2_normalize(jax.random.normal(key, (8, 16)))
+    negs = l2_normalize(jax.random.normal(jax.random.key(1), (8, 6, 16)))
+    good = src                                   # sim = 1
+    bad = l2_normalize(-src + 0.05)
+    _, i_good = L.pair_losses(src, good, negs, margin=margin, tau=tau)
+    _, i_bad = L.pair_losses(src, bad, negs, margin=margin, tau=tau)
+    assert (np.asarray(i_good) >= -1e-5).all()
+    assert float(i_bad.mean()) > float(i_good.mean())
+
+
+# ---------------------------------------------------------------------------
+# PPR
+# ---------------------------------------------------------------------------
+
+def test_ppr_neighbors_are_reachable(tiny_graph, tiny_tables):
+    """PPR neighbors must be within walk-length hops in the backbone."""
+    t = tiny_tables
+    nu = tiny_graph.n_users
+    # user 0's user-neighbors should never be user 0 itself
+    for row in range(min(20, nu)):
+        nbrs = t.user_nbrs[row]
+        assert row not in nbrs[nbrs >= 0]
+        assert (nbrs[nbrs >= 0] < nu).all()
+        inbrs = t.item_nbrs[row]
+        assert (inbrs[inbrs >= 0] >= nu).all()
+
+
+def test_ppr_numpy_vs_jax_walkers_agree_distributionally(tiny_graph):
+    """Independent RNGs, same transition kernel: the *top-visited*
+    neighbor sets from both walkers should largely agree."""
+    from repro.core import ppr as P
+    adj = P.build_padded_hetero_adj(tiny_graph, max_deg_per_type=8)
+    starts = np.arange(0, 20, dtype=np.int64)
+    vis_np, _ = P.ppr_visit_counts(adj, starts, n_walks=256, walk_len=4,
+                                   seed=0)
+    vis_jx = np.asarray(P.ppr_walk_jax(
+        jnp.asarray(adj.nbrs), jnp.asarray(adj.cum), jnp.asarray(starts),
+        n_walks=256, walk_len=4, restart=0.15, key=jax.random.key(0)))
+    nu = tiny_graph.n_users
+    u_np, _ = P.topk_by_count(vis_np, starts, 5, nu, nu)
+    u_jx, _ = P.topk_by_count(vis_jx, starts, 5, nu, nu)
+    overlaps = []
+    for r in range(len(starts)):
+        a = set(int(x) for x in u_np[r] if x >= 0)
+        b = set(int(x) for x in u_jx[r] if x >= 0)
+        if a or b:
+            overlaps.append(len(a & b) / max(min(len(a), len(b)), 1))
+    assert np.mean(overlaps) > 0.4, np.mean(overlaps)
+
+
+def test_topk_by_count_correctness():
+    from repro.core.ppr import topk_by_count
+    visited = np.array([[3, 3, 3, 7, 7, 1, 12, 12, 12, 12]])
+    starts = np.array([0])
+    users, items = topk_by_count(visited, starts, 3, type_boundary=10,
+                                 n_users=10)
+    assert list(users[0]) == [3, 7, 1]       # by count desc
+    assert items[0][0] == 12
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_cluster_queue_recency_and_dedup():
+    from repro.core.serving import ClusterQueueStore
+    clusters = np.array([0, 0, 1])
+    store = ClusterQueueStore(clusters, queue_len=16, recency_s=100.0)
+    store.ingest(np.array([0, 1, 0, 2]), np.array([10, 11, 10, 99]),
+                 np.array([0.0, 50.0, 60.0, 70.0]))
+    got = store.retrieve(0, now=100.0, k=10)
+    assert got == [10, 11] or got == [11, 10]
+    # recency filter drops stale entries
+    got = store.retrieve(0, now=500.0, k=10)
+    assert got == []
+    # other cluster isolated
+    assert store.retrieve(2, now=100.0, k=10) == [99]
+
+
+def test_i2i_knn_and_u2i2i():
+    from repro.core.serving import build_i2i_knn, u2i2i_retrieve
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(30, 8)).astype(np.float32)
+    emb[1] = emb[0] + 0.01      # items 0,1 nearly identical
+    knn = build_i2i_knn(emb, k=5)
+    assert knn.shape == (30, 5)
+    assert knn[0][0] == 1 and knn[1][0] == 0
+    out = u2i2i_retrieve(knn, [0], k=3)
+    assert out[0] == 1 and len(out) == 3
+
+
+def test_serving_cost_model_matches_paper_magnitude():
+    from repro.core.serving import ServingCostModel
+    cm = ServingCostModel()
+    red = cm.cost_reduction()
+    assert red > 0.8            # the paper's 83% regime
+    assert cm.knn_flops_per_req() > 1e8
+    assert cm.cluster_flops_per_req() < 1e4

@@ -1,0 +1,147 @@
+"""Data pipeline + Wigner-rotation property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import make_world, next_day_ground_truth
+
+
+# ---------------------------------------------------------------------------
+# synthetic world
+# ---------------------------------------------------------------------------
+
+def test_world_shapes_and_determinism():
+    w1 = make_world(n_users=100, n_items=150, seed=3)
+    w2 = make_world(n_users=100, n_items=150, seed=3)
+    np.testing.assert_array_equal(w1.day0.item_id, w2.day0.item_id)
+    assert w1.user_feat.shape == (100, 64)
+    assert w1.day0.n_users == 100
+    assert (w1.day1.timestamp > 86400.0 - 1e-6).all()
+
+
+def test_world_has_popularity_skew():
+    w = make_world(n_users=400, n_items=600, seed=0)
+    counts = np.bincount(w.day0.item_id, minlength=600)
+    top = np.sort(counts)[::-1]
+    assert top[:30].sum() > counts.sum() * 0.15     # head concentration
+
+
+def test_next_day_ground_truth_csr():
+    w = make_world(n_users=50, n_items=60, seed=1)
+    u, it, starts, ends = next_day_ground_truth(w)
+    for uid in (0, 10, 49):
+        mine = it[starts[uid]:ends[uid]]
+        truth = w.day1.item_id[w.day1.user_id == uid]
+        assert sorted(mine.tolist()) == sorted(truth.tolist())
+
+
+# ---------------------------------------------------------------------------
+# edge dataset
+# ---------------------------------------------------------------------------
+
+def test_batch_shapes_and_determinism(tiny_dataset, tiny_cfg):
+    b1 = tiny_dataset.sample_batch(5, 0, {"uu": 8, "ui": 8, "ii": 8})
+    b2 = tiny_dataset.sample_batch(5, 0, {"uu": 8, "ui": 8, "ii": 8})
+    for et in ("uu", "ui", "ii"):
+        np.testing.assert_array_equal(b1[et]["src_ids"], b2[et]["src_ids"])
+        assert b1[et]["src"]["feat"].shape == (8, 64)
+        assert b1[et]["src"]["unbr_feat"].shape == (8, tiny_cfg.k_train, 64)
+    b3 = tiny_dataset.sample_batch(6, 0, {"uu": 8, "ui": 8, "ii": 8})
+    assert not np.array_equal(b1["ui"]["src_ids"], b3["ui"]["src_ids"])
+
+
+def test_batch_edges_are_real_edges(tiny_dataset, tiny_graph):
+    b = tiny_dataset.sample_batch(0, 0, {"ui": 16})
+    nu = tiny_graph.n_users
+    pairs = set(zip(tiny_graph.ui.src.tolist(), tiny_graph.ui.dst.tolist()))
+    for s, d in zip(b["ui"]["src_ids"], b["ui"]["dst_ids"]):
+        assert (int(s), int(d) - nu) in pairs
+
+
+def test_prefetcher_yields_in_order(tiny_dataset):
+    from repro.data.edge_dataset import Prefetcher
+    it = tiny_dataset.iter_batches(0, {"ui": 4})
+    pf = Prefetcher(it, depth=2)
+    got = [next(pf) for _ in range(3)]
+    want = [tiny_dataset.sample_batch(t, 0, {"ui": 4}) for t in range(3)]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g["ui"]["src_ids"],
+                                      w["ui"]["src_ids"])
+    pf.close()
+
+
+def test_group2_fallback_uses_prev_embeddings(tiny_graph):
+    from repro.data.edge_dataset import build_neighbor_tables
+    rng = np.random.default_rng(0)
+    n = tiny_graph.n_users + tiny_graph.n_items
+    prev = rng.normal(size=(n, 8)).astype(np.float32)
+    t = build_neighbor_tables(tiny_graph, k_imp=5, n_walks=8, walk_len=3,
+                              prev_emb=prev)
+    g2 = np.flatnonzero(~tiny_graph.group1_users)
+    if len(g2):
+        # fallback rows should now be (mostly) filled
+        assert (t.user_nbrs[g2] >= 0).mean() > 0.5
+
+
+# ---------------------------------------------------------------------------
+# wigner properties (hypothesis over random rotations / l_max)
+# ---------------------------------------------------------------------------
+
+def _rand_rot(rng, n=4):
+    A = rng.normal(size=(n, 3, 3))
+    Q, _ = np.linalg.qr(A)
+    Q[:, :, 0] *= np.sign(np.linalg.det(Q))[:, None]
+    return jnp.asarray(Q.astype(np.float32))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4))
+@settings(max_examples=8, deadline=None)
+def test_wigner_orthogonality_property(seed, l_max):
+    from repro.models.gnn.wigner import sh_rotation_blocks
+    rng = np.random.default_rng(seed)
+    R = _rand_rot(rng)
+    for l, b in enumerate(sh_rotation_blocks(R, l_max)):
+        eye = np.eye(2 * l + 1)
+        err = np.abs(np.asarray(jnp.einsum("bij,bkj->bik", b, b))
+                     - eye).max()
+        assert err < 1e-4, (l, err)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_wigner_homomorphism_property(seed):
+    from repro.models.gnn.wigner import sh_rotation_blocks
+    rng = np.random.default_rng(seed)
+    R1, R2 = _rand_rot(rng), _rand_rot(rng)
+    b1 = sh_rotation_blocks(R1, 3)
+    b2 = sh_rotation_blocks(R2, 3)
+    b12 = sh_rotation_blocks(jnp.einsum("bij,bjk->bik", R1, R2), 3)
+    for l in range(4):
+        err = np.abs(np.asarray(
+            jnp.einsum("bij,bjk->bik", b1[l], b2[l]) - b12[l])).max()
+        assert err < 1e-3, (l, err)
+
+
+def test_rotation_to_z_degenerate_cases():
+    from repro.models.gnn.wigner import rotation_to_z
+    r = jnp.asarray([[0., 0., 1.], [0., 0., -1.], [1., 0., 0.]],
+                    jnp.float32)
+    R = rotation_to_z(r)
+    mapped = jnp.einsum("bij,bj->bi", R, r)
+    np.testing.assert_allclose(np.asarray(mapped),
+                               [[0, 0, 1]] * 3, atol=1e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_block_apply_preserves_norm(seed):
+    from repro.models.gnn.wigner import sh_rotation_blocks, block_apply
+    rng = np.random.default_rng(seed)
+    R = _rand_rot(rng, 2)
+    x = jnp.asarray(rng.normal(size=(2, 16, 3)).astype(np.float32))
+    y = block_apply(sh_rotation_blocks(R, 3), x)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=(1, 2)),
+                               np.linalg.norm(np.asarray(y), axis=(1, 2)),
+                               rtol=1e-4)

@@ -1,0 +1,139 @@
+"""Distribution: logical sharding rules, multi-device correctness via
+subprocess (device count is locked at first jax init, so multi-device
+CPU tests run in children with XLA_FLAGS set)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+from repro.distributed import sharding as shd
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_child(script: str) -> str:
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, cwd=REPO,
+                       timeout=600)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    return r.stdout
+
+
+def test_logical_to_spec_basic():
+    rules = {"batch": ("pod", "data"), "mlp": "model", "embed": None}
+    assert shd.logical_to_spec(("batch", None, "mlp"), rules) == \
+        P(("pod", "data"), None, "model")
+    assert shd.logical_to_spec(("embed",), rules) == P(None)
+    # same mesh axis twice -> second occurrence dropped
+    assert shd.logical_to_spec(("mlp", "mlp"), rules) == P("model", None)
+
+
+def test_make_rules_drops_missing_axes():
+    mesh = jax.make_mesh((1,), ("data",))
+    rules = shd.make_rules(mesh, None)
+    assert rules["mlp"] is None              # no 'model' axis on this mesh
+    assert rules["batch"] == ("data",)
+
+
+def test_constrain_is_noop_without_rules():
+    x = jax.numpy.ones((4, 4))
+    y = shd.NULL_CTX(x, "batch", "mlp")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.slow
+def test_moe_shard_map_matches_reference_multidevice():
+    out = _run_child(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import LMConfig
+        from repro.models.lm import model as LM
+        from repro.distributed.sharding import ShardingCtx, make_rules
+        cfg = LMConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                       d_ff=64, moe_d_ff=64, vocab_size=50, n_experts=8,
+                       n_experts_per_tok=2, dtype="float32",
+                       param_dtype="float32", capacity_factor=8.0)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        ctx = ShardingCtx(make_rules(mesh, {"embed": "data"}), mesh)
+        params, _ = LM.init_params(jax.random.key(0), cfg)
+        lp = jax.tree.map(lambda a: a[0], params["layers"])
+        x = jax.random.normal(jax.random.key(1), (4, 8, 32))
+        with mesh:
+            o1, _ = jax.jit(lambda lp, x:
+                            LM._moe_shard_map(lp, cfg, x, ctx))(lp, x)
+        o2, _ = LM._moe_scatter(lp, cfg, x, ShardingCtx())
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-4, atol=2e-5)
+        print("SHARDMAP_OK")
+    """))
+    assert "SHARDMAP_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    """Same rankgraph2 train step, 1 device vs 4-device mesh — losses
+    must agree to estimator noise (shard-local negatives are the one
+    deliberately layout-dependent component)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import RankGraph2Config, RQConfig
+        from repro.core import trainer as T
+        from repro.data.synthetic import make_world
+        from repro.core.graph_builder import build_graph
+        from repro.data.edge_dataset import build_neighbor_tables, EdgeDataset
+        cfg = RankGraph2Config(d_user_feat=64, d_item_feat=64, d_embed=16,
+                               n_heads=2, d_hidden=32, k_imp=6, k_train=4,
+                               n_negatives=8, n_pool_neg=4,
+                               rq=RQConfig(codebook_sizes=(8, 4), hist_len=8),
+                               dtype="float32")
+        world = make_world(n_users=150, n_items=200, seed=3)
+        g = build_graph(world.day0, k_cap=8, hub_cap=8)
+        tables = build_neighbor_tables(g, k_imp=6, n_walks=8, walk_len=3)
+        ds = EdgeDataset(g, tables, world.user_feat, world.item_feat, 4)
+        state, specs, opt = T.init_state(jax.random.key(0), cfg, pool_size=64)
+        step = jax.jit(T.make_train_step(cfg, opt))
+        batch = jax.tree.map(jnp.asarray,
+                             ds.sample_batch(0, 0, {"uu":16,"ui":16,"ii":16}))
+        state, m = step(state, batch, jax.random.key(7))
+        print("LOSS", float(m["total"]))
+    """)
+    o1 = _run_child(script % 1)
+    o4 = _run_child(script % 4)
+    l1 = float(o1.split("LOSS")[1])
+    l4 = float(o4.split("LOSS")[1])
+    # shard-local in-batch negatives (see core/negatives.py) make the
+    # multi-device loss a different — statistically equivalent —
+    # estimator; require the same scale, not bitwise equality.
+    np.testing.assert_allclose(l1, l4, rtol=0.05)
+
+
+@pytest.mark.slow
+def test_dryrun_mini_cell_compiles():
+    """A reduced dry-run inside a child with 512 fake devices — the
+    mesh-building + lower + compile path end-to-end."""
+    out = _run_child(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch.steps import build_cell
+        for mesh_kind in (False, True):
+            mesh = make_production_mesh(multi_pod=mesh_kind)
+            cell = build_cell("sasrec", "serve_p99", mesh)
+            with mesh:
+                c = jax.jit(cell.fn, in_shardings=cell.in_shardings
+                            ).lower(*cell.args).compile()
+            assert c.cost_analysis() is not None
+        print("DRYRUN_OK")
+    """))
+    assert "DRYRUN_OK" in out

@@ -1,0 +1,136 @@
+"""Graph-construction unit + property tests (paper §4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph_builder as GB
+
+
+def _log(n_ev=400, nu=40, ni=60, seed=0):
+    rng = np.random.default_rng(seed)
+    return GB.EngagementLog(
+        user_id=rng.integers(0, nu, n_ev),
+        item_id=rng.integers(0, ni, n_ev),
+        event_type=rng.integers(0, 4, n_ev).astype(np.int32),
+        timestamp=rng.random(n_ev) * 86400, n_users=nu, n_items=ni)
+
+
+def test_ui_edges_aggregate_events():
+    log = _log()
+    ui = GB.build_ui_edges(log)
+    assert len(ui) > 0
+    # weights = sum of event weights per (u, i)
+    w = np.array([GB.DEFAULT_EVENT_WEIGHTS[int(t)] for t in log.event_type])
+    key = log.user_id * log.n_items + log.item_id
+    expect = {}
+    for k, ww in zip(key, w):
+        expect[k] = expect.get(k, 0.0) + ww
+    got = {int(s) * log.n_items + int(d): float(wt)
+           for s, d, wt in zip(ui.src, ui.dst, ui.weight)}
+    assert set(got) == set(int(k) for k in expect)
+    for k in got:
+        np.testing.assert_allclose(got[k], expect[k], rtol=1e-5)
+
+
+def test_co_engagement_symmetry_and_threshold():
+    log = _log()
+    ui = GB.build_ui_edges(log)
+    uu = GB.build_uu_edges(ui, log.n_users, min_common=2, hub_cap=64)
+    # undirected: both directions present with equal weight
+    fwd = {(int(s), int(d)): float(w)
+           for s, d, w in zip(uu.src, uu.dst, uu.weight)}
+    for (s, d), w in fwd.items():
+        assert (d, s) in fwd
+        np.testing.assert_allclose(fwd[(d, s)], w, rtol=1e-6)
+        assert s != d
+
+
+def test_co_engagement_matches_bruteforce():
+    """With hub_cap >= max item degree the pair weights follow Eq. 1."""
+    log = _log(n_ev=200, nu=15, ni=20, seed=3)
+    ui = GB.build_ui_edges(log)
+    uu = GB.build_uu_edges(ui, log.n_users, min_common=2, hub_cap=1000)
+    # brute force
+    by_item = {}
+    for s, d, w in zip(ui.src, ui.dst, ui.weight):
+        by_item.setdefault(int(d), []).append((int(s), float(w)))
+    pair_w, pair_c = {}, {}
+    for users in by_item.values():
+        for a in range(len(users)):
+            for b in range(a + 1, len(users)):
+                u1, w1 = users[a]
+                u2, w2 = users[b]
+                kk = (min(u1, u2), max(u1, u2))
+                pair_w[kk] = pair_w.get(kk, 0.0) + w1 * w2
+                pair_c[kk] = pair_c.get(kk, 0) + 1
+    expect = {k: max(np.log(v), 1e-3) for k, v in pair_w.items()
+              if pair_c[k] >= 2}
+    got = {(int(s), int(d)): float(w)
+           for s, d, w in zip(uu.src, uu.dst, uu.weight) if s < d}
+    assert set(got) == set(expect)
+    for k in got:
+        np.testing.assert_allclose(got[k], expect[k], rtol=1e-4)
+
+
+def test_popularity_bias_correction_downweights_hubs():
+    # star: node 0 is popular (edges to 1..9); pair (1,2) is niche
+    n = 10
+    src = np.array([0] * 9 + list(range(1, 10)) + [1, 2])
+    dst = np.array(list(range(1, 10)) + [0] * 9 + [2, 1])
+    w = np.ones(len(src), np.float32)
+    e = GB.popularity_bias_correction(GB.EdgeSet(src, dst, w), n, alpha=0.3)
+    # edge into hub 0 should be strongly downweighted vs edge into leaf 2
+    into_hub = e.weight[(e.dst == 0) & (e.src == 1)][0]
+    into_leaf = e.weight[(e.dst == 2) & (e.src == 1)][0]
+    assert into_hub < into_leaf
+    # asymmetry: (1->0) != (0->1) after correction
+    rev = e.weight[(e.src == 0) & (e.dst == 1)][0]
+    assert abs(into_hub - rev) > 1e-6
+
+
+@given(st.integers(1, 8), st.integers(5, 60))
+@settings(max_examples=20, deadline=None)
+def test_topk_per_node_property(k_cap, n_edges):
+    rng = np.random.default_rng(n_edges)
+    e = GB.EdgeSet(rng.integers(0, 5, n_edges),
+                   rng.integers(0, 9, n_edges),
+                   rng.random(n_edges).astype(np.float32))
+    out = GB.topk_per_node(e, 5, k_cap)
+    # per node: at most k_cap edges, and they are the max-weight ones
+    for node in range(5):
+        kept = np.sort(out.weight[out.src == node])[::-1]
+        alln = np.sort(e.weight[e.src == node])[::-1]
+        assert len(kept) == min(k_cap, len(alln))
+        np.testing.assert_allclose(kept, alln[: len(kept)], rtol=1e-6)
+
+
+def test_full_build_and_groups(tiny_graph):
+    g = tiny_graph
+    assert g.n_edges > 0
+    # every uu-src is marked group1
+    assert g.group1_users[g.uu.src].all()
+    assert g.group1_items[g.ii.src].all()
+    # subsampling respected
+    for es, n in ((g.ui, g.n_users), (g.uu, g.n_users), (g.ii, g.n_items)):
+        if len(es):
+            counts = np.bincount(es.src, minlength=n)
+            assert counts.max() <= 16
+
+
+def test_retain_users_by_value():
+    log = _log()
+    ui = GB.build_ui_edges(log)
+    mask = GB.retain_users_by_value(ui, log.n_users, budget=10)
+    assert mask.sum() == 10
+    val = np.zeros(log.n_users)
+    np.add.at(val, ui.src, ui.weight)
+    assert val[mask].min() >= np.sort(val)[-10 - 1] - 1e-6
+
+
+def test_padded_adjacency_topweight_order():
+    e = GB.EdgeSet(np.array([0, 0, 0, 1]), np.array([1, 2, 3, 0]),
+                   np.array([1.0, 3.0, 2.0, 5.0], np.float32))
+    nbrs, wts = GB.padded_adjacency(e, 2, 2)
+    assert list(nbrs[0]) == [2, 3]        # by weight desc
+    assert list(nbrs[1]) == [0, -1]
+    assert wts[1, 1] == 0.0

@@ -1,0 +1,141 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.core import l2_normalize
+
+
+# ---------------------------------------------------------------------------
+# rq_assign
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,d,sizes", [
+    (64, 32, (16,)), (100, 64, (32, 8)), (256, 128, (500, 50)),
+    (33, 16, (7, 5, 3)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rq_assign_sweep(B, d, sizes, dtype):
+    from repro.kernels.rq_assign.ops import rq_assign
+    from repro.kernels.rq_assign.ref import rq_assign_ref
+    key = jax.random.key(B + d)
+    ks = jax.random.split(key, len(sizes) + 1)
+    x = jax.random.normal(ks[0], (B, d), dtype)
+    books = [jax.random.normal(ks[i + 1], (n, d), dtype) * 0.5
+             for i, n in enumerate(sizes)]
+    ck, rk = rq_assign(x, books, use_kernel=True, block_b=64)
+    cr, rr = rq_assign_ref(x, books)
+    # codes are discrete: identical unless distance ties (break by value)
+    same = (np.asarray(ck) == np.asarray(cr)).mean()
+    assert same > 0.99, f"code agreement {same}"
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    mask = (np.asarray(ck) == np.asarray(cr)).all(axis=1)
+    np.testing.assert_allclose(np.asarray(rk)[mask], np.asarray(rr)[mask],
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("V,D,B,L", [(50, 16, 8, 3), (300, 64, 16, 8),
+                                     (1000, 32, 5, 1)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_embedding_bag_sweep(V, D, B, L, mode, weighted):
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    key = jax.random.key(V + D)
+    k1, k2, k3 = jax.random.split(key, 3)
+    table = jax.random.normal(k1, (V, D))
+    ids = jax.random.randint(k2, (B, L), -1, V)
+    w = jax.random.uniform(k3, (B, L)) if weighted else None
+    out_k = embedding_bag(table, ids, w, mode, True)
+    out_r = embedding_bag_ref(table, ids, w, mode)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_embedding_bag_grad_matches_autodiff():
+    from repro.kernels.embedding_bag.ops import embedding_bag
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    key = jax.random.key(0)
+    table = jax.random.normal(key, (40, 8))
+    ids = jax.random.randint(jax.random.key(1), (6, 4), -1, 40)
+    w = jax.random.uniform(jax.random.key(2), (6, 4))
+    for mode in ("sum", "mean"):
+        g1 = jax.grad(lambda t: jnp.sum(
+            embedding_bag(t, ids, w, mode, False) ** 2))(table)
+        g2 = jax.grad(lambda t: jnp.sum(
+            embedding_bag_ref(t, ids, w, mode) ** 2))(table)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=2e-4, atol=1e-5)
+        gw1 = jax.grad(lambda ww: jnp.sum(
+            embedding_bag(table, ids, ww, mode, False) ** 2))(w)
+        gw2 = jax.grad(lambda ww: jnp.sum(
+            embedding_bag_ref(table, ids, ww, mode) ** 2))(w)
+        np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2),
+                                   rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,T,D,causal", [
+    (2, 4, 2, 256, 256, 64, True),
+    (1, 2, 2, 200, 200, 32, True),       # ragged
+    (2, 4, 1, 1, 300, 64, True),         # decode
+    (1, 2, 2, 128, 256, 64, False),      # cross
+    (1, 8, 8, 96, 96, 128, True),
+])
+def test_flash_attention_sweep(B, Hq, Hkv, S, T, D, causal):
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    key = jax.random.key(S + T)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, T, D))
+    v = jax.random.normal(ks[2], (B, Hkv, T, D))
+    o_k = flash_attention(q, k, v, causal=causal)
+    o_r = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    key = jax.random.key(9)
+    q = jax.random.normal(key, (1, 2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, 2, 128, 64), jnp.bfloat16)
+    o_k = flash_attention(q, k, v).astype(jnp.float32)
+    o_r = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# fused contrastive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,N,d", [(64, 100, 32), (200, 50, 128),
+                                   (7, 10, 16)])
+def test_fused_contrastive_sweep(B, N, d):
+    from repro.kernels.fused_contrastive.fused_contrastive import (
+        fused_contrastive)
+    from repro.kernels.fused_contrastive.ref import contrastive_ref
+    key = jax.random.key(B + N)
+    ks = jax.random.split(key, 3)
+    src = l2_normalize(jax.random.normal(ks[0], (B, d)))
+    dst = l2_normalize(jax.random.normal(ks[1], (B, d)))
+    negs = l2_normalize(jax.random.normal(ks[2], (B, N, d)))
+    mk, ik = fused_contrastive(src, dst, negs)
+    mr, ir = contrastive_ref(src, dst, negs)
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(mr), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ik), np.asarray(ir), rtol=1e-4,
+                               atol=1e-5)

@@ -1,0 +1,129 @@
+"""Optimizers + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers as O
+from repro.distributed import compression as C
+
+
+def _quadratic_converges(opt, steps=200, tol=1e-2):
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    target = jnp.array([1.0, 1.0, 1.0])
+    state = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        params = O.apply_updates(params, upd)
+    return float(jnp.max(jnp.abs(params["w"] - target))) < tol
+
+
+@pytest.mark.parametrize("name", ["sgd", "adagrad", "adamw", "adafactor"])
+def test_optimizers_converge_on_quadratic(name):
+    lr = {"sgd": 0.1, "adagrad": 0.5, "adamw": 0.1, "adafactor": 0.3}[name]
+    opt = O.make_optimizer(name, lr)
+    if name == "adamw":
+        opt = O.adamw(lr, weight_decay=0.0)
+    # adafactor's relative-update clipping makes it deliberately slower
+    steps, tol = (600, 5e-2) if name == "adafactor" else (200, 1e-2)
+    assert _quadratic_converges(opt, steps=steps, tol=tol)
+
+
+def test_adamw_matches_reference_step():
+    opt = O.adamw(0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    state = opt.init(p)
+    upd, _ = opt.update(g, state, p)
+    # first step: mhat = g, vhat = g^2  => step = -lr * g/(|g|+eps)
+    expect = -0.1 * np.array([0.5, -1.0]) / (np.abs([0.5, -1.0]) + 1e-8)
+    np.testing.assert_allclose(np.asarray(upd["w"]), expect, rtol=1e-5)
+
+
+def test_adafactor_state_is_factored():
+    opt = O.adafactor(0.01)
+    p = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((7,))}
+    st = opt.init(p)
+    assert st.vr["w"].shape == (64,)
+    assert st.vc["w"].shape == (32,)
+    assert st.vr["b"].shape == (7,)      # <2D keeps full stats
+
+
+def test_partition_routes_by_path():
+    calls = {"t": 0, "f": 0}
+
+    def spy(opt, tag):
+        def update(g, s, p):
+            calls[tag] += 1
+            return opt.update(g, s, p)
+        return O.Optimizer(opt.init, update)
+
+    opt = O.partition(lambda path, leaf: "table" in str(path),
+                      spy(O.adagrad(0.1), "t"), spy(O.adamw(0.1), "f"))
+    p = {"table": jnp.ones((4, 2)), "dense": jnp.ones((3,))}
+    g = jax.tree.map(jnp.ones_like, p)
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p)
+    assert calls == {"t": 1, "f": 1}
+    # adagrad step on table: -0.1 * 1/sqrt(1) = -0.1
+    np.testing.assert_allclose(np.asarray(upd["table"]), -0.1, rtol=1e-5)
+
+
+def test_rankgraph2_optimizer_splits_sparse_dense():
+    opt = O.rankgraph2_optimizer()
+    p = {"rq": {"codebooks": {"layer0": jnp.ones((4, 2))}},
+         "enc": {"w": jnp.ones((3, 3))}}
+    g = jax.tree.map(jnp.ones_like, p)
+    st = opt.init(p)
+    upd, _ = opt.update(g, st, p)
+    # codebooks routed to adagrad (lr .02): step -0.02; dense adamw -0.004
+    np.testing.assert_allclose(np.asarray(upd["rq"]["codebooks"]["layer0"]),
+                               -0.02, rtol=1e-4)
+    assert abs(float(upd["enc"]["w"][0, 0]) + 0.004) < 2e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0)}
+    clipped, norm = O.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 6.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        float(O.global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (256,)) * 5
+    y = C.int8_roundtrip(x)
+    assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.max(jnp.abs(x))) / 127
+
+
+def test_error_feedback_preserves_convergence():
+    base = O.sgd(0.2)
+    comp = C.compressed(base, scheme="int8")
+    params = {"w": jnp.array([4.0, -3.0])}
+    state = comp.init(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))(params)
+        upd, state = comp.update(g, state, params)
+        params = O.apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(params["w"]), 1.0, atol=1e-2)
+
+
+def test_powersgd_low_rank_and_ratio():
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (32, 16))
+    y = C.powersgd_roundtrip(x, rank=4, key=jax.random.key(2))
+    assert y.shape == x.shape
+    assert int(np.linalg.matrix_rank(np.asarray(y), tol=1e-4)) <= 4
+    ratio = C.compression_ratio({"w": x}, "powersgd", rank=4)
+    assert ratio < 0.5
+
+
+def test_compression_ratio_int8():
+    ratio = C.compression_ratio({"w": jnp.zeros((1000, 1000))}, "int8")
+    assert 0.24 < ratio < 0.26

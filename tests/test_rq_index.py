@@ -1,0 +1,122 @@
+"""Co-learned RQ index tests (paper §4.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RQConfig
+from repro.core import rq_index as RQ
+
+
+def _setup(sizes=(16, 8), d=12, B=64, seed=0):
+    cfg = RQConfig(codebook_sizes=sizes, hist_len=10)
+    params, specs, state = RQ.init_rq(jax.random.key(seed), cfg, d)
+    h = jax.random.normal(jax.random.key(seed + 1), (B, d))
+    return cfg, params, state, h
+
+
+def test_forward_shapes_and_losses():
+    cfg, params, state, h = _setup()
+    out = RQ.rq_forward(params, state, h, cfg)
+    assert out["codes"].shape == (64, 2)
+    assert out["recon"].shape == h.shape
+    assert float(out["l_recon"]) > 0
+    assert np.isfinite(float(out["l_reg"]))
+    # state advanced
+    assert int(out["state"].ptr) == 1
+
+
+def test_reconstruction_improves_with_training():
+    cfg, params, state, h = _setup()
+    from repro.optim.optimizers import adamw, apply_updates
+    opt = adamw(5e-2, weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, state):
+        def loss(p):
+            out = RQ.rq_forward(p, state, h, cfg)
+            return out["l_recon"], out["state"]
+        (l, new_state), g = jax.value_and_grad(loss, has_aux=True)(params)
+        upd, opt_state = opt.update(g, opt_state, params)
+        return apply_updates(params, upd), opt_state, new_state, l
+
+    l0 = None
+    for t in range(60):
+        params, opt_state, state, l = step(params, opt_state, state)
+        l0 = l0 if l0 is not None else float(l)
+    assert float(l) < 0.5 * l0, (l0, float(l))
+
+
+def test_recon_equals_sum_of_selected_codes():
+    cfg, params, state, h = _setup()
+    out = RQ.rq_forward(params, state, h, cfg, train=False)
+    rec = RQ.reconstruct(params, out["codes"], cfg)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(out["recon"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_unbiased_assignment_is_nearest():
+    """With biased_selection off, Eq. 9 argmin must hold per layer."""
+    cfg, params, state, h = _setup()
+    import dataclasses as dc
+    cfg = dc.replace(cfg, biased_selection=False)
+    out = RQ.rq_forward(params, state, h, cfg, train=True)
+    C0 = np.asarray(params["codebooks"]["layer0"])
+    d2 = ((np.asarray(h)[:, None] - C0[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.asarray(out["codes"][:, 0]),
+                                  d2.argmin(1))
+
+
+def test_biased_selection_favors_underused_codes():
+    cfg, params, state, h = _setup(sizes=(8,))
+    # fake history: code 0 used overwhelmingly
+    hist = state.hists[0].at[:, 0].set(100.0)
+    state = RQ.RQState((hist,), state.ptr, state.filled)
+    out_b = RQ.rq_forward(params, state, h, cfg, train=True)
+    import dataclasses as dc
+    out_u = RQ.rq_forward(params, state, h,
+                          dc.replace(cfg, biased_selection=False))
+    used_b = np.bincount(np.asarray(out_b["codes"][:, 0]), minlength=8)
+    used_u = np.bincount(np.asarray(out_u["codes"][:, 0]), minlength=8)
+    assert used_b[0] <= used_u[0]      # over-used code gets de-prioritized
+
+
+def test_assign_codes_flat_roundtrip():
+    cfg, params, state, h = _setup(sizes=(5, 3))
+    flat = np.asarray(RQ.assign_codes(params, h, cfg))
+    assert flat.min() >= 0 and flat.max() < 15
+    # agrees with unbiased forward
+    import dataclasses as dc
+    out = RQ.rq_forward(params, state, h,
+                        dc.replace(cfg, biased_selection=False),
+                        train=False)
+    codes = np.asarray(out["codes"])
+    np.testing.assert_array_equal(flat, codes[:, 0] * 3 + codes[:, 1])
+
+
+def test_codebook_utilization_range():
+    cfg, params, state, h = _setup()
+    out = RQ.rq_forward(params, state, h, cfg)
+    util = RQ.codebook_utilization(out["state"])
+    assert all(0.0 <= u <= 1.0 for u in util)
+    assert util[0] > 0
+
+
+def test_regularizer_zero_when_disabled():
+    import dataclasses as dc
+    cfg, params, state, h = _setup()
+    out = RQ.rq_forward(params, state, h,
+                        dc.replace(cfg, regularize=False))
+    assert float(out["l_reg"]) == 0.0
+
+
+def test_straight_through_gradient_reaches_encoder():
+    cfg, params, state, h = _setup()
+
+    def f(h):
+        out = RQ.rq_forward(params, state, h, cfg)
+        return jnp.sum(out["recon_st"] ** 2)
+
+    g = jax.grad(f)(h)
+    assert float(jnp.abs(g).sum()) > 0
