@@ -8,6 +8,7 @@ that backs the kernel-level roofline notes in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict
 
@@ -93,9 +94,89 @@ def run(full: bool = False) -> Dict:
                                   vmem_tile_bytes=(128 * 64 * 3 + 128 * 128)
                                   * 4)
 
+    # queue_gather: fused serving gather-union, kernel vs oracle
+    from repro.core.serving import ClusterQueueStore, u2i2i_retrieve
+    from repro.kernels.queue_gather.ops import queue_gather
+    from repro.kernels.queue_gather.ref import queue_gather_ref
+    rng = np.random.default_rng(0)
+    n_users, n_items, C, Q = 2000, 4000, 256, 256
+    store = ClusterQueueStore(rng.integers(0, C, n_users), queue_len=Q,
+                              recency_s=900.0)
+    n_ev = 50_000 if not full else 200_000
+    store.ingest(rng.integers(0, n_users, n_ev),
+                 rng.integers(0, n_items, n_ev),
+                 rng.integers(0, 1800, n_ev).astype(float))
+    i2i = rng.integers(0, n_items, (n_items, 16))
+    now, R, topk = 1800.0, 8, 32
+    cutoff = store.rel_cutoff(now)
+    users_small = rng.integers(0, n_users, 32)
+    cl = store.user_clusters[users_small]
+    sk, uk = queue_gather(store.items, store.times, store.cursor, cl, i2i,
+                          cutoff=cutoff, n_recent=R, k=topk)
+    sr, ur = queue_gather_ref(store.items, store.times, store.cursor, cl,
+                              i2i, cutoff=cutoff, n_recent=R, k=topk)
+    ok = bool((np.asarray(sk) == sr).all() and (np.asarray(uk) == ur).all())
+    t_ref = _time(lambda c: queue_gather_ref(
+        store.items, store.times, store.cursor, c, i2i,
+        cutoff=cutoff, n_recent=R, k=topk), cl)
+    out["queue_gather"] = dict(
+        agree=ok, ref_us=t_ref * 1e6,
+        vmem_bytes=2 * Q * 4 + i2i.size * 4 + R * topk * 4,
+        bytes_gathered_per_req=Q * 12 + R * i2i.shape[1] * 4)
+
+    # batched serving engine vs the per-request loop (the tentpole win):
+    # the acceptance bar is >=10x at batch >= 1024 on CPU
+    B = 1024
+    users = rng.integers(0, n_users, B)
+    store.retrieve_batch(users, now, topk)            # warm
+    t_batched, t_loop = np.inf, np.inf
+    for _ in range(3):                                # min-of-3: noise-proof
+        t0 = time.perf_counter()
+        batched = store.retrieve_batch(users, now, topk)
+        t_batched = min(t_batched, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        looped = [store.retrieve(int(u), now, topk) for u in users]
+        t_loop = min(t_loop, time.perf_counter() - t0)
+    same = all([int(i) for i in row if i >= 0] == lo
+               for row, lo in zip(batched, looped))
+    speedup = t_loop / max(t_batched, 1e-9)
+    out["batched_retrieve"] = dict(
+        agree=bool(same), batch=B, batched_us_per_req=t_batched / B * 1e6,
+        loop_us_per_req=t_loop / B * 1e6, speedup=speedup)
+
+    seeds = store.retrieve_batch(users, now, R)
+    from repro.core.serving import u2i2i_retrieve_batch
+    u2i2i_retrieve_batch(i2i, seeds, topk)            # warm
+    t_ub, t_ul = np.inf, np.inf
+    for _ in range(3):
+        t0 = time.perf_counter()
+        ub = u2i2i_retrieve_batch(i2i, seeds, topk)
+        t_ub = min(t_ub, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ul = [u2i2i_retrieve(i2i, [int(i) for i in row if i >= 0], topk)
+              for row in seeds]
+        t_ul = min(t_ul, time.perf_counter() - t0)
+    same = all([int(i) for i in row if i >= 0] == lo
+               for row, lo in zip(ub, ul))
+    out["batched_u2i2i"] = dict(
+        agree=bool(same), batch=B, batched_us_per_req=t_ub / B * 1e6,
+        loop_us_per_req=t_ul / B * 1e6,
+        speedup=t_ul / max(t_ub, 1e-9))
+
     print("\nKernel microbenchmarks (interpret-mode agreement + footprint):")
     for name, r in out.items():
-        print(f"  {name:<18s} agree={r['agree']} ref_us={r['ref_us']:.0f}")
+        print(f"  {name:<18s} agree={r['agree']} ref_us="
+              f"{r.get('ref_us', 0):.0f}"
+              + (f" speedup={r['speedup']:.1f}x" if "speedup" in r else ""))
     assert all(r["agree"] for r in out.values()), "kernel mismatch!"
+    # acceptance bar: >= 10x locally; CI on noisy shared runners can
+    # lower it via SERVING_MIN_SPEEDUP without losing the regression gate
+    min_speedup = float(os.environ.get("SERVING_MIN_SPEEDUP", "10"))
+    assert out["batched_retrieve"]["speedup"] >= min_speedup, \
+        f"batched retrieve speedup {out['batched_retrieve']['speedup']:.1f}x"
     write_result("serving_kernels", out)
     return out
+
+
+if __name__ == "__main__":
+    run()

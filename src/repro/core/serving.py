@@ -1,4 +1,4 @@
-"""KNN-free serving (paper §4.4).
+"""KNN-free serving (paper §4.4) — batched, array-backed engine.
 
 U2U2I: each user carries a hierarchical cluster code (k1, k2) from the
 co-learned RQ index; each cluster keeps a recency-filtered queue of items
@@ -9,17 +9,109 @@ user pool.
 U2I2I: item embeddings change slowly, so I2I KNN is pre-computed offline;
 serving unions the similar-item lists of the user's recent items.
 
+The store is a flat ring buffer: preallocated ``(n_clusters, queue_len)``
+item/timestamp arrays plus a per-cluster write cursor.  ``ingest`` and
+``retrieve_batch`` are fully vectorized over events/requests — the
+per-request ``retrieve`` of the seed implementation survives as a thin
+wrapper over a batch of one.  The fused cluster-gather + I2I-union pass
+also exists as a Pallas kernel (``repro.kernels.queue_gather``) driven
+by ``serve_batch(..., use_kernel=True)``.
+
 ``ServingCostModel`` quantifies the paper's 83% claim: FLOPs + bytes per
 request for online-KNN vs cluster-lookup serving at a given active-pool
-size and traffic.
+size, traffic, and request batch size.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# batched row utilities (shared by U2U2I and U2I2I paths)
+# ---------------------------------------------------------------------------
+
+class BufPool:
+    """Named scratch-buffer cache so the steady-state serving path runs
+    allocation-free (fresh multi-MB temporaries each request batch cost
+    more in page faults than the actual compute).
+
+    Single-threaded by design — the buffers are reused in place, so a
+    pool (and any store that owns one) must not serve concurrent
+    requests; give each serving thread its own store/pool."""
+
+    def __init__(self):
+        self._bufs: Dict[str, np.ndarray] = {}
+
+    def get(self, name: str, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        buf = self._bufs.get(name)
+        if buf is None or buf.shape != shape or buf.dtype != dtype:
+            buf = np.empty(shape, dtype)
+            self._bufs[name] = buf
+        return buf
+
+
+_POOL = BufPool()        # default pool for the module-level entry points
+
+
+def dedup_topk_rows(cand: np.ndarray, prio: np.ndarray, valid: np.ndarray,
+                    k: int, prio_bound: int,
+                    pool: Optional[BufPool] = None) -> np.ndarray:
+    """Per row: among ``valid`` entries, dedup items keeping the
+    lowest-priority occurrence, then emit the ``k`` lowest-priority
+    survivors in priority order as ``(B, k)`` int64, ``-1``-padded.
+
+    ``prio`` must be unique per row and ``< prio_bound`` wherever valid.
+    One unstable composite-key sort (item * P + priority packs both the
+    dedup grouping and the within-item winner into a single ordered
+    pass) plus an O(Q) top-k partition — no stable sorts, no scatters,
+    no allocations beyond the (B, k) result.
+    """
+    pool = pool if pool is not None else _POOL
+    B, M = cand.shape
+    pshift = max(int(prio_bound - 1).bit_length(), 1)  # P = 2^pshift
+    P = 1 << pshift
+    ishift = max(int(cand.max(initial=0)).bit_length(), 1)
+    dt = np.int32 if pshift + ishift < 31 else np.int64
+    big = np.iinfo(dt).max
+    # pass 1: sort on (item, prio) — groups duplicates, winner first.
+    # Value sorts throughout: the original column is never needed again,
+    # so no argsort/gather round-trips; key assembly is in-place.
+    key = pool.get("key", (B, M), dt)
+    scrap = pool.get("scrap", (B, M), bool)
+    np.left_shift(cand, pshift, out=key, dtype=dt)
+    np.add(key, prio, out=key)
+    np.logical_not(valid, out=scrap)
+    np.copyto(key, big, where=scrap)
+    key.sort(axis=1)
+    item = pool.get("item", (B, M), dt)
+    np.right_shift(key, pshift, out=item)
+    alive = pool.get("alive", (B, M), bool)
+    alive[:, 0] = True
+    np.not_equal(item[:, 1:], item[:, :-1], out=alive[:, 1:])  # dedup
+    # pass 2: re-pack winners as (prio, item) and select the k smallest
+    np.not_equal(key, big, out=scrap)
+    alive &= scrap
+    key2 = pool.get("key2", (B, M), dt)
+    np.bitwise_and(key, P - 1, out=key2)
+    np.left_shift(key2, ishift, out=key2)
+    np.bitwise_or(key2, item, out=key2)
+    np.logical_not(alive, out=alive)
+    np.copyto(key2, big, where=alive)
+    kk = min(k, M)
+    if kk < M:
+        key2.partition(kk - 1, axis=1)
+        key2 = key2[:, :kk]
+    key2.sort(axis=1)
+    out = np.where(key2 != big,
+                   key2 & ((1 << ishift) - 1), -1).astype(np.int64)
+    if out.shape[1] < k:
+        out = np.pad(out, ((0, 0), (0, k - out.shape[1])),
+                     constant_values=-1)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -27,93 +119,232 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 class ClusterQueueStore:
-    """Real-time per-cluster item queues with recency filtering."""
+    """Real-time per-cluster item queues with recency filtering.
+
+    Flat ring-buffer layout: ``items``/``times`` are dense
+    ``(n_clusters, queue_len)`` arrays and ``cursor[c]`` counts total
+    writes into cluster ``c`` (write position = ``cursor % queue_len``,
+    fill level = ``min(cursor, queue_len)``) — O(1) eviction, no Python
+    containers anywhere on the serving path.
+    """
 
     def __init__(self, user_clusters: np.ndarray, *, queue_len: int = 256,
-                 recency_s: float = 900.0):
-        self.user_clusters = user_clusters        # (n_users,) flat codes
-        self.queue_len = queue_len
-        self.recency_s = recency_s
-        self.queues: Dict[int, deque] = {}
+                 recency_s: float = 900.0, n_clusters: Optional[int] = None):
+        self.user_clusters = np.asarray(user_clusters, np.int64)
+        self.queue_len = int(queue_len)
+        self.recency_s = float(recency_s)
+        if n_clusters is None:
+            n_clusters = int(self.user_clusters.max()) + 1 \
+                if self.user_clusters.size else 1
+        self.n_clusters = int(n_clusters)
+        self.items = np.full((self.n_clusters, self.queue_len), -1, np.int32)
+        # timestamps are stored float32 relative to the first-seen event
+        # (absolute unix-epoch seconds lose ~100s of precision in f32)
+        self.times = np.full((self.n_clusters, self.queue_len), -np.inf,
+                             np.float32)
+        self.cursor = np.zeros(self.n_clusters, np.int64)
+        self.epoch: Optional[float] = None
+        self.pool = BufPool()          # steady-state request scratch
+
+    # -- ingestion ----------------------------------------------------------
 
     def ingest(self, user_ids: np.ndarray, item_ids: np.ndarray,
                timestamps: np.ndarray) -> None:
-        """Stream engagement events into their users' cluster queues."""
+        """Stream a batch of engagement events into their users' cluster
+        ring buffers (vectorized; oldest-to-newest so the ring order is
+        the time order within the batch)."""
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        if user_ids.size == 0:
+            return
+        ts = np.asarray(timestamps, np.float64).ravel()
+        if self.epoch is None:
+            self.epoch = float(ts.min())
+        ts = (ts - self.epoch).astype(np.float32)
+        order = np.argsort(ts, kind="stable")
+        cl = self.user_clusters[user_ids[order]]
+        it = np.asarray(item_ids, np.int64).ravel()[order]
+        ts = ts[order]
+
+        # per-cluster arrival rank (stable sort by cluster keeps time order)
+        by_cl = np.argsort(cl, kind="stable")
+        cl_sorted = cl[by_cl]
+        boundary = np.r_[True, cl_sorted[1:] != cl_sorted[:-1]]
+        group_start = np.maximum.accumulate(
+            np.where(boundary, np.arange(cl.size), 0))
+        rank = np.empty(cl.size, np.int64)
+        rank[by_cl] = np.arange(cl.size) - group_start
+
+        slot = (self.cursor[cl] + rank) % self.queue_len
+        # keep only the final write per (cluster, slot): with more events
+        # than queue_len for one cluster in a single batch, older events
+        # fall straight through the ring
+        key = cl * self.queue_len + slot
+        _, last = np.unique(key[::-1], return_index=True)
+        last = cl.size - 1 - last
+        self.items[cl[last], slot[last]] = it[last]
+        self.times[cl[last], slot[last]] = ts[last]
+        uniq, counts = np.unique(cl, return_counts=True)
+        self.cursor[uniq] += counts
+
+    # -- retrieval ----------------------------------------------------------
+
+    def rel_cutoff(self, now: float) -> float:
+        """Recency cutoff in the store's internal (epoch-relative) time."""
+        return now - self.recency_s - (self.epoch or 0.0)
+
+    def retrieve_batch(self, user_ids: np.ndarray, now: float,
+                       k: int) -> np.ndarray:
+        """Batched U2U2I: ``(B,)`` user ids -> ``(B, k)`` item ids,
+        newest-first, recency-filtered, deduped, ``-1``-padded.  One
+        vectorized pass over the whole request batch."""
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        Q = self.queue_len
+        B = user_ids.shape[0]
+        pool = self.pool
         cl = self.user_clusters[user_ids]
-        order = np.argsort(timestamps, kind="stable")
-        for c, it, ts in zip(cl[order], item_ids[order], timestamps[order]):
-            q = self.queues.get(int(c))
-            if q is None:
-                q = deque(maxlen=self.queue_len)
-                self.queues[int(c)] = q
-            q.append((float(ts), int(it)))
+        rows = np.take(self.items, cl, axis=0,
+                       out=pool.get("rows", (B, Q), np.int32))
+        ts = np.take(self.times, cl, axis=0,
+                     out=pool.get("ts", (B, Q), np.float32))
+        total = self.cursor[cl]                              # (B,)
+        head = (total % Q).astype(np.int32)
+        slot = np.arange(Q, dtype=np.int32)[None, :]
+        age = pool.get("age", (B, Q), np.int32)
+        np.subtract(head[:, None], slot + 1, out=age)
+        if Q & (Q - 1) == 0:                                 # pow2 fast path
+            np.bitwise_and(age, Q - 1, out=age)              # newest = 0
+        else:
+            np.mod(age, Q, out=age)
+        valid = pool.get("valid", (B, Q), bool)
+        mask = pool.get("mask", (B, Q), bool)
+        np.greater_equal(ts, np.float32(self.rel_cutoff(now)), out=valid)
+        np.less(age, np.minimum(total, Q)[:, None], out=mask)
+        valid &= mask
+        np.greater_equal(rows, 0, out=mask)
+        valid &= mask
+        return dedup_topk_rows(rows, age, valid, k, Q, pool)
 
     def retrieve(self, user_id: int, now: float, k: int) -> List[int]:
-        """U2U2I = read latest recency-filtered items of the user's cluster."""
-        q = self.queues.get(int(self.user_clusters[user_id]))
-        if not q:
-            return []
-        cutoff = now - self.recency_s
-        out: List[int] = []
-        seen = set()
-        for ts, it in reversed(q):            # newest first
-            if ts < cutoff:
-                break
-            if it not in seen:
-                seen.add(it)
-                out.append(it)
-            if len(out) >= k:
-                break
-        return out
+        """Legacy single-request U2U2I — a batch of one."""
+        row = self.retrieve_batch(np.array([user_id]), now, k)[0]
+        return [int(i) for i in row if i >= 0]
+
+    def serve_batch(self, user_ids: np.ndarray, now: float, *,
+                    n_recent: int = 8, k: int = 32,
+                    i2i: Optional[np.ndarray] = None,
+                    use_kernel: bool = False
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Full serving pass: U2U2I seeds ``(B, n_recent)`` plus — when an
+        ``i2i`` table is given — the U2I2I round-robin union ``(B, k)``.
+        ``use_kernel=True`` routes through the fused Pallas
+        ``queue_gather`` kernel instead of the numpy path."""
+        if i2i is not None and use_kernel:
+            from repro.kernels.queue_gather.ops import queue_gather
+            seeds, union = queue_gather(
+                self.items, self.times, self.cursor,
+                self.user_clusters[np.asarray(user_ids, np.int64)], i2i,
+                cutoff=self.rel_cutoff(now), n_recent=n_recent, k=k)
+            return np.asarray(seeds, np.int64), np.asarray(union, np.int64)
+        seeds = self.retrieve_batch(user_ids, now, n_recent)
+        if i2i is None:
+            return seeds, np.full((seeds.shape[0], k), -1, np.int64)
+        return seeds, u2i2i_retrieve_batch(i2i, seeds, k)
 
     def stats(self) -> Dict[str, float]:
-        sizes = [len(q) for q in self.queues.values()]
-        return dict(n_clusters_active=len(sizes),
-                    mean_queue=float(np.mean(sizes)) if sizes else 0.0)
+        fill = np.minimum(self.cursor, self.queue_len)
+        active = fill > 0
+        return dict(n_clusters_active=int(active.sum()),
+                    mean_queue=float(fill[active].mean())
+                    if active.any() else 0.0)
 
 
 # ---------------------------------------------------------------------------
 # offline I2I KNN (U2I2I)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=8)
+def _topk_scorer(kk: int, exclude_self: bool):
+    """Jitted chunk scorer: cosine top-k against the full item set with
+    the diagonal masked.  One compile per (k, exclude_self); chunk rows
+    are padded to a fixed shape so every chunk hits the same trace."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def score(chunk_e, all_e, row0):
+        sims = chunk_e @ all_e.T                             # (C, n)
+        if exclude_self:
+            cols = jnp.arange(sims.shape[1])[None, :]
+            own = row0 + jnp.arange(sims.shape[0])[:, None]
+            sims = jnp.where(cols == own, -jnp.inf, sims)
+        _, idx = jax.lax.top_k(sims, kk)
+        return idx
+
+    return score
+
+
 def build_i2i_knn(item_emb: np.ndarray, k: int, *, chunk: int = 2048,
                   exclude_self: bool = True) -> np.ndarray:
     """(n_items, k) most-similar items by cosine; computed offline after
-    each embedding refresh (cheap: item embeddings update infrequently)."""
+    each embedding refresh (cheap: item embeddings update infrequently).
+    The chunk loop runs a single jitted top-k scorer — no per-row numpy
+    argpartition/argsort passes."""
     e = item_emb / np.maximum(
         np.linalg.norm(item_emb, axis=1, keepdims=True), 1e-8)
+    e = e.astype(np.float32)
     n = len(e)
     kk = min(k, n - 1)
+    chunk = min(chunk, n)
+    score = _topk_scorer(kk, exclude_self)
     out = np.empty((n, kk), np.int64)
     for lo in range(0, n, chunk):
         hi = min(n, lo + chunk)
-        sims = e[lo:hi] @ e.T
-        if exclude_self:
-            sims[np.arange(hi - lo), np.arange(lo, hi)] = -np.inf
-        top = np.argpartition(-sims, kk - 1, axis=1)[:, :kk]
-        rows = np.arange(hi - lo)[:, None]
-        o = np.argsort(-sims[rows, top], axis=1, kind="stable")
-        out[lo:hi] = top[rows, o]
+        rows = e[lo:hi]
+        if hi - lo < chunk:                      # pad: keep one traced shape
+            rows = np.pad(rows, ((0, chunk - (hi - lo)), (0, 0)))
+        out[lo:hi] = np.asarray(score(rows, e, lo))[: hi - lo]
     if kk < k:
         out = np.pad(out, ((0, 0), (0, k - kk)), constant_values=-1)
     return out
 
 
+def u2i2i_retrieve_batch(i2i: np.ndarray, recent_items: np.ndarray,
+                         k: int) -> np.ndarray:
+    """Batched U2I2I: union the similar-item lists of each row's recent
+    items ``(B, R)`` (``-1`` = padding), round-robin across ranks to
+    preserve per-seed ordering, mask the seeds themselves, dedup, and
+    return ``(B, k)`` ``-1``-padded candidates."""
+    recent = np.asarray(recent_items, np.int64)
+    B, R = recent.shape
+    K = i2i.shape[1]
+    nonneg = recent >= 0
+    # seeds past the end of the table contribute no neighbors (queues see
+    # brand-new items before the next offline I2I refresh covers them)
+    seeded = nonneg & (recent < i2i.shape[0])
+    cand = np.asarray(i2i, np.int32)[np.where(seeded, recent, 0)]  # (B,R,K)
+    cand = np.where(seeded[:, :, None], cand, -1)
+    flat = cand.reshape(B, R * K)                        # seed-major layout
+    # round-robin emission priority of the seed per-request loop (rank 0
+    # of every seed, then rank 1, ...) as a per-column key — no need to
+    # physically transpose into rank-major order
+    col = np.arange(R * K, dtype=np.int32)
+    prio = (col % K) * R + col // K
+    # every non-negative seed is masked from the union, including ones
+    # the table does not cover (a candidate may still equal them)
+    seen = (flat[:, :, None] ==
+            np.where(nonneg, recent, -2)[:, None, :]).any(axis=2)
+    valid = (flat >= 0) & ~seen
+    return dedup_topk_rows(flat, prio[None, :], valid, k, R * K)
+
+
 def u2i2i_retrieve(i2i: np.ndarray, recent_items: Sequence[int],
                    k: int) -> List[int]:
-    """Union of similar-item lists over the user's engaged items,
-    round-robin to preserve per-seed ranking."""
-    out: List[int] = []
-    seen = set(int(i) for i in recent_items)
-    for rank in range(i2i.shape[1]):
-        for it in recent_items:
-            cand = int(i2i[int(it), rank])
-            if cand >= 0 and cand not in seen:
-                seen.add(cand)
-                out.append(cand)
-                if len(out) >= k:
-                    return out
-    return out
+    """Legacy single-request U2I2I — a batch of one."""
+    recent = np.asarray(list(recent_items), np.int64).reshape(1, -1)
+    if recent.size == 0:
+        return []
+    row = u2i2i_retrieve_batch(i2i, recent, k)[0]
+    return [int(i) for i in row if i >= 0]
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +358,9 @@ class ServingCostModel:
     Online KNN: every request scores the query user against the active
     pool (exact or IVF-style approximate with n_probe fraction scanned).
     Cluster index: assign-once per embedding refresh (amortized ~0) +
-    O(1) queue read per request.
+    O(1) queue read per request.  ``batch_size`` models the batched
+    engine: per-launch fixed costs (cursor/metadata reads, dispatch) are
+    amortized across the request batch.
     """
     d: int = 256
     active_pool: int = 5_000_000       # recently-active users (15 min)
@@ -135,6 +368,13 @@ class ServingCostModel:
     n_probe_frac: float = 0.05         # ANN scans ~5% of the pool
     queue_read_items: int = 64
     rq_codes: Tuple[int, ...] = (5000, 50)
+    batch_size: int = 1
+    launch_bytes: float = 64 * 1024.0  # per-launch metadata + dispatch
+    launch_flops: float = 4 * 1024.0
+
+    def _batch(self, batch_size: Optional[int]) -> int:
+        return max(int(batch_size if batch_size is not None
+                       else self.batch_size), 1)
 
     def knn_flops_per_req(self, exact: bool = False) -> float:
         frac = 1.0 if exact else self.n_probe_frac
@@ -144,21 +384,26 @@ class ServingCostModel:
         frac = 1.0 if exact else self.n_probe_frac
         return 4.0 * self.d * self.active_pool * frac
 
-    def cluster_flops_per_req(self) -> float:
+    def cluster_flops_per_req(self, batch_size: Optional[int] = None
+                              ) -> float:
         # queue read: no dot products at request time; assignment cost is
         # amortized into the embedding-refresh batch job:
         assign = 2.0 * self.d * sum(self.rq_codes)      # per refresh
         refresh_period_s = 3 * 3600.0
         amortized = assign / max(self.qps * refresh_period_s /
                                  max(self.active_pool, 1), 1e-9)
-        return amortized
+        return amortized + self.launch_flops / self._batch(batch_size)
 
-    def cluster_bytes_per_req(self) -> float:
-        return 8.0 * self.queue_read_items + 8.0        # queue read + code
+    def cluster_bytes_per_req(self, batch_size: Optional[int] = None
+                              ) -> float:
+        # queue read + code read per request; launch cost amortized over
+        # the batch the vectorized engine serves per dispatch
+        return (8.0 * self.queue_read_items + 8.0
+                + self.launch_bytes / self._batch(batch_size))
 
-    def cost_reduction(self) -> float:
+    def cost_reduction(self, batch_size: Optional[int] = None) -> float:
         """Fractional serving-cost reduction (bytes+flops weighted by a
         machine-cost proxy: memory-bandwidth bound at serving tier)."""
         knn = self.knn_bytes_per_req()
-        cl = self.cluster_bytes_per_req()
+        cl = self.cluster_bytes_per_req(batch_size)
         return 1.0 - cl / max(knn, 1e-9)

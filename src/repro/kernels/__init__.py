@@ -1,3 +1,11 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Kernel families (each: <name>.py Pallas kernel + ref.py oracle +
+# ops.py dispatch):
+#   rq_assign          fused residual-quantization code assignment
+#   embedding_bag      scalar-prefetch gather + bag reduce
+#   fused_contrastive  margin/InfoNCE training tile
+#   flash_attention    online-softmax attention
+#   queue_gather       serving: cluster-queue gather + U2I2I union

@@ -1,0 +1,64 @@
+"""Per-request Python oracle for the fused queue-gather + I2I-union pass.
+
+Deliberately written as the obvious sequential algorithm (the seed
+implementation's deque scan + round-robin union) so it doubles as the
+readable spec the Pallas kernel and the vectorized numpy engine are both
+tested against:
+
+  1. U2U2I seeds: scan the request's cluster ring buffer newest-first,
+     drop entries older than ``cutoff``, dedup, keep the first
+     ``n_recent``.
+  2. U2I2I union: round-robin over ``i2i[seed]`` lists by rank
+     (rank 0 of every seed, then rank 1, ...), skip ``-1`` pads and any
+     item already a seed, dedup, keep the first ``k``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def queue_gather_ref(items: np.ndarray, times: np.ndarray,
+                     cursor: np.ndarray, clusters: np.ndarray,
+                     i2i: np.ndarray, *, cutoff: float, n_recent: int,
+                     k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """items/times (C, Q), cursor (C,) total writes, clusters (B,),
+    i2i (N, K).  Returns (seeds (B, n_recent), union (B, k)), both
+    ``-1``-padded int64."""
+    Q = items.shape[1]
+    K = i2i.shape[1]
+    B = len(clusters)
+    seeds = np.full((B, n_recent), -1, np.int64)
+    union = np.full((B, k), -1, np.int64)
+    for b, c in enumerate(np.asarray(clusters, np.int64)):
+        total = int(cursor[c])
+        row = []
+        seen = set()
+        for age in range(min(total, Q)):               # newest first
+            pos = (total - 1 - age) % Q
+            it, ts = int(items[c, pos]), float(times[c, pos])
+            if ts < cutoff or it < 0 or it in seen:
+                continue
+            seen.add(it)
+            row.append(it)
+            if len(row) >= n_recent:
+                break
+        seeds[b, :len(row)] = row
+
+        out = []
+        seen = set(row)
+        for rank in range(K):                          # round-robin
+            for it in row:
+                if it >= len(i2i):     # not yet covered by the I2I refresh
+                    continue
+                cand = int(i2i[it, rank])
+                if cand >= 0 and cand not in seen:
+                    seen.add(cand)
+                    out.append(cand)
+                    if len(out) >= k:
+                        break
+            if len(out) >= k:
+                break
+        union[b, :len(out)] = out
+    return seeds, union

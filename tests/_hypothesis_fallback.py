@@ -1,0 +1,31 @@
+"""Optional-hypothesis shim.
+
+The property-based tests ride alongside plain pytest tests in the same
+modules; importing this instead of ``hypothesis`` directly keeps those
+modules collectable without the dependency — property tests skip with a
+clear reason, everything else runs.  With hypothesis installed this is
+a pure re-export.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover - dep present
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """st.<anything>(...) -> None; only ever fed to the skip mark."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

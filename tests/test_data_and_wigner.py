@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.data.synthetic import make_world, next_day_ground_truth
 

@@ -1,7 +1,7 @@
 """Graph-construction unit + property tests (paper §4.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import graph_builder as GB
 

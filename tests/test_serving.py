@@ -1,0 +1,298 @@
+"""Batched serving engine: store semantics, batched-vs-legacy-loop
+equivalence, I2I KNN construction, the fused Pallas queue_gather kernel
+vs its oracle, and the production cost model."""
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core.serving import (ClusterQueueStore, ServingCostModel,
+                                build_i2i_knn, dedup_topk_rows,
+                                u2i2i_retrieve, u2i2i_retrieve_batch)
+
+
+# ---------------------------------------------------------------------------
+# legacy (seed) per-request implementations — the equivalence reference
+# ---------------------------------------------------------------------------
+
+class _LegacyDequeStore:
+    """The seed implementation: dict of per-cluster deques, scanned
+    newest-first per request with a Python set for dedup."""
+
+    def __init__(self, user_clusters, queue_len, recency_s):
+        self.user_clusters = user_clusters
+        self.queue_len = queue_len
+        self.recency_s = recency_s
+        self.queues = {}
+
+    def ingest(self, user_ids, item_ids, timestamps):
+        cl = self.user_clusters[user_ids]
+        order = np.argsort(timestamps, kind="stable")
+        for c, it, ts in zip(cl[order], item_ids[order], timestamps[order]):
+            q = self.queues.setdefault(int(c), deque(maxlen=self.queue_len))
+            q.append((float(ts), int(it)))
+
+    def retrieve(self, user_id, now, k):
+        q = self.queues.get(int(self.user_clusters[user_id]))
+        if not q:
+            return []
+        cutoff = now - self.recency_s
+        out, seen = [], set()
+        for ts, it in reversed(q):
+            if ts < cutoff:
+                break
+            if it not in seen:
+                seen.add(it)
+                out.append(it)
+            if len(out) >= k:
+                break
+        return out
+
+
+def _legacy_u2i2i(i2i, recent_items, k):
+    out = []
+    seen = set(int(i) for i in recent_items)
+    for rank in range(i2i.shape[1]):
+        for it in recent_items:
+            cand = int(i2i[int(it), rank])
+            if cand >= 0 and cand not in seen:
+                seen.add(cand)
+                out.append(cand)
+                if len(out) >= k:
+                    return out
+    return out
+
+
+def _row_list(row):
+    return [int(i) for i in row if i >= 0]
+
+
+# ---------------------------------------------------------------------------
+# ClusterQueueStore semantics
+# ---------------------------------------------------------------------------
+
+def test_recency_cutoff_and_dedup():
+    store = ClusterQueueStore(np.array([0, 0, 1]), queue_len=16,
+                              recency_s=100.0)
+    store.ingest(np.array([0, 1, 0, 2]), np.array([10, 11, 10, 99]),
+                 np.array([0.0, 50.0, 60.0, 70.0]))
+    assert store.retrieve(0, now=100.0, k=10) == [10, 11]  # newest first
+    assert store.retrieve(0, now=500.0, k=10) == []        # all stale
+    assert store.retrieve(2, now=100.0, k=10) == [99]      # isolation
+    assert store.retrieve(0, now=100.0, k=1) == [10]       # k cap
+
+
+def test_eviction_ring_wrap():
+    store = ClusterQueueStore(np.array([0]), queue_len=4, recency_s=1e9)
+    store.ingest(np.zeros(10, int), np.arange(10),
+                 np.arange(10, dtype=float))
+    # only the last queue_len events survive, newest first
+    assert store.retrieve(0, 10.0, 10) == [9, 8, 7, 6]
+    # a second ingest keeps wrapping
+    store.ingest(np.zeros(2, int), np.array([20, 21]),
+                 np.array([11.0, 12.0]))
+    assert store.retrieve(0, 12.0, 10) == [21, 20, 9, 8]
+
+
+def test_stats_and_empty_clusters():
+    store = ClusterQueueStore(np.array([0, 5]), queue_len=8,
+                              recency_s=10.0, n_clusters=7)
+    assert store.retrieve(1, 0.0, 4) == []                 # never ingested
+    store.ingest(np.array([0]), np.array([3]), np.array([1.0]))
+    s = store.stats()
+    assert s["n_clusters_active"] == 1 and s["mean_queue"] == 1.0
+
+
+def test_epoch_relative_times_survive_unix_scale():
+    """Absolute unix timestamps must not lose recency resolution to the
+    float32 queue storage."""
+    t0 = 1.7e9
+    store = ClusterQueueStore(np.array([0, 0]), queue_len=8, recency_s=5.0)
+    store.ingest(np.array([0, 1]), np.array([1, 2]),
+                 np.array([t0, t0 + 4.0]))
+    assert store.retrieve(0, now=t0 + 6.0, k=4) == [2]     # 1 is 6s stale
+    assert store.retrieve(0, now=t0 + 4.5, k=4) == [2, 1]
+
+
+def test_batched_retrieve_matches_legacy_loop():
+    rng = np.random.default_rng(0)
+    n_users, n_items, C = 300, 400, 24
+    clusters = rng.integers(0, C, n_users)
+    store = ClusterQueueStore(clusters, queue_len=32, recency_s=300.0)
+    legacy = _LegacyDequeStore(clusters, queue_len=32, recency_s=300.0)
+    ev = (rng.integers(0, n_users, 4000), rng.integers(0, n_items, 4000),
+          rng.integers(0, 1000, 4000).astype(float))
+    store.ingest(*ev)
+    legacy.ingest(*ev)
+    for now in (400.0, 900.0, 1500.0):
+        users = rng.integers(0, n_users, 256)
+        batched = store.retrieve_batch(users, now, 16)
+        for row, u in zip(batched, users):
+            assert _row_list(row) == legacy.retrieve(int(u), now, 16), \
+                (now, int(u))
+
+
+def test_batched_u2i2i_matches_legacy_loop():
+    rng = np.random.default_rng(1)
+    n_items = 200
+    i2i = rng.integers(-1, n_items, (n_items, 10))
+    recent = np.where(rng.random((64, 6)) < 0.2, -1,
+                      rng.integers(0, n_items, (64, 6)))
+    batched = u2i2i_retrieve_batch(i2i, recent, 20)
+    for row, rec in zip(batched, recent):
+        assert _row_list(row) == _legacy_u2i2i(i2i, _row_list(rec), 20)
+    # single-request wrapper == legacy loop too
+    for rec in recent[:8]:
+        assert (u2i2i_retrieve(i2i, _row_list(rec), 20)
+                == _legacy_u2i2i(i2i, _row_list(rec), 20))
+
+
+def test_u2i2i_round_robin_order_and_padding():
+    # seeds 0 and 1; rank-0 of both come before rank-1 of either
+    i2i = np.array([[10, 11], [20, 21], [30, 31]])
+    out = u2i2i_retrieve_batch(i2i, np.array([[0, 1]]), 6)[0]
+    assert out.tolist() == [10, 20, 11, 21, -1, -1]
+    # -1 pads in both the seed list and the table are skipped
+    i2i2 = np.array([[10, -1], [20, 21], [30, 31]])
+    out = u2i2i_retrieve_batch(i2i2, np.array([[0, -1, 1]]), 6)[0]
+    assert out.tolist() == [10, 20, 21, -1, -1, -1]
+    # seeds themselves are masked out of the union
+    i2i3 = np.array([[1, 11], [0, 21], [30, 31]])
+    out = u2i2i_retrieve_batch(i2i3, np.array([[0, 1]]), 4)[0]
+    assert out.tolist() == [11, 21, -1, -1]
+
+
+def test_u2i2i_seed_beyond_i2i_table_is_skipped():
+    """Queues can hold items newer than the last offline I2I refresh;
+    those seeds must contribute no neighbors (and not crash) on every
+    path — batched numpy, kernel, and oracle."""
+    from repro.kernels.queue_gather.ops import queue_gather
+    from repro.kernels.queue_gather.ref import queue_gather_ref
+    i2i = np.array([[1, 2], [0, 2], [0, 1]])           # covers items 0..2
+    out = u2i2i_retrieve_batch(i2i, np.array([[7, 0]]), 4)[0]
+    assert out.tolist() == [1, 2, -1, -1]              # seed 7 skipped
+    # an uncovered seed is still masked when the table emits its id
+    out = u2i2i_retrieve_batch(np.array([[7, 1], [0, 2], [0, 1]]),
+                               np.array([[0, 7]]), 4)[0]
+    assert out.tolist() == [1, -1, -1, -1]             # 7 is a seed: masked
+    store = ClusterQueueStore(np.array([0]), queue_len=4, recency_s=1e9)
+    store.ingest(np.zeros(2, int), np.array([7, 0]), np.array([0.0, 1.0]))
+    s_k, u_k = store.serve_batch(np.array([0]), 1.0, n_recent=4, k=4,
+                                 i2i=i2i, use_kernel=True)
+    s_r, u_r = queue_gather_ref(store.items, store.times, store.cursor,
+                                np.array([0]), i2i,
+                                cutoff=store.rel_cutoff(1.0),
+                                n_recent=4, k=4)
+    assert s_k[0].tolist() == [0, 7, -1, -1] == s_r[0].tolist()
+    assert u_k[0].tolist() == [1, 2, -1, -1] == u_r[0].tolist()
+
+
+def test_dedup_topk_rows_direct():
+    cand = np.array([[7, 5, 7, 5, 9]])
+    prio = np.array([[4, 1, 0, 3, 2]], np.int32)
+    valid = np.array([[True, True, True, True, False]])
+    out = dedup_topk_rows(cand, prio, valid, 3, 5)
+    assert out.tolist() == [[7, 5, -1]]        # 7@0 beats 7@4, 5@1 beats 5@3
+
+
+# ---------------------------------------------------------------------------
+# I2I KNN construction
+# ---------------------------------------------------------------------------
+
+def test_i2i_knn_self_exclusion_and_neighbors():
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(30, 8)).astype(np.float32)
+    emb[1] = emb[0] + 0.01
+    knn = build_i2i_knn(emb, k=5)
+    assert knn.shape == (30, 5)
+    assert knn[0][0] == 1 and knn[1][0] == 0
+    assert all(i not in knn[i] for i in range(30))
+
+
+def test_i2i_knn_padding_when_k_exceeds_items():
+    rng = np.random.default_rng(2)
+    emb = rng.normal(size=(4, 8)).astype(np.float32)
+    knn = build_i2i_knn(emb, k=6)
+    assert knn.shape == (4, 6)
+    assert (knn[:, 3:] == -1).all()            # only n-1=3 real neighbors
+    assert (knn[:, :3] >= 0).all()
+
+
+def test_i2i_knn_chunking_invariant():
+    rng = np.random.default_rng(3)
+    emb = rng.normal(size=(100, 16)).astype(np.float32)
+    np.testing.assert_array_equal(build_i2i_knn(emb, k=8, chunk=7),
+                                  build_i2i_knn(emb, k=8, chunk=100))
+
+
+# ---------------------------------------------------------------------------
+# Pallas queue_gather kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,Q,R,k", [(0, 16, 4, 8), (1, 32, 8, 24),
+                                        (2, 8, 3, 40), (3, 64, 1, 4)])
+def test_queue_gather_kernel_matches_oracle(seed, Q, R, k):
+    from repro.kernels.queue_gather.ops import queue_gather
+    from repro.kernels.queue_gather.ref import queue_gather_ref
+    rng = np.random.default_rng(seed)
+    C, n_users, n_items = 12, 150, 250
+    store = ClusterQueueStore(rng.integers(0, C, n_users), queue_len=Q,
+                              recency_s=float(rng.integers(100, 1500)))
+    for _ in range(2):
+        n_ev = int(rng.integers(50, 3000))
+        store.ingest(rng.integers(0, n_users, n_ev),
+                     rng.integers(0, n_items, n_ev),
+                     rng.integers(0, 1000, n_ev).astype(float))
+    i2i = rng.integers(-1, n_items, (n_items, int(rng.integers(2, 10))))
+    cl = store.user_clusters[rng.integers(0, n_users, 48)]
+    cutoff = store.rel_cutoff(1000.0)
+    s_k, u_k = queue_gather(store.items, store.times, store.cursor, cl,
+                            i2i, cutoff=cutoff, n_recent=R, k=k)
+    s_r, u_r = queue_gather_ref(store.items, store.times, store.cursor,
+                                cl, i2i, cutoff=cutoff, n_recent=R, k=k)
+    np.testing.assert_array_equal(np.asarray(s_k), s_r)
+    np.testing.assert_array_equal(np.asarray(u_k), u_r)
+
+
+def test_serve_batch_kernel_and_numpy_paths_agree():
+    rng = np.random.default_rng(7)
+    store = ClusterQueueStore(rng.integers(0, 20, 200), queue_len=32,
+                              recency_s=500.0)
+    store.ingest(rng.integers(0, 200, 5000), rng.integers(0, 300, 5000),
+                 rng.integers(0, 1000, 5000).astype(float))
+    emb = rng.normal(size=(300, 16)).astype(np.float32)
+    i2i = build_i2i_knn(emb, k=8)
+    users = rng.integers(0, 200, 64)
+    s_np, u_np = store.serve_batch(users, 1000.0, n_recent=6, k=24, i2i=i2i)
+    s_k, u_k = store.serve_batch(users, 1000.0, n_recent=6, k=24, i2i=i2i,
+                                 use_kernel=True)
+    np.testing.assert_array_equal(s_np, s_k)
+    np.testing.assert_array_equal(u_np, u_k)
+    # seeds row == retrieve_batch row; union row == u2i2i of those seeds
+    np.testing.assert_array_equal(s_np,
+                                  store.retrieve_batch(users, 1000.0, 6))
+    np.testing.assert_array_equal(u_np, u2i2i_retrieve_batch(i2i, s_np, 24))
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_hits_paper_claim_at_scale():
+    cm = ServingCostModel()
+    assert cm.cost_reduction() >= 0.83         # the paper's 83% regime
+    assert cm.knn_flops_per_req() > 1e8
+    assert cm.cluster_flops_per_req() < 1e6
+
+
+def test_cost_model_batch_amortization():
+    cm = ServingCostModel()
+    b1 = cm.cluster_bytes_per_req(1)
+    b1024 = cm.cluster_bytes_per_req(1024)
+    assert b1024 < b1                           # launch cost amortizes
+    assert b1024 >= 8.0 * cm.queue_read_items   # per-request floor stays
+    assert cm.cost_reduction(1024) > cm.cost_reduction(1)
+    assert cm.cluster_flops_per_req(1024) < cm.cluster_flops_per_req(1)
+    # dataclass default batch_size is used when no override is given
+    assert (ServingCostModel(batch_size=1024).cost_reduction()
+            == cm.cost_reduction(1024))
