@@ -3,13 +3,15 @@
 Offline pipeline (numpy): engagement log -> heterogeneous co-engagement
 graph with U-I / U-U / I-I edges (Eq. 1-2), popularity bias correction on
 I-I edges (Eq. 3), per-node top-K edge subsampling, backbone/extended
-split (Group 1 / Group 2).  Hour-level rebuild in production maps to
-"re-run build() on the trailing window"; `benchmarks/graph_build_scaling`
-measures throughput to back the paper's <=1h claim by extrapolation.
+split (Group 1 / Group 2).
 
-Everything here is vectorized numpy — this stage is explicitly *not* on
-the accelerator (the paper's point: no online graph infra; construction
-is a batch job).
+Hour-level freshness is incremental: ``build_graph`` retains the
+pre-subsample aggregates in a ``RefreshState`` and ``refresh_graph``
+re-derives only the co-engagement pairs reachable from the trailing
+window's delta (everything else is carried over unchanged).  The walk
+stage itself dispatches to numpy/jax/pallas in ``core/ppr.py``;
+`benchmarks/graph_build_scaling` measures both paths to back the
+paper's <=1h claim.
 """
 from __future__ import annotations
 
@@ -53,6 +55,17 @@ class EdgeSet:
 
 
 @dataclasses.dataclass
+class RefreshState:
+    """Pre-subsample construction aggregates retained for hour-level
+    incremental refresh (``refresh_graph``).  At production scale these
+    live in the offline store alongside the log, not in RAM."""
+    ui_full: EdgeSet             # aggregated per-(u, i) weights, pre-top-K
+    uu_raw: EdgeSet              # canonical (lo < hi) co-pairs, pre-subsample
+    ii_raw: EdgeSet              # canonical co-pairs, pre-Eq.3 correction
+    params: Dict                 # build knobs a refresh must reuse
+
+
+@dataclasses.dataclass
 class HeteroGraph:
     n_users: int
     n_items: int
@@ -62,6 +75,7 @@ class HeteroGraph:
     group1_users: np.ndarray     # bool [n_users]: has same-type neighbors
     group1_items: np.ndarray     # bool [n_items]
     build_seconds: float = 0.0
+    refresh: Optional[RefreshState] = None
 
     @property
     def n_edges(self) -> int:
@@ -80,14 +94,23 @@ def build_ui_edges(log: EngagementLog,
     wtab = np.zeros(max(ew) + 1, np.float64)
     for k, v in ew.items():
         wtab[k] = v
-    w = wtab[np.clip(log.event_type, 0, len(wtab) - 1)]
+    et = log.event_type
+    # unknown / out-of-range event types carry no business value: weight 0.
+    # (clipping instead would alias them onto the boundary buckets — a
+    # corrupt type id would silently count as a max-weight "buy").
+    known = (et >= 0) & (et < len(wtab))
+    w = np.where(known, wtab[np.clip(et, 0, len(wtab) - 1)], 0.0)
     key = log.user_id.astype(np.int64) * log.n_items + log.item_id
     uniq, inv = np.unique(key, return_inverse=True)
     agg = np.zeros(len(uniq), np.float64)
     np.add.at(agg, inv, w)
+    keep = agg > 0           # all-zero-weight pairs are not engagements
+    uniq, agg = uniq[keep], agg[keep]
+    # weights stay float64: the refresh merge re-accumulates them, and a
+    # premature f32 rounding would double-round vs a from-scratch build
     return EdgeSet(src=(uniq // log.n_items).astype(np.int64),
                    dst=(uniq % log.n_items).astype(np.int64),
-                   weight=agg.astype(np.float32))
+                   weight=agg)
 
 
 # ---------------------------------------------------------------------------
@@ -131,13 +154,22 @@ def _co_engagement(anchor: np.ndarray, other: np.ndarray, w: np.ndarray,
     pick = np.arange(cap)[None, :].repeat(nseg, 0)
     big = lens > cap
     if big.any():
-        # random offsets (w/ replacement) for hub anchors; duplicates only
-        # shrink the sample slightly -- this is a subsample step anyway.
+        # random offsets for hub anchors, deduped per row: a draw with
+        # replacement can emit the same engager slot — and hence the same
+        # (src, dst) pair — several times from one anchor, inflating wsum
+        # and letting a single common anchor satisfy ``cnt >= min_common``
+        # (Eq. 1/2 count *distinct* common anchors).  Duplicate picks are
+        # dropped, shrinking the sample slightly — this is a subsample
+        # step anyway.
         offs = (rng.random((int(big.sum()), cap)) * lens[big][:, None]
                 ).astype(np.int64)
+        offs.sort(axis=1)
+        dup = np.zeros_like(offs, bool)
+        dup[:, 1:] = offs[:, 1:] == offs[:, :-1]
+        offs[dup] = -1
         pick[big] = offs
-    valid = pick < lens[:, None]
-    idx = np.minimum(starts[:, None] + pick, len(a) - 1)
+    valid = (pick >= 0) & (pick < lens[:, None])
+    idx = np.clip(starts[:, None] + pick, 0, len(a) - 1)
     mat = np.where(valid, o[idx], -1)
     wmat = np.where(valid, ww[idx], 0.0)
     # all within-row pairs
@@ -164,13 +196,19 @@ def _co_engagement(anchor: np.ndarray, other: np.ndarray, w: np.ndarray,
     return lo, hi, wlog
 
 
+def _mirror(e: EdgeSet) -> EdgeSet:
+    """Materialize both directions of a canonical undirected edge set."""
+    return EdgeSet(np.r_[e.src, e.dst], np.r_[e.dst, e.src],
+                   np.r_[e.weight, e.weight])
+
+
 def build_uu_edges(ui: EdgeSet, n_users: int, *, min_common: int = 2,
                    hub_cap: int = 32, rng=None) -> EdgeSet:
     rng = rng or np.random.default_rng(0)
     lo, hi, w = _co_engagement(ui.dst, ui.src, ui.weight, n_users,
                                min_common, hub_cap, rng)
     # undirected: materialize both directions
-    return EdgeSet(np.r_[lo, hi], np.r_[hi, lo], np.r_[w, w])
+    return _mirror(EdgeSet(lo, hi, w))
 
 
 def build_ii_edges(ui: EdgeSet, n_items: int, *, min_common: int = 2,
@@ -178,7 +216,7 @@ def build_ii_edges(ui: EdgeSet, n_items: int, *, min_common: int = 2,
     rng = rng or np.random.default_rng(1)
     lo, hi, w = _co_engagement(ui.src, ui.dst, ui.weight, n_items,
                                min_common, hub_cap, rng)
-    return EdgeSet(np.r_[lo, hi], np.r_[hi, lo], np.r_[w, w])
+    return _mirror(EdgeSet(lo, hi, w))
 
 
 # ---------------------------------------------------------------------------
@@ -210,8 +248,10 @@ def topk_per_node(edges: EdgeSet, n_nodes: int, k_cap: int) -> EdgeSet:
     """Keep each source node's top-k_cap edges by weight."""
     if len(edges) == 0:
         return edges
-    # sort by (src, -weight) then take first k per segment
-    order = np.lexsort((-edges.weight, edges.src))
+    # sort by (src, -weight, dst): the dst tiebreak makes the cut
+    # independent of input edge order (incremental refresh produces the
+    # same edge *set* as a full rebuild but in a different order)
+    order = np.lexsort((edges.dst, -edges.weight, edges.src))
     s, d, w = edges.src[order], edges.dst[order], edges.weight[order]
     starts = np.flatnonzero(np.r_[True, s[1:] != s[:-1]])
     seg_id = np.cumsum(np.r_[True, s[1:] != s[:-1]]) - 1
@@ -251,6 +291,36 @@ def filter_edges(edges: EdgeSet, keep_src: np.ndarray,
 # full pipeline
 # ---------------------------------------------------------------------------
 
+def _finalize_graph(n_users: int, n_items: int, ui_full: EdgeSet,
+                    uu_raw: EdgeSet, ii_raw: EdgeSet, *, alpha_pop: float,
+                    k_cap: int, state_params: Dict, keep_state: bool,
+                    t0: float) -> HeteroGraph:
+    """Shared tail of full build and incremental refresh: Eq.3 correction,
+    top-K_CAP subsampling, group split, state retention."""
+    uu = _mirror(uu_raw)
+    ii = popularity_bias_correction(_mirror(ii_raw), n_items,
+                                    alpha=alpha_pop)
+    # the published graph carries f32 weights; rounding happens HERE
+    # (once, from the exact f64 aggregate) in both build and refresh
+    ui_f32 = EdgeSet(ui_full.src, ui_full.dst,
+                     ui_full.weight.astype(np.float32))
+    ui_s = topk_per_node(ui_f32, n_users, k_cap)
+    uu_s = topk_per_node(uu, n_users, k_cap)
+    ii_s = topk_per_node(ii, n_items, k_cap)
+
+    g1u = np.zeros(n_users, bool)
+    g1u[uu_s.src] = True
+    g1i = np.zeros(n_items, bool)
+    g1i[ii_s.src] = True
+
+    state = (RefreshState(ui_full, uu_raw, ii_raw, dict(state_params))
+             if keep_state else None)
+    return HeteroGraph(n_users, n_items, ui_s, uu_s, ii_s,
+                       group1_users=g1u, group1_items=g1i,
+                       build_seconds=time.perf_counter() - t0,
+                       refresh=state)
+
+
 def build_graph(log: EngagementLog, *,
                 alpha_pop: float = 0.3,
                 c_u: int = 2, c_i: int = 2,
@@ -258,8 +328,14 @@ def build_graph(log: EngagementLog, *,
                 hub_cap: int = 32,
                 user_budget: Optional[int] = None,
                 event_weights: Optional[Dict[int, float]] = None,
-                seed: int = 0) -> HeteroGraph:
-    """End-to-end construction (paper Figure 2A)."""
+                seed: int = 0,
+                keep_state: bool = False) -> HeteroGraph:
+    """End-to-end construction (paper Figure 2A).
+
+    ``keep_state`` retains the pre-subsample aggregates on the returned
+    graph so ``refresh_graph`` can splice in an hour-level delta later
+    (opt-in: the raw co-pair sets can dwarf the subsampled graph).
+    """
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
     ui = build_ui_edges(log, event_weights)
@@ -269,26 +345,18 @@ def build_graph(log: EngagementLog, *,
                                    user_budget or log.n_users)
     ui_for_uu = filter_edges(ui, keep_u, np.ones(log.n_items, bool))
 
-    uu = build_uu_edges(ui_for_uu, log.n_users, min_common=c_u,
-                        hub_cap=hub_cap, rng=rng)
-    ii = build_ii_edges(ui, log.n_items, min_common=c_i,
-                        hub_cap=hub_cap, rng=rng)
-    # popularity bias correction on I-I (Eq. 3)
-    ii = popularity_bias_correction(ii, log.n_items, alpha=alpha_pop)
-
-    # (2) per-node top-K_CAP subsampling
-    ui_s = topk_per_node(ui, log.n_users, k_cap)
-    uu_s = topk_per_node(uu, log.n_users, k_cap)
-    ii_s = topk_per_node(ii, log.n_items, k_cap)
-
-    g1u = np.zeros(log.n_users, bool)
-    g1u[uu_s.src] = True
-    g1i = np.zeros(log.n_items, bool)
-    g1i[ii_s.src] = True
-
-    return HeteroGraph(log.n_users, log.n_items, ui_s, uu_s, ii_s,
-                       group1_users=g1u, group1_items=g1i,
-                       build_seconds=time.perf_counter() - t0)
+    uu_raw = EdgeSet(*_co_engagement(ui_for_uu.dst, ui_for_uu.src,
+                                     ui_for_uu.weight, log.n_users,
+                                     c_u, hub_cap, rng))
+    ii_raw = EdgeSet(*_co_engagement(ui.src, ui.dst, ui.weight,
+                                     log.n_items, c_i, hub_cap, rng))
+    params = dict(alpha_pop=alpha_pop, c_u=c_u, c_i=c_i, k_cap=k_cap,
+                  hub_cap=hub_cap, user_budget=user_budget,
+                  event_weights=event_weights, seed=seed)
+    return _finalize_graph(log.n_users, log.n_items, ui, uu_raw, ii_raw,
+                           alpha_pop=alpha_pop, k_cap=k_cap,
+                           state_params=params, keep_state=keep_state,
+                           t0=t0)
 
 
 # ---------------------------------------------------------------------------
@@ -302,7 +370,8 @@ def padded_adjacency(edges: EdgeSet, n_src: int, max_deg: int
     wts = np.zeros((n_src, max_deg), np.float32)
     if len(edges) == 0:
         return nbrs, wts
-    order = np.lexsort((-edges.weight, edges.src))
+    # dst tiebreak: row content independent of input edge order
+    order = np.lexsort((edges.dst, -edges.weight, edges.src))
     s, d, w = edges.src[order], edges.dst[order], edges.weight[order]
     starts = np.flatnonzero(np.r_[True, s[1:] != s[:-1]])
     seg_id = np.cumsum(np.r_[True, s[1:] != s[:-1]]) - 1
@@ -311,3 +380,132 @@ def padded_adjacency(edges: EdgeSet, n_src: int, max_deg: int
     nbrs[s[keep], rank[keep]] = d[keep]
     wts[s[keep], rank[keep]] = w[keep]
     return nbrs, wts
+
+
+# ---------------------------------------------------------------------------
+# hour-level incremental refresh (paper §4.2 "hourly rebuild", done as a
+# delta splice instead of a from-scratch batch job)
+# ---------------------------------------------------------------------------
+
+def merge_edge_aggregates(a: EdgeSet, b: EdgeSet, n_dst: int) -> EdgeSet:
+    """Sum two per-(src, dst) aggregated edge sets; canonical key order.
+    Weights accumulate in float64 end-to-end (see ``build_ui_edges``)."""
+    key = np.concatenate([a.src.astype(np.int64) * n_dst + a.dst,
+                          b.src.astype(np.int64) * n_dst + b.dst])
+    w = np.concatenate([a.weight, b.weight]).astype(np.float64)
+    uniq, inv = np.unique(key, return_inverse=True)
+    agg = np.zeros(len(uniq), np.float64)
+    np.add.at(agg, inv, w)
+    keep = agg > 0
+    uniq, agg = uniq[keep], agg[keep]
+    return EdgeSet((uniq // n_dst).astype(np.int64),
+                   (uniq % n_dst).astype(np.int64),
+                   agg)
+
+
+def _canonical_pair_order(e: EdgeSet, n_other: int) -> EdgeSet:
+    """Sort canonical (lo < hi) pairs by packed key — the order
+    ``_co_engagement`` emits, so refreshed raws are bitwise comparable
+    (and bitwise *accumulable*, e.g. in Eq. 3) to a full rebuild's."""
+    order = np.argsort(e.src.astype(np.int64) * n_other + e.dst,
+                       kind="stable")
+    return EdgeSet(e.src[order], e.dst[order], e.weight[order])
+
+
+def _recompute_touching_pairs(anchor: np.ndarray, other: np.ndarray,
+                              w: np.ndarray, touched_other: np.ndarray,
+                              n_other: int, min_common: int, hub_cap: int,
+                              rng: np.random.Generator
+                              ) -> Tuple[np.ndarray, ...]:
+    """Re-derive all co-engagement pairs with >= 1 touched endpoint.
+
+    Every anchor adjacent to a touched ``other`` node is re-expanded in
+    full (a touched pair's common anchors are all adjacent to its touched
+    endpoint, so the recomputed weights/counts are complete); pairs whose
+    endpoints are both untouched are discarded — their old values stand.
+    """
+    if len(anchor):
+        a_mask = np.zeros(int(anchor.max()) + 1, bool)
+        a_mask[anchor[touched_other[other]]] = True
+        sel = a_mask[anchor]
+    else:
+        sel = np.zeros(0, bool)
+    lo, hi, pw = _co_engagement(anchor[sel], other[sel], w[sel], n_other,
+                                min_common, hub_cap, rng)
+    touching = touched_other[lo] | touched_other[hi]
+    return lo[touching], hi[touching], pw[touching]
+
+
+def refresh_graph(g: HeteroGraph, delta_log: EngagementLog
+                  ) -> Tuple[HeteroGraph, Dict[str, np.ndarray]]:
+    """Splice a trailing-window delta into an existing graph (paper's
+    hour-level item-coverage path: no from-scratch rebuild).
+
+    Only co-engagement pairs reachable from the delta are re-derived;
+    the cheap O(E) tails (Eq. 3 correction, top-K subsampling) run in
+    full.  When hub subsampling never triggers (``hub_cap`` >= the
+    largest anchor degree) every retained edge matches a from-scratch
+    build on the merged window bit-for-bit; anchors above ``hub_cap``
+    are re-subsampled from a fresh RNG stream — statistically
+    equivalent to a full rebuild's draw (the hub subsample is itself a
+    Monte-Carlo approximation), but not bitwise.  The item space may
+    grow (``delta_log.n_items >= g.n_items``); the user-id space must
+    be stable.
+
+    Returns ``(new_graph, report)`` with ``report['touched_users'] /
+    ['touched_items']`` — the nodes whose edge sets may have changed.
+    """
+    st = g.refresh
+    if st is None:
+        raise ValueError("graph was built without keep_state=True; "
+                         "no refresh aggregates retained")
+    p = st.params
+    if p.get("user_budget"):
+        raise ValueError("incremental refresh with a user retention "
+                         "budget is not supported (retention is a "
+                         "global decision; re-run build_graph)")
+    if delta_log.n_users != g.n_users:
+        raise ValueError("user-id space must be stable across refreshes")
+    if delta_log.n_items < g.n_items:
+        raise ValueError("item space may only grow")
+    t0 = time.perf_counter()
+    nu, ni = g.n_users, delta_log.n_items
+
+    # 1) merge the delta's aggregated U-I engagements
+    d_ui = build_ui_edges(delta_log, p.get("event_weights"))
+    ui_full = merge_edge_aggregates(st.ui_full, d_ui, ni)
+    touched_u = np.unique(delta_log.user_id)
+    touched_i = np.unique(delta_log.item_id)
+    if ni > g.n_items:       # grown tail = brand-new items
+        touched_i = np.union1d(touched_i, np.arange(g.n_items, ni))
+    um = np.zeros(nu, bool)
+    um[touched_u] = True
+    im = np.zeros(ni, bool)
+    im[touched_i] = True
+
+    # 2) re-derive co-engagement pairs touching the delta
+    rng = np.random.default_rng((p.get("seed", 0), 0x5EF))
+    lo, hi, w = _recompute_touching_pairs(
+        ui_full.dst, ui_full.src, ui_full.weight, um, nu,
+        p["c_u"], p["hub_cap"], rng)
+    keep = ~(um[st.uu_raw.src] | um[st.uu_raw.dst])
+    uu_raw = _canonical_pair_order(
+        EdgeSet(np.r_[st.uu_raw.src[keep], lo],
+                np.r_[st.uu_raw.dst[keep], hi],
+                np.r_[st.uu_raw.weight[keep], w]), nu)
+
+    lo, hi, w = _recompute_touching_pairs(
+        ui_full.src, ui_full.dst, ui_full.weight, im, ni,
+        p["c_i"], p["hub_cap"], rng)
+    keep = ~(im[st.ii_raw.src] | im[st.ii_raw.dst])
+    ii_raw = _canonical_pair_order(
+        EdgeSet(np.r_[st.ii_raw.src[keep], lo],
+                np.r_[st.ii_raw.dst[keep], hi],
+                np.r_[st.ii_raw.weight[keep], w]), ni)
+
+    # 3) cheap O(E) tails in full (Eq. 3, top-K, groups)
+    g_new = _finalize_graph(nu, ni, ui_full, uu_raw, ii_raw,
+                            alpha_pop=p["alpha_pop"], k_cap=p["k_cap"],
+                            state_params=p, keep_state=True, t0=t0)
+    report = dict(touched_users=touched_u, touched_items=touched_i)
+    return g_new, report

@@ -101,6 +101,7 @@ def run_pipeline(world: SyntheticWorld, cfg: RankGraph2Config, *,
                  batch_per_type: int = 128,
                  pool_size: int = 2048,
                  seed: int = 0,
+                 ppr_backend: str = "numpy",
                  log_every: int = 0) -> PipelineResult:
     times = {}
     t0 = time.perf_counter()
@@ -114,7 +115,8 @@ def run_pipeline(world: SyntheticWorld, cfg: RankGraph2Config, *,
     if neighbor_strategy == "ppr":
         tables = build_neighbor_tables(
             g, k_imp=cfg.k_imp, n_walks=cfg.ppr_walks,
-            walk_len=cfg.ppr_len, restart=cfg.ppr_restart, seed=seed)
+            walk_len=cfg.ppr_len, restart=cfg.ppr_restart, seed=seed,
+            backend=ppr_backend)
     else:
         tables = _fallback_tables(g, cfg.k_imp, neighbor_strategy, seed)
     times["ppr"] = time.perf_counter() - t0
@@ -130,14 +132,15 @@ def run_pipeline(world: SyntheticWorld, cfg: RankGraph2Config, *,
     per_type = {et: batch_per_type for et in ("uu", "ui", "ii")
                 if et in edge_types or et == "ui"}
     t0 = time.perf_counter()
-    metrics = {}
+    m = None
     for t in range(steps):
         batch = jax.tree.map(jnp.asarray, ds.sample_batch(t, seed, per_type))
         state, m = step_fn(state, batch, jax.random.key(1000 + t))
         if log_every and t % log_every == 0:
             print(f"  step {t}: total={float(m['total']):.3f} "
                   f"infonce_ui={float(m.get('infonce_ui', 0.0)):.3f}")
-    metrics = {k: float(v) for k, v in m.items()}
+    # steps=0 (embed-only runs): no train metrics, not an UnboundLocalError
+    metrics = {} if m is None else {k: float(v) for k, v in m.items()}
     times["train"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()

@@ -6,11 +6,20 @@ from every backbone node, over the *subsampled* heterogeneous graph
 the natural representation).  Edge-type transition mass is balanced so
 no type dominates PPR output.
 
-Two implementations with identical semantics:
-  * numpy  (production offline pipeline; chunked, vectorized)
-  * jax    (used by benchmarks + property tests; also demonstrates that
-            the walk itself is expressible as a lax.scan if one wanted
-            accelerator-side construction)
+Three backends with bit-identical semantics, selected via ``backend=``:
+
+  * ``numpy``   chunked, vectorized; the offline-pipeline reference
+  * ``jax``     jitted ``lax.scan`` with a binary-search inverse-CDF
+                step (log2(D) scalar gathers instead of full-row
+                gathers — the accelerated construction path)
+  * ``pallas``  ``kernels/ppr_walk``: the walk fused with per-start
+                visit-count accumulation in one kernel pass
+
+All backends consume the *same* host-generated uniform stream (keyed by
+start node id in fixed-size blocks, see ``walk_uniforms``), so their
+visit traces are exactly equal and — crucially — an incremental refresh
+that re-walks only the affected nodes reproduces the exact trace a full
+rebuild would have produced (``refresh_ppr_neighbors``).
 
 Group-2 handling (nodes without same-type neighbors) lives in
 ``group2_neighbors``: KNN over previous-run Group-1 embeddings + top
@@ -19,6 +28,7 @@ Group-2 handling (nodes without same-type neighbors) lives in
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import numpy as np
@@ -91,46 +101,293 @@ def build_padded_hetero_adj(g: HeteroGraph, max_deg_per_type: int = 32
 
 
 # ---------------------------------------------------------------------------
+# shared uniform stream (all backends + incremental refresh)
+# ---------------------------------------------------------------------------
+
+U_BLOCK = 4096       # starts per RNG block — the refresh regeneration unit
+
+
+def walk_uniforms(seed: int, ids: np.ndarray, n_walks: int, walk_len: int
+                  ) -> np.ndarray:
+    """f32 uniforms for the given start node ids: (len(ids), n_walks,
+    2*walk_len); column 2t drives step t's transition draw, column 2t+1
+    its restart draw.
+
+    The stream is keyed by *node id* in fixed ``U_BLOCK``-sized blocks
+    (not by position in ``ids`` or by chunk layout), so a refresh that
+    re-walks an arbitrary subset of nodes regenerates exactly the draws
+    a full run over ``arange(n)`` would have consumed for them.
+    """
+    ids = np.asarray(ids, np.int64)
+    out = np.empty((len(ids), n_walks, 2 * walk_len), np.float32)
+    blocks = ids // U_BLOCK
+    for b in np.unique(blocks):
+        rng = np.random.default_rng((seed, int(b)))
+        blk = rng.random((U_BLOCK, n_walks, 2 * walk_len),
+                         dtype=np.float32)
+        m = blocks == b
+        out[m] = blk[ids[m] - b * U_BLOCK]
+    return out
+
+
+def last_valid_cols(cum: np.ndarray) -> np.ndarray:
+    """Per row, the last column carrying positive transition mass (0 for
+    dangling rows — the dead-row check stops those walkers anyway)."""
+    inc = np.empty(cum.shape, bool)
+    inc[:, 0] = cum[:, 0] > 0
+    inc[:, 1:] = cum[:, 1:] > cum[:, :-1]
+    return np.where(inc, np.arange(cum.shape[1])[None, :], 0).max(axis=1)
+
+
+# ---------------------------------------------------------------------------
 # numpy Monte-Carlo walker
 # ---------------------------------------------------------------------------
 
-def _step(adj: PaddedHeteroAdj, pos: np.ndarray, rng) -> np.ndarray:
-    u = rng.random(len(pos)).astype(np.float32)
-    cum = adj.cum[pos]                             # (m, D2)
-    col = (cum < u[:, None]).sum(axis=1)
-    col = np.minimum(col, adj.nbrs.shape[1] - 1)
-    nxt = adj.nbrs[pos, col]
-    dead = (nxt < 0) | (cum[:, -1] <= 0)           # dangling -> stay
+def _step(nbrs: np.ndarray, cum: np.ndarray, last: np.ndarray,
+          pos: np.ndarray, u: np.ndarray) -> np.ndarray:
+    c = cum[pos]                                   # (m, D2)
+    col = (c < u[:, None]).sum(axis=1)
+    # f32 rounding can leave cum[-1] slightly below 1.0; an overflowing
+    # draw must land on the last *valid* neighbor column, not a trailing
+    # -1 pad (which would silently stall the walker at `pos` and bias
+    # visit counts toward the start node).
+    col = np.minimum(col, last[pos])
+    nxt = nbrs[pos, col]
+    dead = (nxt < 0) | (c[:, -1] <= 0)             # dangling -> stay
     return np.where(dead, pos, nxt)
+
+
+def _walk_numpy(adj: PaddedHeteroAdj, starts: np.ndarray, *, n_walks: int,
+                walk_len: int, restart: float, seed: int,
+                chunk: int) -> np.ndarray:
+    last = last_valid_cols(adj.cum)
+    r32 = np.float32(restart)
+    n_start = len(starts)
+    S = n_walks * walk_len
+    visited = np.empty((n_start, S), np.int64)
+    step_rows = max(1, chunk // n_walks)
+    for lo in range(0, n_start, step_rows):
+        hi = min(n_start, lo + step_rows)
+        home = np.repeat(starts[lo:hi], n_walks)
+        u = walk_uniforms(seed, starts[lo:hi], n_walks, walk_len
+                          ).reshape(len(home), 2 * walk_len)
+        pos = home.copy()
+        block = np.empty((len(home), walk_len), np.int64)
+        for t in range(walk_len):
+            pos = _step(adj.nbrs, adj.cum, last, pos, u[:, 2 * t])
+            pos = np.where(u[:, 2 * t + 1] < r32, home, pos)
+            block[:, t] = pos
+        visited[lo:hi] = block.reshape(hi - lo, S)
+    return visited
+
+
+# ---------------------------------------------------------------------------
+# JAX walker (accelerated construction; bit-identical to numpy)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("walk_len",))
+def _walk_jax_impl(nbrs2d, cum2d, home, u, restart, *, walk_len: int):
+    """Binary-search inverse-CDF walk: log2(D2) scalar gathers per step
+    instead of a full (m, D2) row gather — ~8x less memory traffic, and
+    the lower bound it finds equals ``sum(cum_row < u)`` exactly."""
+    d2 = cum2d.shape[1]
+    nbrs_flat = nbrs2d.reshape(-1)
+    cum_flat = cum2d.reshape(-1)
+    # last positive-mass column per row (pad-stall clamp), fused in-jit
+    inc = jnp.concatenate([cum2d[:, :1] > 0, cum2d[:, 1:] > cum2d[:, :-1]],
+                          axis=1)
+    last = jnp.max(jnp.where(inc, jnp.arange(d2, dtype=jnp.int32)[None, :],
+                             0), axis=1)
+    m = home.shape[0]
+    xs = u.reshape(m, walk_len, 2).transpose(1, 0, 2)
+
+    def body(pos, uu):
+        us, ur = uu[:, 0], uu[:, 1]
+        base = pos * d2
+        # lower bound over the d2-wide row == sum(cum_row < u) exactly;
+        # the span starts at the next power of two and every probe is
+        # bounds-guarded so non-power-of-two widths (odd
+        # max_deg_per_type) search correctly and never read off-row
+        p = jnp.zeros_like(pos)
+        w = 1 << max(0, (d2 - 1).bit_length())
+        while w > 1:
+            w //= 2
+            cand = p + w
+            ok = cand <= d2
+            probe = cum_flat[base + jnp.minimum(cand, d2) - 1]
+            p = jnp.where(ok & (probe < us), cand, p)
+        probe = cum_flat[base + jnp.minimum(p, d2 - 1)]
+        p = jnp.where((p < d2) & (probe < us), p + 1, p)
+        col = jnp.minimum(p, last[pos])
+        nxt = nbrs_flat[base + col]
+        dead = (nxt < 0) | (cum_flat[base + d2 - 1] <= 0)
+        nxt = jnp.where(dead, pos, nxt)
+        nxt = jnp.where(ur < restart, home, nxt)
+        return nxt, nxt
+
+    _, trace = jax.lax.scan(body, home, xs)
+    return jnp.transpose(trace, (1, 0))            # (m, walk_len)
+
+
+def ppr_walk_jax(nbrs: np.ndarray, cum: np.ndarray, starts: np.ndarray,
+                 uniforms: np.ndarray, *, n_walks: int, walk_len: int,
+                 restart: float) -> np.ndarray:
+    """Vectorized Monte-Carlo walks; returns (n_starts, n_walks*walk_len)
+    int64, bit-identical to the numpy walker on the same uniforms."""
+    home = jnp.asarray(np.repeat(np.asarray(starts, np.int32), n_walks))
+    trace = _walk_jax_impl(
+        jnp.asarray(np.asarray(nbrs).astype(np.int32)),
+        jnp.asarray(np.asarray(cum, np.float32)),
+        home,
+        jnp.asarray(np.asarray(uniforms, np.float32).reshape(
+            len(home), 2 * walk_len)),
+        jnp.float32(restart), walk_len=walk_len)
+    return np.asarray(trace, np.int64).reshape(len(starts),
+                                               n_walks * walk_len)
+
+
+def _walk_jax(adj: PaddedHeteroAdj, starts: np.ndarray, *, n_walks: int,
+              walk_len: int, restart: float, seed: int,
+              chunk: int) -> np.ndarray:
+    """Memory-chunked jax walk: the adjacency converts to device arrays
+    once; only the per-chunk walkers + uniforms are materialized."""
+    nbrs_d = jnp.asarray(adj.nbrs.astype(np.int32))
+    cum_d = jnp.asarray(np.asarray(adj.cum, np.float32))
+    r32 = jnp.float32(restart)
+    n = len(starts)
+    S = n_walks * walk_len
+    visited = np.empty((n, S), np.int64)
+    step_rows = max(1, chunk // n_walks)
+    for lo in range(0, n, step_rows):
+        hi = min(n, lo + step_rows)
+        ids = starts[lo:hi]
+        home = jnp.asarray(np.repeat(ids.astype(np.int32), n_walks))
+        u = jnp.asarray(walk_uniforms(seed, ids, n_walks, walk_len
+                                      ).reshape(len(ids) * n_walks,
+                                                2 * walk_len))
+        trace = _walk_jax_impl(nbrs_d, cum_d, home, u, r32,
+                               walk_len=walk_len)
+        visited[lo:hi] = np.asarray(trace, np.int64).reshape(hi - lo, S)
+    return visited
+
+
+def _walk_pallas(adj_nbrs: np.ndarray, adj_cum: np.ndarray,
+                 starts: np.ndarray, *, n_walks: int, walk_len: int,
+                 restart: float, seed: int, chunk: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused walk + per-start visit counting via ``kernels/ppr_walk``.
+    Returns (visited, counts): counts holds each node's multiplicity at
+    its first occurrence in the row, 0 elsewhere."""
+    from repro.kernels.ppr_walk.ops import ppr_walk
+    n = len(starts)
+    S = n_walks * walk_len
+    visited = np.empty((n, S), np.int64)
+    counts = np.empty((n, S), np.int64)
+    step_rows = max(1, chunk // n_walks)
+    for lo in range(0, n, step_rows):
+        hi = min(n, lo + step_rows)
+        u = walk_uniforms(seed, starts[lo:hi], n_walks, walk_len)
+        v, c = ppr_walk(adj_nbrs, adj_cum, starts[lo:hi], u,
+                        restart=restart)
+        visited[lo:hi] = np.asarray(v, np.int64)
+        counts[lo:hi] = np.asarray(c, np.int64)
+    return visited, counts
+
+
+BACKENDS = ("numpy", "jax", "pallas")
 
 
 def ppr_visit_counts(adj: PaddedHeteroAdj, starts: np.ndarray, *,
                      n_walks: int = 64, walk_len: int = 5,
                      restart: float = 0.15, seed: int = 0,
-                     chunk: int = 1 << 18) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (visited, counts): (n_starts, n_walks*walk_len) node ids and
-    per-start sorted visit arrays.  Memory-chunked over starts."""
-    rng = np.random.default_rng(seed)
-    n_start = len(starts)
-    S = n_walks * walk_len
-    visited = np.empty((n_start, S), np.int64)
-    for lo in range(0, n_start, max(1, chunk // n_walks)):
-        hi = min(n_start, lo + max(1, chunk // n_walks))
-        home = np.repeat(starts[lo:hi], n_walks)
-        pos = home.copy()
-        block = np.empty((len(home), walk_len), np.int64)
-        for t in range(walk_len):
-            pos = _step(adj, pos, rng)
-            rst = rng.random(len(pos)) < restart
-            pos = np.where(rst, home, pos)
-            block[:, t] = pos
-        visited[lo:hi] = block.reshape(hi - lo, S)
+                     chunk: int = 1 << 18, backend: str = "numpy"
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (visited, starts): (n_starts, n_walks*walk_len) node ids
+    per start.  Memory-chunked over starts; all backends are
+    bit-identical (shared uniform stream, see ``walk_uniforms``)."""
+    starts = np.asarray(starts, np.int64)
+    if backend == "numpy":
+        visited = _walk_numpy(adj, starts, n_walks=n_walks,
+                              walk_len=walk_len, restart=restart,
+                              seed=seed, chunk=chunk)
+    elif backend == "jax":
+        visited = _walk_jax(adj, starts, n_walks=n_walks,
+                            walk_len=walk_len, restart=restart,
+                            seed=seed, chunk=chunk)
+    elif backend == "pallas":
+        visited, _ = _walk_pallas(adj.nbrs, adj.cum, starts,
+                                  n_walks=n_walks, walk_len=walk_len,
+                                  restart=restart, seed=seed, chunk=chunk)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; want {BACKENDS}")
     return visited, starts
+
+
+# ---------------------------------------------------------------------------
+# visit counting + top-k (vectorized; shared by all backends)
+# ---------------------------------------------------------------------------
+
+def _run_length_counts(srt: np.ndarray) -> np.ndarray:
+    """Per-row run-length counts over row-sorted visit lists: the count
+    of each run at its first position, 0 elsewhere.  Fully vectorized
+    (suffix-min of run-start indices), no per-column Python loop."""
+    n, S = srt.shape
+    newrun = np.ones_like(srt, bool)
+    newrun[:, 1:] = srt[:, 1:] != srt[:, :-1]
+    idx = np.arange(S)[None, :]
+    # index of this-or-next run start at each position (suffix minimum)
+    run_idx = np.where(newrun, idx, S)
+    nxt_incl = np.minimum.accumulate(run_idx[:, ::-1], axis=1)[:, ::-1]
+    # next run start strictly after j = suffix min over k > j
+    nxt = np.concatenate([nxt_incl[:, 1:], np.full((n, 1), S)], axis=1)
+    return np.where(newrun, nxt - idx, 0)
+
+
+def _topk_from_counts(vals: np.ndarray, counts: np.ndarray,
+                      starts: np.ndarray, k: int, type_boundary: int,
+                      hub_alpha: float, glob: Optional[np.ndarray]
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k selection given per-position visit counts (count at the
+    first occurrence of each distinct node, 0 elsewhere).  Ties break by
+    node id, so the result is independent of visit order — the fused
+    pallas counts (visit order) and the host run-length counts (sorted
+    order) select identical neighbors."""
+    n, S = vals.shape
+    scores = counts.astype(np.float64)
+    scores[vals == starts[:, None]] = 0.0          # drop self visits
+    if hub_alpha > 0.0:
+        if glob is None:
+            glob = np.bincount(vals.reshape(-1),
+                               weights=counts.reshape(-1).astype(
+                                   np.float64))
+        scores = scores / np.maximum(glob[vals], 1.0) ** hub_alpha
+
+    def _top(side_mask):
+        c = np.where(side_mask, scores, 0.0)
+        kk = min(k, S)
+        order = np.lexsort((vals, -c), axis=-1)[:, :kk]
+        rows = np.arange(n)[:, None]
+        top_c = c[rows, order]
+        out = np.where(top_c > 0, vals[rows, order], -1)
+        if kk < k:
+            out = np.pad(out, ((0, 0), (0, k - kk)), constant_values=-1)
+        return out
+
+    users = _top(vals < type_boundary)
+    items = _top(vals >= type_boundary)
+    return users, items
+
+
+def global_visit_mass(visited: np.ndarray, n_nodes: int) -> np.ndarray:
+    """Total visit count per node across all starts (hub correction)."""
+    return np.bincount(visited.reshape(-1), minlength=n_nodes
+                       ).astype(np.float64)
 
 
 def topk_by_count(visited: np.ndarray, starts: np.ndarray, k: int,
                   type_boundary: int, n_users: int,
-                  hub_alpha: float = 0.0
+                  hub_alpha: float = 0.0,
+                  glob: Optional[np.ndarray] = None
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k most-visited user and item neighbors per start node.
 
@@ -143,70 +400,167 @@ def topk_by_count(visited: np.ndarray, starts: np.ndarray, k: int,
     relative to global PageRank).  On small dense graphs raw counts are
     dominated by hubs that carry no personalized signal; the same
     correction is implicit at billion-scale via the popularity-corrected
-    edge weights (Eq. 3), and explicit here.
+    edge weights (Eq. 3), and explicit here.  ``glob`` overrides the
+    global mass (incremental refresh passes the spliced-trace mass so
+    re-ranked rows match a full rebuild).
     """
-    n, S = visited.shape
     srt = np.sort(visited, axis=1)
-    newrun = np.ones_like(srt, bool)
-    newrun[:, 1:] = srt[:, 1:] != srt[:, :-1]
-    # run lengths: distance to next run start
-    idx = np.arange(S)[None, :].repeat(n, 0)
-    run_start_idx = np.where(newrun, idx, 0)
-    run_start_idx = np.maximum.accumulate(run_start_idx, axis=1)
-    # count for a run start = next_run_start - this index
-    next_start = np.full((n, S + 1), S, np.int64)
-    rev = newrun[:, ::-1]
-    # compute, for each position, the index of the next run start strictly after
-    nxt = np.full((n, S), S, np.int64)
-    last = np.full(n, S, np.int64)
-    for j in range(S - 1, -1, -1):       # S is small (R*L ~ a few hundred)
-        nxt[:, j] = last
-        last = np.where(newrun[:, j], j, last)
-    counts = np.where(newrun, nxt - idx, 0)
-    # drop self visits
-    counts = np.where(srt == starts[:, None], 0, counts)
-    vals = srt
+    counts = _run_length_counts(srt)
+    if hub_alpha > 0.0 and glob is None:
+        glob = global_visit_mass(visited, int(visited.max()) + 1)
+    return _topk_from_counts(srt, counts, starts, k, type_boundary,
+                             hub_alpha, glob)
 
-    scores = counts.astype(np.float64)
-    if hub_alpha > 0.0:
-        n_all = int(visited.max()) + 1
-        glob = np.bincount(visited.reshape(-1), minlength=n_all
-                           ).astype(np.float64)
-        scores = scores / np.maximum(glob[srt], 1.0) ** hub_alpha
 
-    def _top(side_mask):
-        c = np.where(side_mask & newrun, scores, 0.0)
-        kk = min(k, S)
-        top_idx = np.argpartition(-c, kk - 1, axis=1)[:, :kk]
-        rows = np.arange(n)[:, None]
-        top_c = c[rows, top_idx]
-        top_v = np.where(top_c > 0, vals[rows, top_idx], -1)
-        # order by count desc for determinism
-        o = np.argsort(-top_c, axis=1, kind="stable")
-        out = top_v[rows, o]
-        if kk < k:
-            out = np.pad(out, ((0, 0), (0, k - kk)), constant_values=-1)
-        return out
+# ---------------------------------------------------------------------------
+# precompute + incremental refresh
+# ---------------------------------------------------------------------------
 
-    users = _top(vals < type_boundary)
-    items = _top(vals >= type_boundary)
-    return users, items
+@dataclasses.dataclass
+class PPRState:
+    """Everything ``refresh_ppr_neighbors`` needs to splice new walks
+    into an existing run: the visit traces, the adjacency snapshot the
+    traces were walked on (for change detection), and the walk knobs."""
+    visited: np.ndarray          # (n_nodes, n_walks*walk_len) int64
+    nbrs: np.ndarray             # padded adjacency at build time
+    cum: np.ndarray
+    n_walks: int
+    walk_len: int
+    restart: float
+    seed: int
+    max_deg_per_type: int
+    hub_alpha: float
+    k_imp: int
+    backend: str
 
 
 def precompute_ppr_neighbors(g: HeteroGraph, *, k_imp: int = 50,
                              n_walks: int = 64, walk_len: int = 5,
                              restart: float = 0.15, seed: int = 0,
                              max_deg_per_type: int = 32,
-                             hub_alpha: float = 0.5
-                             ) -> Tuple[np.ndarray, np.ndarray]:
-    """(user_nbrs, item_nbrs): (n_users+n_items, k_imp) global ids, -1 pad."""
+                             hub_alpha: float = 0.5,
+                             backend: str = "numpy",
+                             return_state: bool = False):
+    """(user_nbrs, item_nbrs): (n_users+n_items, k_imp) global ids, -1
+    pad; identical for every ``backend``.  ``return_state`` additionally
+    returns the ``PPRState`` that powers incremental refresh."""
     adj = build_padded_hetero_adj(g, max_deg_per_type)
     starts = np.arange(adj.n_nodes, dtype=np.int64)
-    visited, _ = ppr_visit_counts(adj, starts, n_walks=n_walks,
-                                  walk_len=walk_len, restart=restart,
-                                  seed=seed)
-    return topk_by_count(visited, starts, k_imp, g.n_users, g.n_users,
-                         hub_alpha=hub_alpha)
+    if backend == "pallas":
+        visited, counts = _walk_pallas(adj.nbrs, adj.cum, starts,
+                                       n_walks=n_walks, walk_len=walk_len,
+                                       restart=restart, seed=seed,
+                                       chunk=1 << 18)
+        glob = global_visit_mass(visited, adj.n_nodes)
+        users, items = _topk_from_counts(visited, counts, starts, k_imp,
+                                         g.n_users, hub_alpha, glob)
+    else:
+        visited, _ = ppr_visit_counts(adj, starts, n_walks=n_walks,
+                                      walk_len=walk_len, restart=restart,
+                                      seed=seed, backend=backend)
+        users, items = topk_by_count(
+            visited, starts, k_imp, g.n_users, g.n_users,
+            hub_alpha=hub_alpha,
+            glob=global_visit_mass(visited, adj.n_nodes))
+    if return_state:
+        state = PPRState(visited, adj.nbrs, adj.cum, n_walks, walk_len,
+                         restart, seed, max_deg_per_type, hub_alpha,
+                         k_imp, backend)
+        return users, items, state
+    return users, items
+
+
+def _expand_affected(nbrs: np.ndarray, changed: np.ndarray, hops: int
+                     ) -> np.ndarray:
+    """Nodes whose visit trace can differ: anything that reaches a
+    changed adjacency row within ``hops`` steps (reverse BFS).  A walk
+    diverges only after stepping *from* a changed row, and the identical
+    prefix up to that row exists in the new adjacency, so BFS over the
+    new adjacency is sufficient."""
+    n, _ = nbrs.shape
+    src = np.repeat(np.arange(n), nbrs.shape[1])
+    dst = nbrs.reshape(-1)
+    m = dst >= 0
+    src, dst = src[m], dst[m]
+    affected = changed.copy()
+    frontier = changed
+    for _ in range(max(0, hops)):
+        newf = np.zeros(n, bool)
+        newf[src[frontier[dst]]] = True
+        newf &= ~affected
+        if not newf.any():
+            break
+        affected |= newf
+        frontier = newf
+    return affected
+
+
+def refresh_ppr_neighbors(g_new: HeteroGraph, user_nbrs: np.ndarray,
+                          item_nbrs: np.ndarray, state: PPRState, *,
+                          backend: Optional[str] = None
+                          ) -> Tuple[np.ndarray, np.ndarray, PPRState,
+                                     np.ndarray]:
+    """Splice an incremental graph refresh into existing PPR tables.
+
+    Re-walks only the nodes whose ``walk_len``-hop neighborhoods saw an
+    adjacency change (plus brand-new item rows), regenerates exactly the
+    uniform draws a full run would have used for them, and re-ranks
+    those rows against the spliced global visit mass — so every affected
+    row is bit-identical to a from-scratch
+    ``precompute_ppr_neighbors`` on the refreshed graph, and every
+    unaffected row is left untouched.
+
+    Returns (user_nbrs, item_nbrs, new_state, affected_ids).
+    """
+    backend = backend or state.backend
+    adj = build_padded_hetero_adj(g_new, state.max_deg_per_type)
+    n_old = state.nbrs.shape[0]
+    n_new = adj.n_nodes
+    S = state.n_walks * state.walk_len
+
+    changed = np.ones(n_new, bool)                 # grown rows: changed
+    changed[:n_old] = (np.any(adj.nbrs[:n_old] != state.nbrs, axis=1)
+                       | np.any(adj.cum[:n_old] != state.cum, axis=1))
+    affected = _expand_affected(adj.nbrs, changed, state.walk_len - 1)
+    ids = np.flatnonzero(affected)
+
+    visited = np.empty((n_new, S), np.int64)
+    visited[:n_old] = state.visited                # item growth appends
+    if len(ids):
+        if backend == "pallas":
+            vis_new, cnt_new = _walk_pallas(
+                adj.nbrs, adj.cum, ids, n_walks=state.n_walks,
+                walk_len=state.walk_len, restart=state.restart,
+                seed=state.seed, chunk=1 << 18)
+        else:
+            vis_new, _ = ppr_visit_counts(
+                adj, ids, n_walks=state.n_walks, walk_len=state.walk_len,
+                restart=state.restart, seed=state.seed, backend=backend)
+            cnt_new = None
+        visited[ids] = vis_new
+
+    glob = global_visit_mass(visited, n_new)
+    nu = g_new.n_users
+    u_rows = np.full((n_new, state.k_imp), -1, np.int64)
+    i_rows = np.full((n_new, state.k_imp), -1, np.int64)
+    u_rows[:n_old] = user_nbrs
+    i_rows[:n_old] = item_nbrs
+    if len(ids):
+        if cnt_new is not None:
+            u_new, i_new = _topk_from_counts(vis_new, cnt_new, ids,
+                                             state.k_imp, nu,
+                                             state.hub_alpha, glob)
+        else:
+            u_new, i_new = topk_by_count(vis_new, ids, state.k_imp, nu,
+                                         nu, hub_alpha=state.hub_alpha,
+                                         glob=glob)
+        u_rows[ids] = u_new
+        i_rows[ids] = i_new
+
+    new_state = dataclasses.replace(state, visited=visited,
+                                    nbrs=adj.nbrs, cum=adj.cum,
+                                    backend=backend)
+    return u_rows, i_rows, new_state, ids
 
 
 # ---------------------------------------------------------------------------
@@ -237,35 +591,3 @@ def group2_neighbors(prev_emb: np.ndarray, group1_ids: np.ndarray,
             sel = np.pad(sel, ((0, 0), (0, k - kk)), constant_values=-1)
         out[lo:hi] = sel
     return out
-
-
-# ---------------------------------------------------------------------------
-# JAX walker (benchmark / property-test path; identical semantics)
-# ---------------------------------------------------------------------------
-
-def ppr_walk_jax(nbrs: jnp.ndarray, cum: jnp.ndarray, starts: jnp.ndarray,
-                 *, n_walks: int, walk_len: int, restart: float,
-                 key: jax.Array) -> jnp.ndarray:
-    """Vectorized Monte-Carlo walks; returns (n_starts, n_walks*walk_len)."""
-    home = jnp.repeat(starts, n_walks)
-    d2 = nbrs.shape[1]
-
-    def step(pos, k):
-        ku, kr = jax.random.split(k)
-        u = jax.random.uniform(ku, (pos.shape[0],), jnp.float32)
-        c = cum[pos]
-        col = jnp.minimum(jnp.sum(c < u[:, None], axis=1), d2 - 1)
-        nxt = nbrs[pos, col]
-        dead = (nxt < 0) | (c[:, -1] <= 0)
-        nxt = jnp.where(dead, pos, nxt)
-        rst = jax.random.uniform(kr, (pos.shape[0],)) < restart
-        return jnp.where(rst, home, nxt)
-
-    def body(pos, k):
-        nxt = step(pos, k)
-        return nxt, nxt
-
-    keys = jax.random.split(key, walk_len)
-    _, trace = jax.lax.scan(body, home, keys)
-    return jnp.transpose(trace, (1, 0)).reshape(len(starts),
-                                                n_walks * walk_len)

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
@@ -33,34 +34,98 @@ class NeighborTables:
     item_nbrs: np.ndarray    # (n_nodes, k_imp)
     n_users: int
     n_items: int
+    ppr: Optional["ppr_mod.PPRState"] = None   # refresh splice state
+
+
+def _fill_group2(g: HeteroGraph, user_nbrs: np.ndarray,
+                 item_nbrs: np.ndarray, prev_emb: np.ndarray, k_imp: int,
+                 only: Optional[np.ndarray] = None) -> None:
+    """Group-2 fallback: same-type neighbors via previous-run KNN
+    (in-place; ``only`` restricts to a node-id subset, e.g. the nodes an
+    incremental refresh actually touched)."""
+    nu = g.n_users
+    g2u = np.flatnonzero(~g.group1_users)
+    g1u = np.flatnonzero(g.group1_users)
+    g2i = np.flatnonzero(~g.group1_items)
+    g1i = np.flatnonzero(g.group1_items)
+    if only is not None:
+        g2u = g2u[np.isin(g2u, only)]
+        g2i = g2i[np.isin(g2i + nu, only)]
+    if len(g2u) and len(g1u):
+        knn = ppr_mod.group2_neighbors(prev_emb[:nu], g1u, g2u, k_imp)
+        user_nbrs[g2u] = np.where(knn >= 0, knn, user_nbrs[g2u])
+    if len(g2i) and len(g1i):
+        knn = ppr_mod.group2_neighbors(prev_emb[nu:], g1i, g2i, k_imp)
+        item_nbrs[nu + g2i] = np.where(knn >= 0, nu + knn,
+                                       item_nbrs[nu + g2i])
 
 
 def build_neighbor_tables(g: HeteroGraph, *, k_imp: int = 50,
                           n_walks: int = 64, walk_len: int = 5,
                           restart: float = 0.15, seed: int = 0,
-                          prev_emb: Optional[np.ndarray] = None
-                          ) -> NeighborTables:
-    """PPR tables on the backbone + Group-2 fallback (paper §4.2)."""
-    user_nbrs, item_nbrs = ppr_mod.precompute_ppr_neighbors(
+                          prev_emb: Optional[np.ndarray] = None,
+                          backend: str = "numpy",
+                          keep_state: bool = False) -> NeighborTables:
+    """PPR tables on the backbone + Group-2 fallback (paper §4.2).
+
+    ``backend`` selects the walker (numpy / jax / pallas — identical
+    output); ``keep_state`` retains the visit traces that power
+    ``incremental_refresh`` (opt-in: (n_nodes, n_walks*walk_len) int64
+    plus an adjacency snapshot).
+    """
+    user_nbrs, item_nbrs, state = ppr_mod.precompute_ppr_neighbors(
         g, k_imp=k_imp, n_walks=n_walks, walk_len=walk_len,
-        restart=restart, seed=seed)
+        restart=restart, seed=seed, backend=backend, return_state=True)
     # Group-2 fallback: same-type neighbors via previous-run KNN; item
     # neighbors from top-weight U-I edges (already what PPR finds for
     # 1-hop starts, but fill explicitly where PPR returned nothing).
     if prev_emb is not None:
-        nu = g.n_users
-        g2u = np.flatnonzero(~g.group1_users)
-        g1u = np.flatnonzero(g.group1_users)
-        if len(g2u) and len(g1u):
-            knn = ppr_mod.group2_neighbors(prev_emb[:nu], g1u, g2u, k_imp)
-            user_nbrs[g2u] = np.where(knn >= 0, knn, user_nbrs[g2u])
-        g2i = np.flatnonzero(~g.group1_items)
-        g1i = np.flatnonzero(g.group1_items)
-        if len(g2i) and len(g1i):
-            knn = ppr_mod.group2_neighbors(prev_emb[nu:], g1i, g2i, k_imp)
-            item_nbrs[nu + g2i] = np.where(knn >= 0, nu + knn,
-                                           item_nbrs[nu + g2i])
-    return NeighborTables(user_nbrs, item_nbrs, g.n_users, g.n_items)
+        _fill_group2(g, user_nbrs, item_nbrs, prev_emb, k_imp)
+    return NeighborTables(user_nbrs, item_nbrs, g.n_users, g.n_items,
+                          ppr=state if keep_state else None)
+
+
+def incremental_refresh(g: HeteroGraph, tables: NeighborTables,
+                        new_log_window, *,
+                        prev_emb: Optional[np.ndarray] = None,
+                        backend: Optional[str] = None
+                        ) -> Tuple[HeteroGraph, NeighborTables, Dict]:
+    """Hour-level lifecycle refresh (paper §4.2): splice a trailing log
+    window into an existing graph + PPR tables without a full rebuild.
+
+    Edges are re-derived only for co-engagement pairs reachable from the
+    delta (``graph_builder.refresh_graph``); walks re-run only for nodes
+    whose walk-length neighborhood changed, and new items — including a
+    grown item space — are spliced into the padded adjacencies and
+    tables (``ppr.refresh_ppr_neighbors``).  Fresh nodes that still lack
+    same-type neighbors route through the Group-2 KNN fallback when
+    ``prev_emb`` (previous-run embeddings, [users; items]) is given.
+
+    Affected rows match a from-scratch build on the merged window
+    bit-for-bit — provided hub subsampling never triggers (``hub_cap``
+    >= the largest anchor degree; above it, hub anchors are
+    re-subsampled from a fresh stream, statistically equivalent but not
+    bitwise — see ``refresh_graph``).  Unaffected rows are left
+    untouched.  Returns ``(new_graph, new_tables, report)``.
+    """
+    from repro.core.graph_builder import refresh_graph
+    if tables.ppr is None:
+        raise ValueError("tables were built without keep_state=True; "
+                         "no refresh state retained")
+    t0 = time.perf_counter()
+    g_new, report = refresh_graph(g, new_log_window)
+    user_nbrs, item_nbrs, state, affected = ppr_mod.refresh_ppr_neighbors(
+        g_new, tables.user_nbrs, tables.item_nbrs, tables.ppr,
+        backend=backend)
+    if prev_emb is not None and len(affected):
+        _fill_group2(g_new, user_nbrs, item_nbrs, prev_emb,
+                     tables.ppr.k_imp, only=affected)
+    report["affected_nodes"] = affected
+    report["refresh_seconds"] = time.perf_counter() - t0
+    return (g_new,
+            NeighborTables(user_nbrs, item_nbrs, g_new.n_users,
+                           g_new.n_items, ppr=state),
+            report)
 
 
 EDGE_KEYS = ("uu", "ui", "ii")

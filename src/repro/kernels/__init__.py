@@ -9,3 +9,4 @@
 #   fused_contrastive  margin/InfoNCE training tile
 #   flash_attention    online-softmax attention
 #   queue_gather       serving: cluster-queue gather + U2I2I union
+#   ppr_walk           construction: fused PPR walk + visit counting

@@ -1,0 +1,29 @@
+"""Public op: fused PPR walk + visit counting with kernel/oracle dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.kernels.ppr_walk.ppr_walk import ppr_walk as ppr_walk_kernel
+from repro.kernels.ppr_walk.ref import ppr_walk_ref
+
+
+def ppr_walk(nbrs, cum, starts, uniforms, *, restart: float,
+             use_kernel: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused construction walk: Monte-Carlo PPR steps + per-start visit
+    counts in one pass.
+
+    ``nbrs``/``cum`` (N, D2) padded adjacency (unified id space),
+    ``starts`` (n,) start node ids, ``uniforms`` (n, n_walks,
+    2*walk_len) f32 transition/restart draws (the shared cross-backend
+    stream from ``core.ppr.walk_uniforms``).  Returns (visited, counts):
+    (n, n_walks*walk_len) arrays; counts holds each node's multiplicity
+    at its first trace occurrence, 0 elsewhere.
+    """
+    if use_kernel:
+        return ppr_walk_kernel(nbrs, cum, starts, uniforms,
+                               restart=restart)
+    return ppr_walk_ref(np.asarray(nbrs), np.asarray(cum),
+                        np.asarray(starts), np.asarray(uniforms),
+                        restart=restart)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: fused PPR Monte-Carlo walk + visit-count pass.
+
+Construction's hot loop walks R restart-walks of length L from every
+backbone node and then counts visits per start (paper §4.2).  Done
+naively that is L round-trips through HBM for the (m, D2) adjacency-row
+gathers plus a host-side sort/run-length pass.  The fusion keeps each
+start's whole workload in VMEM:
+
+  * the padded adjacency (``nbrs``/``cum``, (N, D2)) stays VMEM-resident
+    across the whole grid — the same residency contract as
+    ``queue_gather``'s I2I table (production shards starts over cores so
+    the hot subgraph fits the ~16 MiB budget; node ids must stay below
+    2^24 for the f32 MXU gather to be exact);
+  * one grid program walks all R walkers of one start: the row gather is
+    a one-hot (R, N) @ (N, D2) MXU matmul, the inverse-CDF draw is a
+    compare/count over the gathered (R, D2) cumulative row, and the
+    trailing-pad clamp (f32 cumsums can top out below 1.0) re-uses the
+    same masked-iota machinery;
+  * per-start visit counting is an (S, S) equality reduction on the
+    finished (1, S) trace row — multiplicity at first occurrence, zero
+    elsewhere — so the host goes straight to top-k selection with no
+    sort or run-length pass;
+  * the transition/restart draws stream in as a host-generated (R, 2L)
+    f32 block: the uniform stream is the cross-backend contract (numpy /
+    jax / pallas walk bit-identical traces), so the kernel consumes it
+    rather than owning a PRNG.
+
+grid = (n_starts,): one program per start node, mirroring
+``queue_gather``'s one-program-per-request layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import should_interpret
+
+
+def _kernel(starts_ref, u_ref, nbrs_ref, cum_ref, vis_ref, cnt_ref, *,
+            n_walks: int, walk_len: int, restart: float):
+    W, L = n_walks, walk_len
+    N, D2 = cum_ref.shape
+    home = starts_ref[0, 0]
+    u = u_ref[...]                                 # (W, 2L) f32
+    nbrs = nbrs_ref[...].astype(jnp.float32)       # ids < 2^24: f32-exact
+    cum = cum_ref[...]
+
+    col_n = jax.lax.broadcasted_iota(jnp.int32, (W, N), 1)
+    col_d = jax.lax.broadcasted_iota(jnp.int32, (W, D2), 1)
+    pos = jnp.full((W, 1), home, jnp.int32)
+    trace = []
+    for t in range(L):
+        onehot = (col_n == pos).astype(jnp.float32)
+        rc = jax.lax.dot_general(onehot, cum, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        rn = jax.lax.dot_general(onehot, nbrs, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        us = u[:, 2 * t:2 * t + 1]                 # (W, 1)
+        col = jnp.sum((rc < us).astype(jnp.int32), axis=1, keepdims=True)
+        # clamp overflow draws (f32 cum[-1] < 1) to the last column with
+        # positive mass — never onto a trailing -1 pad
+        inc = jnp.concatenate([rc[:, :1] > 0, rc[:, 1:] > rc[:, :-1]],
+                              axis=1)
+        lastc = jnp.max(jnp.where(inc, col_d, 0), axis=1, keepdims=True)
+        col = jnp.minimum(col, lastc)
+        nxt = jnp.sum(jnp.where(col_d == col, rn, 0.0), axis=1,
+                      keepdims=True).astype(jnp.int32)
+        dead = (nxt < 0) | (rc[:, D2 - 1:D2] <= 0)
+        nxt = jnp.where(dead, pos, nxt)
+        rst = u[:, 2 * t + 1:2 * t + 2] < jnp.float32(restart)
+        pos = jnp.where(rst, home, nxt)
+        trace.append(pos)
+
+    row = jnp.concatenate(trace, axis=1).reshape(1, W * L)
+    vis_ref[...] = row
+    # fused visit counting: multiplicity at first occurrence, 0 at dups
+    S = W * L
+    eq = row.T == row                              # eq[i, j]: v_i == v_j
+    mult = jnp.sum(eq.astype(jnp.int32), axis=0, keepdims=True)
+    ri = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    earlier = jnp.any(eq & (ri < ci), axis=0, keepdims=True)
+    cnt_ref[...] = jnp.where(earlier, 0, mult)
+
+
+@functools.partial(jax.jit, static_argnames=("n_walks", "walk_len",
+                                             "restart", "interpret"))
+def _run(starts, u, nbrs, cum, *, n_walks: int, walk_len: int,
+         restart: float, interpret: bool):
+    n = starts.shape[0]
+    N, D2 = nbrs.shape
+    S = n_walks * walk_len
+    kernel = functools.partial(_kernel, n_walks=n_walks,
+                               walk_len=walk_len, restart=restart)
+    out_shapes = (jax.ShapeDtypeStruct((n, S), jnp.int32),
+                  jax.ShapeDtypeStruct((n, S), jnp.int32))
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),            # start id
+            pl.BlockSpec((n_walks, 2 * walk_len),
+                         lambda b: (b, 0)),                    # uniforms
+            pl.BlockSpec((N, D2), lambda b: (0, 0)),           # nbrs
+            pl.BlockSpec((N, D2), lambda b: (0, 0)),           # cum
+        ],
+        out_specs=(pl.BlockSpec((1, S), lambda b: (b, 0)),
+                   pl.BlockSpec((1, S), lambda b: (b, 0))),
+        out_shape=out_shapes,
+        interpret=interpret)(starts, u, nbrs, cum)
+
+
+def ppr_walk(nbrs, cum, starts, uniforms, *, restart: float,
+             interpret: bool = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused PPR walk.  ``nbrs``/``cum`` (N, D2) padded adjacency,
+    ``starts`` (n,) node ids, ``uniforms`` (n, n_walks, 2*walk_len) f32
+    (column 2t: step draw, 2t+1: restart draw).
+
+    Returns (visited (n, S) int32, counts (n, S) int32) with
+    S = n_walks*walk_len; counts holds each node's multiplicity at its
+    first occurrence in the row, 0 elsewhere.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    n, n_walks, two_l = uniforms.shape
+    walk_len = two_l // 2
+    starts2 = jnp.asarray(starts, jnp.int32).reshape(n, 1)
+    u = jnp.asarray(uniforms, jnp.float32).reshape(n * n_walks, two_l)
+    return _run(starts2, u, jnp.asarray(nbrs, jnp.int32),
+                jnp.asarray(cum, jnp.float32), n_walks=int(n_walks),
+                walk_len=int(walk_len), restart=float(restart),
+                interpret=bool(interpret))

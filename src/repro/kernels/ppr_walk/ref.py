@@ -1,0 +1,67 @@
+"""Per-start Python oracle for the fused PPR walk + visit-count pass.
+
+Deliberately written as the obvious sequential algorithm (walker by
+walker, step by step) so it doubles as the readable spec that the
+Pallas kernel and the vectorized numpy/jax walkers in ``core/ppr.py``
+are all tested against:
+
+  1. inverse-CDF transition: the next column is the count of cumulative
+     entries strictly below the draw; a draw past the row's total mass
+     (f32 cumsums can top out below 1.0) clamps to the last column with
+     positive mass — never a trailing ``-1`` pad;
+  2. dangling rows (no transition mass) hold the walker in place;
+  3. a restart draw below ``restart`` teleports the walker home;
+  4. the visit trace is recorded walker-major (walker w's step t lands
+     at column ``w*walk_len + t``), and each distinct node's visit count
+     is reported at its first occurrence in the trace, 0 elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def ppr_walk_ref(nbrs: np.ndarray, cum: np.ndarray, starts: np.ndarray,
+                 uniforms: np.ndarray, *, restart: float
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """nbrs/cum (N, D2), starts (n,), uniforms (n, n_walks, 2*walk_len).
+    Returns (visited (n, S), counts (n, S)) int64, S = n_walks*walk_len."""
+    n, n_walks, two_l = uniforms.shape
+    walk_len = two_l // 2
+    D2 = cum.shape[1]
+    r32 = np.float32(restart)
+    S = n_walks * walk_len
+    visited = np.empty((n, S), np.int64)
+    counts = np.zeros((n, S), np.int64)
+    for si, s in enumerate(np.asarray(starts, np.int64)):
+        trace = []
+        for w in range(n_walks):
+            pos = int(s)
+            for t in range(walk_len):
+                u_step = uniforms[si, w, 2 * t]
+                u_rst = uniforms[si, w, 2 * t + 1]
+                row_c, row_n = cum[pos], nbrs[pos]
+                col = 0
+                while col < D2 and row_c[col] < u_step:
+                    col += 1
+                last, prev = 0, np.float32(0.0)
+                for j in range(D2):
+                    if row_c[j] > prev:
+                        last = j
+                    prev = row_c[j]
+                col = min(col, last)
+                nxt = int(row_n[col])
+                if nxt < 0 or row_c[-1] <= 0:      # dangling -> stay
+                    nxt = pos
+                if u_rst < r32:                    # teleport home
+                    nxt = int(s)
+                pos = nxt
+                trace.append(pos)
+        visited[si] = trace
+        first = {}
+        for j, v in enumerate(trace):
+            first.setdefault(v, j)
+        for v, j in first.items():
+            counts[si, j] = trace.count(v)
+    return visited, counts

@@ -1,0 +1,355 @@
+"""Accelerated construction + hour-level incremental refresh (paper §4.2).
+
+Covers the PPR walker backends (numpy / jax / pallas bit-agreement on
+the shared uniform stream), the pad-stall fix, the vectorized top-k
+counting, and the incremental-refresh-vs-full-rebuild equivalence.
+"""
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.core import graph_builder as GB
+from repro.core import ppr as P
+from repro.data.edge_dataset import (build_neighbor_tables,
+                                     incremental_refresh)
+from repro.data.synthetic import make_world
+
+
+def _small_graph(nu=50, ni=70, seed=3, **kw):
+    world = make_world(n_users=nu, n_items=ni, events_per_user=10.0,
+                       seed=seed)
+    kw.setdefault("k_cap", 8)
+    kw.setdefault("hub_cap", 64)
+    return GB.build_graph(world.day0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# walker backends
+# ---------------------------------------------------------------------------
+
+def test_walk_uniforms_keyed_by_node_id():
+    full = P.walk_uniforms(7, np.arange(2 * P.U_BLOCK // 64), 4, 3)
+    for i in (0, 5, 100):
+        one = P.walk_uniforms(7, np.array([i]), 4, 3)
+        np.testing.assert_array_equal(one[0], full[i])
+
+
+def test_precompute_backends_bit_identical():
+    g = _small_graph()
+    kw = dict(k_imp=6, n_walks=8, walk_len=3, seed=0)
+    un, itn = P.precompute_ppr_neighbors(g, backend="numpy", **kw)
+    uj, itj = P.precompute_ppr_neighbors(g, backend="jax", **kw)
+    up, itp = P.precompute_ppr_neighbors(g, backend="pallas", **kw)
+    np.testing.assert_array_equal(un, uj)
+    np.testing.assert_array_equal(itn, itj)
+    np.testing.assert_array_equal(un, up)
+    np.testing.assert_array_equal(itn, itp)
+
+
+def test_backends_bit_identical_non_power_of_two_degree():
+    """D2 = 2*max_deg_per_type is not a power of two for odd caps; the
+    jax binary search must still find sum(cum < u) exactly."""
+    g = _small_graph(nu=40, ni=60, seed=7)
+    for mdeg in (7, 5):                          # D2 = 14, 10
+        adj = P.build_padded_hetero_adj(g, mdeg)
+        starts = np.arange(adj.n_nodes, dtype=np.int64)
+        kw = dict(n_walks=8, walk_len=3, seed=1)
+        vn, _ = P.ppr_visit_counts(adj, starts, backend="numpy", **kw)
+        vj, _ = P.ppr_visit_counts(adj, starts, backend="jax", **kw)
+        np.testing.assert_array_equal(vn, vj)
+
+
+def test_unknown_backend_raises():
+    g = _small_graph(nu=10, ni=12)
+    with pytest.raises(ValueError, match="backend"):
+        adj = P.build_padded_hetero_adj(g, 4)
+        P.ppr_visit_counts(adj, np.arange(4), backend="torch")
+
+
+# ---------------------------------------------------------------------------
+# pad-stall fix: an overflowing f32 draw must not strand the walker on a
+# trailing -1 pad
+# ---------------------------------------------------------------------------
+
+def _stall_adj():
+    """Row 0's cumulative mass tops out below 1.0 and its second column
+    is a pad: a draw above cum[-1] used to stall the walker at node 0."""
+    nbrs = np.array([[1, -1], [0, -1]], np.int64)
+    c = np.float32(0.9999999)
+    cum = np.array([[c, c], [1.0, 1.0]], np.float32)
+    return nbrs, cum
+
+
+def test_pad_stall_numpy_step():
+    nbrs, cum = _stall_adj()
+    last = P.last_valid_cols(cum)
+    u = np.array([np.float32(0.99999997)])        # > cum[-1]
+    nxt = P._step(nbrs, cum, last, np.array([0]), u)
+    assert nxt[0] == 1                            # moved, not stalled
+
+
+def test_pad_stall_all_backends_agree():
+    nbrs, cum = _stall_adj()
+    starts = np.array([0], np.int64)
+    # one walk, one step: step draw overflows, no restart
+    uniforms = np.array([[[0.99999997, 0.9]]], np.float32)
+    vis_j = P.ppr_walk_jax(nbrs, cum, starts, uniforms, n_walks=1,
+                           walk_len=1, restart=0.15)
+    from repro.kernels.ppr_walk.ops import ppr_walk
+    vis_k, cnt_k = ppr_walk(nbrs, cum, starts, uniforms, restart=0.15,
+                            use_kernel=True)
+    vis_r, cnt_r = ppr_walk(nbrs, cum, starts, uniforms, restart=0.15,
+                            use_kernel=False)
+    assert vis_j[0, 0] == 1
+    assert np.asarray(vis_k)[0, 0] == 1 and vis_r[0, 0] == 1
+    np.testing.assert_array_equal(np.asarray(cnt_k), cnt_r)
+
+
+def test_dangling_rows_still_stay_put():
+    nbrs = np.array([[-1, -1], [0, -1]], np.int64)
+    cum = np.array([[0.0, 0.0], [1.0, 1.0]], np.float32)
+    last = P.last_valid_cols(cum)
+    nxt = P._step(nbrs, cum, last, np.array([0]), np.array([0.5]))
+    assert nxt[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# vectorized visit counting / top-k
+# ---------------------------------------------------------------------------
+
+def _brute_topk(visited, starts, k, boundary):
+    n, S = visited.shape
+    users = np.full((n, k), -1, np.int64)
+    items = np.full((n, k), -1, np.int64)
+    for r in range(n):
+        cnt = {}
+        for v in visited[r]:
+            if v != starts[r]:
+                cnt[int(v)] = cnt.get(int(v), 0) + 1
+        for side, out in ((0, users), (1, items)):
+            cand = [(c, v) for v, c in cnt.items()
+                    if (v >= boundary) == bool(side)]
+            cand.sort(key=lambda cv: (-cv[0], cv[1]))
+            for j, (c, v) in enumerate(cand[:k]):
+                out[r, j] = v
+    return users, items
+
+
+@given(st.integers(1, 6), st.integers(2, 30), st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_topk_by_count_matches_bruteforce(k, S, seed):
+    rng = np.random.default_rng(seed)
+    n, boundary = 5, 8
+    visited = rng.integers(0, 16, (n, S))
+    starts = rng.integers(0, 16, n)
+    u, it = P.topk_by_count(visited, starts, k, boundary, boundary)
+    ub, ib = _brute_topk(visited, starts, k, boundary)
+    np.testing.assert_array_equal(u, ub)
+    np.testing.assert_array_equal(it, ib)
+
+
+def test_run_length_counts_vectorized():
+    srt = np.sort(np.array([[3, 3, 1, 7, 3, 7, 9, 9, 9, 1]]), axis=1)
+    counts = P._run_length_counts(srt)
+    got = {int(v): int(c) for v, c in zip(srt[0], counts[0]) if c > 0}
+    assert got == {1: 2, 3: 3, 7: 2, 9: 3}
+    assert counts.sum() == srt.shape[1]
+
+
+def test_fused_kernel_counts_match_host_counting():
+    g = _small_graph(nu=30, ni=40)
+    adj = P.build_padded_hetero_adj(g, 8)
+    starts = np.arange(12, dtype=np.int64)
+    u = P.walk_uniforms(0, starts, 6, 3)
+    from repro.kernels.ppr_walk.ops import ppr_walk
+    vis, cnt = ppr_walk(adj.nbrs, adj.cum, starts, u, restart=0.15)
+    vis, cnt = np.asarray(vis, np.int64), np.asarray(cnt, np.int64)
+    # kernel counts (visit order) and host run-length counts (sorted
+    # order) must select identical top-k neighbors
+    glob = P.global_visit_mass(vis, adj.n_nodes)
+    uk, ik = P._topk_from_counts(vis, cnt, starts, 5, g.n_users, 0.5,
+                                 glob)
+    uh, ih = P.topk_by_count(vis, starts, 5, g.n_users, g.n_users,
+                             hub_alpha=0.5, glob=glob)
+    np.testing.assert_array_equal(uk, uh)
+    np.testing.assert_array_equal(ik, ih)
+
+
+# ---------------------------------------------------------------------------
+# pipeline regression: steps=0 must not crash
+# ---------------------------------------------------------------------------
+
+def test_run_pipeline_zero_steps(tiny_world, tiny_cfg):
+    from repro.core.pipeline import run_pipeline
+    res = run_pipeline(tiny_world, tiny_cfg, steps=0, batch_per_type=16)
+    assert res.metrics == {}
+    assert res.user_emb.shape[0] == tiny_world.n_users
+
+
+# ---------------------------------------------------------------------------
+# incremental refresh vs full rebuild
+# ---------------------------------------------------------------------------
+
+def _split_log(log, t_cut):
+    m = log.timestamp <= t_cut
+    old = GB.EngagementLog(log.user_id[m], log.item_id[m],
+                           log.event_type[m], log.timestamp[m],
+                           log.n_users, log.n_items)
+    delta = log.window(86400.0, 86400.0 - t_cut)
+    return old, delta
+
+
+def test_incremental_refresh_equals_full_rebuild():
+    world = make_world(n_users=60, n_items=80, events_per_user=8.0,
+                       seed=5)
+    old, delta = _split_log(world.day0, 79200.0)        # 22h | 2h delta
+    assert len(delta.user_id) > 0
+    kw = dict(k_cap=12, hub_cap=512)                    # no hub RNG
+    pw = dict(k_imp=6, n_walks=8, walk_len=3, seed=0)
+    g_old = GB.build_graph(old, keep_state=True, **kw)
+    t_old = build_neighbor_tables(g_old, keep_state=True, **pw)
+    g_ref, t_ref, rep = incremental_refresh(g_old, t_old, delta)
+    g_full = GB.build_graph(world.day0, **kw)
+    t_full = build_neighbor_tables(g_full, **pw)
+
+    # edge sets match a full rebuild bitwise, everywhere
+    for et in ("ui", "uu", "ii"):
+        a, b = getattr(g_ref, et), getattr(g_full, et)
+        np.testing.assert_array_equal(a.src, b.src)
+        np.testing.assert_array_equal(a.dst, b.dst)
+        np.testing.assert_array_equal(a.weight, b.weight)
+    np.testing.assert_array_equal(g_ref.group1_users, g_full.group1_users)
+    np.testing.assert_array_equal(g_ref.group1_items, g_full.group1_items)
+
+    # affected table rows match the full rebuild; unaffected rows stable
+    n = g_full.n_users + g_full.n_items
+    am = np.zeros(n, bool)
+    am[rep["affected_nodes"]] = True
+    np.testing.assert_array_equal(t_ref.user_nbrs[am], t_full.user_nbrs[am])
+    np.testing.assert_array_equal(t_ref.item_nbrs[am], t_full.item_nbrs[am])
+    np.testing.assert_array_equal(t_ref.user_nbrs[~am], t_old.user_nbrs[~am])
+    np.testing.assert_array_equal(t_ref.item_nbrs[~am], t_old.item_nbrs[~am])
+
+
+def test_incremental_refresh_fractional_event_weights():
+    """U-I aggregates stay float64 through the merge: fractional event
+    weights must not double-round versus a from-scratch build."""
+    world = make_world(n_users=40, n_items=50, events_per_user=8.0,
+                       seed=13)
+    old, delta = _split_log(world.day0, 79200.0)
+    ew = {0: 0.1, 1: 0.3, 2: 0.7, 3: 1.3}
+    kw = dict(k_cap=8, hub_cap=512, event_weights=ew)
+    pw = dict(k_imp=5, n_walks=8, walk_len=2, seed=0)
+    g_old = GB.build_graph(old, keep_state=True, **kw)
+    t_old = build_neighbor_tables(g_old, keep_state=True, **pw)
+    g_ref, t_ref, rep = incremental_refresh(g_old, t_old, delta)
+    g_full = GB.build_graph(world.day0, **kw)
+    t_full = build_neighbor_tables(g_full, **pw)
+    for et in ("ui", "uu", "ii"):
+        a, b = getattr(g_ref, et), getattr(g_full, et)
+        np.testing.assert_array_equal(a.src, b.src)
+        np.testing.assert_array_equal(a.weight, b.weight)
+    am = np.zeros(g_full.n_users + g_full.n_items, bool)
+    am[rep["affected_nodes"]] = True
+    np.testing.assert_array_equal(t_ref.user_nbrs[am], t_full.user_nbrs[am])
+    np.testing.assert_array_equal(t_ref.item_nbrs[am], t_full.item_nbrs[am])
+
+
+def test_incremental_refresh_grows_item_space_and_routes_group2():
+    world = make_world(n_users=50, n_items=60, events_per_user=8.0,
+                       seed=2)
+    old = world.day0
+    ni_new = 65
+    rng = np.random.default_rng(9)
+    du = rng.integers(0, 50, 30).astype(np.int64)
+    di = np.r_[rng.integers(0, 60, 25), np.arange(60, 65)].astype(np.int64)
+    delta = GB.EngagementLog(du, di,
+                             rng.integers(0, 4, 30).astype(np.int32),
+                             np.full(30, 90000.0), 50, ni_new)
+    merged = GB.EngagementLog(
+        np.r_[old.user_id, delta.user_id],
+        np.r_[old.item_id, delta.item_id],
+        np.r_[old.event_type, delta.event_type],
+        np.r_[old.timestamp, delta.timestamp], 50, ni_new)
+    kw = dict(k_cap=12, hub_cap=512)
+    pw = dict(k_imp=6, n_walks=8, walk_len=3, seed=0)
+    prev_emb = rng.normal(0, 1, (50 + ni_new, 16)).astype(np.float32)
+    g_old = GB.build_graph(old, keep_state=True, **kw)
+    t_old = build_neighbor_tables(g_old, keep_state=True, **pw)
+    g_ref, t_ref, rep = incremental_refresh(g_old, t_old, delta,
+                                            prev_emb=prev_emb)
+    g_full = GB.build_graph(merged, **kw)
+    t_full = build_neighbor_tables(g_full, **pw, prev_emb=prev_emb)
+
+    assert g_ref.n_items == ni_new
+    assert t_ref.user_nbrs.shape[0] == 50 + ni_new
+    n = 50 + ni_new
+    am = np.zeros(n, bool)
+    am[rep["affected_nodes"]] = True
+    assert am[50 + np.arange(60, 65)].all()      # new items are affected
+    np.testing.assert_array_equal(t_ref.user_nbrs[am], t_full.user_nbrs[am])
+    np.testing.assert_array_equal(t_ref.item_nbrs[am], t_full.item_nbrs[am])
+    # fresh items without same-type co-engagement route through the
+    # Group-2 KNN fallback: same-type neighbor rows are populated
+    fresh_g2 = [gid for gid in 50 + np.arange(60, 65)
+                if not g_ref.group1_items[gid - 50]]
+    assert fresh_g2
+    g1i = np.flatnonzero(g_ref.group1_items)
+    for gid in fresh_g2:
+        row = t_ref.item_nbrs[gid]
+        assert (row >= 0).any()
+        assert (row[row >= 0] >= 50).all()       # same-type = items
+        knn = P.group2_neighbors(prev_emb[50:], g1i,
+                                 np.array([gid - 50]), 6)[0]
+        m = knn >= 0
+        np.testing.assert_array_equal(row[m], 50 + knn[m])
+
+
+def test_refresh_leaves_isolated_component_untouched():
+    """A disconnected community never reachable from the delta keeps its
+    tables bit-identical (and is not re-walked at all)."""
+    nu, ni = 20, 20
+    rng = np.random.default_rng(0)
+    # two disjoint communities: users/items [0, 10) and [10, 20)
+    ev_u, ev_i = [], []
+    for base in (0, 10):
+        u = rng.integers(base, base + 10, 120)
+        i = rng.integers(base, base + 10, 120)
+        ev_u.append(u)
+        ev_i.append(i)
+    log = GB.EngagementLog(
+        np.concatenate(ev_u), np.concatenate(ev_i),
+        rng.integers(0, 4, 240).astype(np.int32),
+        rng.random(240) * 80000.0, nu, ni)
+    delta = GB.EngagementLog(                   # touches community 0 only
+        rng.integers(0, 10, 15), rng.integers(0, 10, 15),
+        rng.integers(0, 4, 15).astype(np.int32),
+        np.full(15, 85000.0), nu, ni)
+    kw = dict(k_cap=8, hub_cap=512)
+    g_old = GB.build_graph(log, keep_state=True, **kw)
+    t_old = build_neighbor_tables(g_old, k_imp=5, n_walks=8, walk_len=3,
+                                  keep_state=True)
+    g_ref, t_ref, rep = incremental_refresh(g_old, t_old, delta)
+    iso = np.r_[np.arange(10, 20), nu + np.arange(10, 20)]
+    assert not np.isin(iso, rep["affected_nodes"]).any()
+    np.testing.assert_array_equal(t_ref.user_nbrs[iso], t_old.user_nbrs[iso])
+    np.testing.assert_array_equal(t_ref.item_nbrs[iso], t_old.item_nbrs[iso])
+
+
+def test_refresh_requires_state():
+    g = _small_graph(nu=10, ni=12, keep_state=False)
+    assert g.refresh is None
+    delta = GB.EngagementLog(np.array([0]), np.array([0]),
+                             np.array([0], np.int32), np.array([0.0]),
+                             10, 12)
+    with pytest.raises(ValueError, match="keep_state"):
+        GB.refresh_graph(g, delta)
+
+
+def test_refresh_rejects_user_space_change():
+    g = _small_graph(nu=10, ni=12, keep_state=True)
+    delta = GB.EngagementLog(np.array([0]), np.array([0]),
+                             np.array([0], np.int32), np.array([0.0]),
+                             11, 12)
+    with pytest.raises(ValueError, match="user-id space"):
+        GB.refresh_graph(g, delta)

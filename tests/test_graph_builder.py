@@ -32,6 +32,53 @@ def test_ui_edges_aggregate_events():
         np.testing.assert_allclose(got[k], expect[k], rtol=1e-5)
 
 
+def test_unknown_event_types_contribute_zero_weight():
+    """Out-of-range event types must not alias onto the boundary weight
+    buckets (a corrupt type id used to count as a max-weight buy)."""
+    nu, ni = 4, 5
+    log = GB.EngagementLog(
+        user_id=np.array([0, 1, 2, 3]),
+        item_id=np.array([1, 2, 3, 4]),
+        event_type=np.array([0, 99, -3, 3], np.int32),   # click/??/??/buy
+        timestamp=np.zeros(4), n_users=nu, n_items=ni)
+    ui = GB.build_ui_edges(log)
+    got = {(int(s), int(d)): float(w)
+           for s, d, w in zip(ui.src, ui.dst, ui.weight)}
+    # unknown (99) and negative (-3) events create no edges at all
+    assert got == {(0, 1): 1.0, (3, 4): 5.0}
+
+
+def test_unknown_event_types_do_not_inflate_known_pairs():
+    nu, ni = 2, 2
+    log = GB.EngagementLog(
+        user_id=np.array([0, 0, 0]),
+        item_id=np.array([1, 1, 1]),
+        event_type=np.array([1, 7, -1], np.int32),
+        timestamp=np.zeros(3), n_users=nu, n_items=ni)
+    ui = GB.build_ui_edges(log)
+    assert len(ui) == 1 and float(ui.weight[0]) == 2.0   # like only
+
+
+def test_hub_subsample_single_anchor_cannot_fake_min_common():
+    """One popular anchor must never satisfy cnt >= 2 on its own: a
+    with-replacement hub subsample used to emit the same (src, dst)
+    pair twice through duplicate offset draws."""
+    n_users, n_items = 12, 1
+    for seed in range(20):
+        # one item engaged once by each of 12 users -> every user pair
+        # shares exactly ONE common anchor -> no U-U edge is correct
+        log = GB.EngagementLog(
+            user_id=np.arange(n_users),
+            item_id=np.zeros(n_users, np.int64),
+            event_type=np.zeros(n_users, np.int32),
+            timestamp=np.zeros(n_users), n_users=n_users, n_items=n_items)
+        ui = GB.build_ui_edges(log)
+        uu = GB.build_uu_edges(ui, n_users, min_common=2, hub_cap=6,
+                               rng=np.random.default_rng(seed))
+        assert len(uu) == 0, f"seed {seed}: single-anchor pair passed " \
+                             f"min_common"
+
+
 def test_co_engagement_symmetry_and_threshold():
     log = _log()
     ui = GB.build_ui_edges(log)

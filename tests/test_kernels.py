@@ -119,6 +119,40 @@ def test_flash_attention_bf16():
 
 
 # ---------------------------------------------------------------------------
+# ppr_walk
+# ---------------------------------------------------------------------------
+
+def _random_padded_adj(N, D2, seed):
+    rng = np.random.default_rng(seed)
+    nbrs = rng.integers(0, N, (N, D2)).astype(np.int64)
+    deg = rng.integers(0, D2 + 1, N)              # some dangling rows
+    mask = np.arange(D2)[None, :] < deg[:, None]
+    nbrs = np.where(mask, nbrs, -1)
+    probs = np.where(mask, rng.random((N, D2)), 0.0)
+    tot = probs.sum(1, keepdims=True)
+    probs = np.where(tot > 0, probs / np.maximum(tot, 1e-12), 0.0)
+    return nbrs, np.cumsum(probs, 1).astype(np.float32)
+
+
+@pytest.mark.parametrize("N,D2,n,W,L", [
+    (64, 8, 16, 4, 3), (128, 16, 8, 8, 2), (200, 4, 12, 2, 5),
+])
+def test_ppr_walk_sweep(N, D2, n, W, L):
+    from repro.core.ppr import walk_uniforms
+    from repro.kernels.ppr_walk.ops import ppr_walk
+    nbrs, cum = _random_padded_adj(N, D2, N + D2)
+    starts = np.random.default_rng(n).integers(0, N, n).astype(np.int64)
+    u = walk_uniforms(0, starts, W, L)
+    vk, ck = ppr_walk(nbrs, cum, starts, u, restart=0.15, use_kernel=True)
+    vr, cr = ppr_walk(nbrs, cum, starts, u, restart=0.15, use_kernel=False)
+    # walks are integer traces on a shared uniform stream: exact match
+    np.testing.assert_array_equal(np.asarray(vk), vr)
+    np.testing.assert_array_equal(np.asarray(ck), cr)
+    # counts are multiplicities at first occurrence: rows sum to S
+    assert (np.asarray(ck).sum(axis=1) == W * L).all()
+
+
+# ---------------------------------------------------------------------------
 # fused contrastive
 # ---------------------------------------------------------------------------
 
