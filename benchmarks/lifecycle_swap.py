@@ -1,0 +1,129 @@
+"""Lifecycle smoke benchmark: publication recall gate + swap stall.
+
+What this establishes (and CI gates):
+
+  * the published cluster index retains >= ``LIFECYCLE_MIN_RECALL`` of
+    exact-KNN Recall@100 on held-out next-day engagements (the
+    co-learned index is allowed to trade at most a bounded recall loss
+    for its O(1) serving reads);
+  * an atomic hot-swap under live ingest stalls serving for at most
+    ``SWAP_MAX_STALL_MS`` (the bulk store build + event-ring replay run
+    off-path; only the catch-up + flip is a critical section);
+  * every response during a swap storm is attributable to exactly one
+    published version.
+
+Results land in ``benchmarks/results/lifecycle_swap.json``.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import write_result
+from repro.configs.base import RankGraph2Config, RQConfig
+from repro.core.graph_builder import EngagementLog, build_graph
+from repro.data.edge_dataset import build_neighbor_tables
+from repro.data.synthetic import make_world
+from repro.lifecycle import LifecycleConfig, LifecycleRuntime
+
+
+def run(full: bool = False) -> Dict:
+    out: Dict = {}
+    n_users, n_items = (1000, 1600) if full else (500, 800)
+    world = make_world(n_users=n_users, n_items=n_items,
+                       events_per_user=20.0, seed=1)
+    cfg = RankGraph2Config(
+        d_user_feat=64, d_item_feat=64, d_embed=32, n_heads=2, d_hidden=96,
+        k_imp=10, k_train=4, n_negatives=24, n_pool_neg=8,
+        rq=RQConfig(codebook_sizes=(16, 4), hist_len=50), dtype="float32")
+    lcfg = LifecycleConfig(steps_per_cycle=200 if full else 150,
+                           batch_per_type=64, i2i_k=12,
+                           recency_s=2 * 86400.0, recall_k=100,
+                           recall_queries=300, min_recall_ratio=0.0)
+
+    log = world.day0
+    m = log.timestamp <= 82800.0
+    old = EngagementLog(log.user_id[m], log.item_id[m], log.event_type[m],
+                        log.timestamp[m], log.n_users, log.n_items)
+    t0 = time.perf_counter()
+    g = build_graph(old, k_cap=16, hub_cap=24, keep_state=True)
+    tables = build_neighbor_tables(g, k_imp=10, n_walks=16, walk_len=3,
+                                   backend="jax", keep_state=True)
+    out["construct_s"] = time.perf_counter() - t0
+
+    rt = LifecycleRuntime(cfg, lcfg, g, tables, world.user_feat,
+                          world.item_feat, world=world, seed=0)
+    t0 = time.perf_counter()
+    rep0 = rt.run_cycle(now=86400.0)
+    out["cycle0_s"] = time.perf_counter() - t0
+    out["publish_v1"] = rep0["publish"]
+
+    # live traffic against v1
+    d1 = world.day1
+    rt.server.ingest(d1.user_id, d1.item_id, d1.timestamp)
+    now = float(d1.timestamp.max())
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, world.n_users, 1024)
+    rt.server.retrieve_batch(users, now, 32)                  # warm
+    t0 = time.perf_counter()
+    _, v_before = rt.server.retrieve_batch(users, now, 32)
+    out["retrieve_us_per_req"] = (time.perf_counter() - t0) / 1024 * 1e6
+    assert v_before == 1
+
+    # cycle 1: trailing-hour refresh + publish v2 + hot swap
+    delta = log.window(86400.0, 3600.0)
+    t0 = time.perf_counter()
+    rep1 = rt.run_cycle(delta, now=now, backend="jax")
+    out["cycle1_s"] = time.perf_counter() - t0
+    out["publish_v2"] = rep1["publish"]
+    out["swap"] = rep1["swap"]
+
+    # swap storm: repeated flips under interleaved serving; every
+    # response must carry exactly the live version and the worst stall
+    # must stay bounded
+    import dataclasses as _dc
+    snap2 = rt.server.handle.acquire().snapshot
+    stalls = []
+    for v in range(3, 6):
+        snap = _dc.replace(snap2, version=v)
+        r = rt.server.swap_to(snap, now)
+        stalls.append(r["stall_ms"])
+        _, ver = rt.server.retrieve_batch(users[:128], now, 16)
+        assert ver == snap.version, "response not from the live version"
+    out["swap_stall_ms_max"] = float(np.max(stalls))
+    out["swap_stall_ms_mean"] = float(np.mean(stalls))
+    out["swap_build_ms"] = rep1["swap"]["build_ms"]
+
+    ratio = min(out["publish_v1"]["recall_ratio"],
+                out["publish_v2"]["recall_ratio"])
+    out["recall_ratio_min"] = ratio
+
+    print("\nLifecycle smoke:")
+    print(f"  publish v1 recall@100 ratio: "
+          f"{out['publish_v1']['recall_ratio']:.3f} "
+          f"(index {out['publish_v1']['recall_index']:.3f} vs exact "
+          f"{out['publish_v1']['recall_exact']:.3f})")
+    print(f"  publish v2 recall@100 ratio: "
+          f"{out['publish_v2']['recall_ratio']:.3f}")
+    print(f"  swap: build {out['swap']['build_ms']:.2f}ms, "
+          f"stall {out['swap']['stall_ms']:.3f}ms, "
+          f"{int(out['swap']['replayed_events'])} events re-keyed")
+    print(f"  swap storm: {len(stalls)} flips, max stall "
+          f"{out['swap_stall_ms_max']:.3f}ms")
+
+    # acceptance gates (CI overrides via env on noisy shared runners)
+    min_recall = float(os.environ.get("LIFECYCLE_MIN_RECALL", "0.8"))
+    max_stall = float(os.environ.get("SWAP_MAX_STALL_MS", "50"))
+    assert ratio >= min_recall, \
+        f"published index recall ratio {ratio:.3f} < {min_recall}"
+    assert out["swap_stall_ms_max"] <= max_stall, \
+        f"swap stall {out['swap_stall_ms_max']:.2f}ms > {max_stall}ms"
+    write_result("lifecycle_swap", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(full=os.environ.get("BENCH_FULL", "") == "1")

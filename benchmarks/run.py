@@ -24,6 +24,7 @@ def main(argv=None) -> int:
 
     from benchmarks import paper_tables as PT
     from benchmarks import graph_build_scaling as GBS
+    from benchmarks import lifecycle_swap as LS
     from benchmarks import roofline as RL
     from benchmarks import serving_kernels as SK
 
@@ -37,6 +38,7 @@ def main(argv=None) -> int:
         ("table8_serving_cost", PT.table8_serving_cost),
         ("graph_build_scaling", GBS.run),
         ("serving_kernels", SK.run),
+        ("lifecycle_swap", LS.run),
         ("roofline", RL.run),
     ]
     if args.only:

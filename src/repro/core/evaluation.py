@@ -39,8 +39,12 @@ def _topk_neighbors(emb: np.ndarray, queries: np.ndarray, k: int,
     return out
 
 
-def _user_day1_items(log: EngagementLog) -> list:
-    items = [set() for _ in range(log.n_users)]
+def _user_day1_items(log: EngagementLog,
+                     n_users: Optional[int] = None) -> list:
+    """Per-user next-day item sets; ``n_users`` may exceed the log's
+    user space (hour-level refreshes mint users after the eval window —
+    they simply have empty ground truth)."""
+    items = [set() for _ in range(max(log.n_users, n_users or 0))]
     for u, i in zip(log.user_id, log.item_id):
         items[u].add(int(i))
     return items
@@ -50,7 +54,7 @@ def user_recall(user_emb: np.ndarray, world: SyntheticWorld, *,
                 ks: Sequence[int] = (5, 10, 50, 100),
                 n_queries: int = 500, seed: int = 0) -> Dict[int, float]:
     """U2U2I Recall@K via top-K neighbor users' next-day engagements."""
-    day1 = _user_day1_items(world.day1)
+    day1 = _user_day1_items(world.day1, len(user_emb))
     rng = np.random.default_rng(seed)
     active = np.flatnonzero([len(s) > 0 for s in day1])
     if len(active) == 0:

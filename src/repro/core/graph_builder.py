@@ -55,6 +55,28 @@ class EdgeSet:
 
 
 @dataclasses.dataclass
+class HubDraws:
+    """Per-anchor hub-subsample offsets actually drawn by a build
+    (``_co_engagement``): one row of ``hub_cap`` sorted offsets (-1 =
+    deduped slot) per anchor whose degree exceeded ``hub_cap``.
+
+    Draws are a pure function of ``(seed, tag, anchor id, degree)`` via
+    ``hub_uniforms`` — persisting them lets an incremental refresh skip
+    regeneration for untouched hub anchors, and regeneration for touched
+    anchors reproduces exactly the offsets a from-scratch rebuild on the
+    merged window would draw (the refresh-vs-rebuild bitwise guarantee
+    holds *even when* ``hub_cap`` triggers)."""
+    anchor_ids: np.ndarray       # (n_hub,) ascending anchor node ids
+    offsets: np.ndarray          # (n_hub, hub_cap) int64, -1 = dropped dup
+    lens: np.ndarray             # (n_hub,) anchor degree at draw time
+
+
+def _empty_hub_draws(cap: int) -> HubDraws:
+    return HubDraws(np.zeros(0, np.int64), np.zeros((0, cap), np.int64),
+                    np.zeros(0, np.int64))
+
+
+@dataclasses.dataclass
 class RefreshState:
     """Pre-subsample construction aggregates retained for hour-level
     incremental refresh (``refresh_graph``).  At production scale these
@@ -63,6 +85,7 @@ class RefreshState:
     uu_raw: EdgeSet              # canonical (lo < hi) co-pairs, pre-subsample
     ii_raw: EdgeSet              # canonical co-pairs, pre-Eq.3 correction
     params: Dict                 # build knobs a refresh must reuse
+    hub_draws: Optional[Dict[str, HubDraws]] = None  # per-anchor offsets
 
 
 @dataclasses.dataclass
@@ -117,10 +140,65 @@ def build_ui_edges(log: EngagementLog,
 # co-engagement edges (Eq. 1 / Eq. 2)
 # ---------------------------------------------------------------------------
 
+HUB_BLOCK = 4096     # anchors per hub-subsample RNG block (keyed stream)
+
+
+def hub_uniforms(seed: int, tag: str, anchor_ids: np.ndarray,
+                 cap: int) -> np.ndarray:
+    """(len(anchor_ids), cap) f32 uniforms for hub subsampling, keyed by
+    *anchor node id* in fixed ``HUB_BLOCK``-sized blocks (mirroring
+    ``ppr.walk_uniforms``) — not by stream position.  An incremental
+    refresh that re-expands only the delta-reachable anchors therefore
+    regenerates exactly the draws a from-scratch rebuild on the merged
+    window would consume for them.  ``tag`` separates the U-U and I-I
+    streams (their anchor id spaces overlap)."""
+    anchor_ids = np.asarray(anchor_ids, np.int64)
+    out = np.empty((len(anchor_ids), cap), np.float64)
+    blocks = anchor_ids // HUB_BLOCK
+    for b in np.unique(blocks):
+        rng = np.random.default_rng((seed, tag.encode(), int(b)))
+        blk = rng.random((HUB_BLOCK, cap))
+        m = blocks == b
+        out[m] = blk[anchor_ids[m] - b * HUB_BLOCK]
+    return out
+
+
+def _hub_offsets(seed: int, tag: str, hub_ids: np.ndarray,
+                 hub_lens: np.ndarray, cap: int,
+                 prev: Optional[HubDraws]) -> np.ndarray:
+    """Sorted, per-row-deduped subsample offsets for hub anchors: a draw
+    with replacement can emit the same engager slot — and hence the same
+    (src, dst) pair — several times from one anchor, inflating wsum and
+    letting a single common anchor satisfy ``cnt >= min_common`` (Eq.
+    1/2 count *distinct* common anchors).  Duplicate picks are dropped
+    (-1), shrinking the sample slightly — this is a subsample step
+    anyway.  Rows persisted in ``prev`` with an unchanged degree are
+    reused verbatim; the rest regenerate from the keyed stream (same
+    result, just not free)."""
+    offs = np.empty((len(hub_ids), cap), np.int64)
+    need = np.ones(len(hub_ids), bool)
+    if prev is not None and len(prev.anchor_ids):
+        pos = np.searchsorted(prev.anchor_ids, hub_ids)
+        pos = np.minimum(pos, len(prev.anchor_ids) - 1)
+        hit = (prev.anchor_ids[pos] == hub_ids) & (prev.lens[pos] == hub_lens)
+        offs[hit] = prev.offsets[pos[hit]]
+        need = ~hit
+    if need.any():
+        u = hub_uniforms(seed, tag, hub_ids[need], cap)
+        o = (u * hub_lens[need][:, None]).astype(np.int64)
+        o.sort(axis=1)
+        dup = np.zeros_like(o, bool)
+        dup[:, 1:] = o[:, 1:] == o[:, :-1]
+        o[dup] = -1
+        offs[need] = o
+    return offs
+
+
 def _co_engagement(anchor: np.ndarray, other: np.ndarray, w: np.ndarray,
                    n_other: int, min_common: int, hub_cap: int,
-                   rng: np.random.Generator
-                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                   seed: int, tag: str,
+                   prev_draws: Optional[HubDraws] = None
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, HubDraws]:
     """Pairs of ``other`` nodes co-engaged via the same ``anchor`` node.
 
     For U-U edges: anchor=item, other=user.  For I-I: anchor=user,
@@ -128,8 +206,12 @@ def _co_engagement(anchor: np.ndarray, other: np.ndarray, w: np.ndarray,
     defence against hundreds-of-trillions of raw pairs: popular anchors
     contribute a bounded sample of pairs; with bias correction +
     top-K subsampling this preserves retrieval-relevant structure).
+    Hub draws come from the anchor-keyed ``hub_uniforms`` stream
+    (reusing ``prev_draws`` rows where the degree is unchanged), so the
+    output is a pure function of the aggregated input — independent of
+    whether it is reached by a full build or an incremental refresh.
 
-    Returns (src, dst, weight) of *undirected* co-edges with
+    Returns (src, dst, weight, draws) with *undirected* co-edges,
     weight = ln(sum_e w_src,e * w_dst,e) and |common| >= min_common.
     """
     order = np.argsort(anchor, kind="stable")
@@ -140,10 +222,11 @@ def _co_engagement(anchor: np.ndarray, other: np.ndarray, w: np.ndarray,
     lens = ends - starts
     keep = lens >= 2
     starts, ends, lens = starts[keep], ends[keep], lens[keep]
+    cap = hub_cap
     if len(starts) == 0:
         z = np.zeros(0)
-        return z.astype(np.int64), z.astype(np.int64), z.astype(np.float32)
-    cap = hub_cap
+        return (z.astype(np.int64), z.astype(np.int64),
+                z.astype(np.float32), _empty_hub_draws(cap))
     # pad each anchor's engagers to a (n_anchor, cap) matrix (random subset
     # for anchors above cap)
     nseg = len(starts)
@@ -154,20 +237,12 @@ def _co_engagement(anchor: np.ndarray, other: np.ndarray, w: np.ndarray,
     pick = np.arange(cap)[None, :].repeat(nseg, 0)
     big = lens > cap
     if big.any():
-        # random offsets for hub anchors, deduped per row: a draw with
-        # replacement can emit the same engager slot — and hence the same
-        # (src, dst) pair — several times from one anchor, inflating wsum
-        # and letting a single common anchor satisfy ``cnt >= min_common``
-        # (Eq. 1/2 count *distinct* common anchors).  Duplicate picks are
-        # dropped, shrinking the sample slightly — this is a subsample
-        # step anyway.
-        offs = (rng.random((int(big.sum()), cap)) * lens[big][:, None]
-                ).astype(np.int64)
-        offs.sort(axis=1)
-        dup = np.zeros_like(offs, bool)
-        dup[:, 1:] = offs[:, 1:] == offs[:, :-1]
-        offs[dup] = -1
+        hub_ids = a[starts[big]]
+        offs = _hub_offsets(seed, tag, hub_ids, lens[big], cap, prev_draws)
         pick[big] = offs
+        draws = HubDraws(hub_ids, offs, lens[big].copy())
+    else:
+        draws = _empty_hub_draws(cap)
     valid = (pick >= 0) & (pick < lens[:, None])
     idx = np.clip(starts[:, None] + pick, 0, len(a) - 1)
     mat = np.where(valid, o[idx], -1)
@@ -193,7 +268,7 @@ def _co_engagement(anchor: np.ndarray, other: np.ndarray, w: np.ndarray,
     wlog = np.log(np.maximum(wsum, 1e-12)).astype(np.float32)
     # Eq.1/2: w = ln(sum w*w); clamp at small positive so weights stay usable
     wlog = np.maximum(wlog, 1e-3)
-    return lo, hi, wlog
+    return lo, hi, wlog, draws
 
 
 def _mirror(e: EdgeSet) -> EdgeSet:
@@ -203,19 +278,17 @@ def _mirror(e: EdgeSet) -> EdgeSet:
 
 
 def build_uu_edges(ui: EdgeSet, n_users: int, *, min_common: int = 2,
-                   hub_cap: int = 32, rng=None) -> EdgeSet:
-    rng = rng or np.random.default_rng(0)
-    lo, hi, w = _co_engagement(ui.dst, ui.src, ui.weight, n_users,
-                               min_common, hub_cap, rng)
+                   hub_cap: int = 32, seed: int = 0) -> EdgeSet:
+    lo, hi, w, _ = _co_engagement(ui.dst, ui.src, ui.weight, n_users,
+                                  min_common, hub_cap, seed, "uu")
     # undirected: materialize both directions
     return _mirror(EdgeSet(lo, hi, w))
 
 
 def build_ii_edges(ui: EdgeSet, n_items: int, *, min_common: int = 2,
-                   hub_cap: int = 32, rng=None) -> EdgeSet:
-    rng = rng or np.random.default_rng(1)
-    lo, hi, w = _co_engagement(ui.src, ui.dst, ui.weight, n_items,
-                               min_common, hub_cap, rng)
+                   hub_cap: int = 32, seed: int = 0) -> EdgeSet:
+    lo, hi, w, _ = _co_engagement(ui.src, ui.dst, ui.weight, n_items,
+                                  min_common, hub_cap, seed, "ii")
     return _mirror(EdgeSet(lo, hi, w))
 
 
@@ -294,7 +367,9 @@ def filter_edges(edges: EdgeSet, keep_src: np.ndarray,
 def _finalize_graph(n_users: int, n_items: int, ui_full: EdgeSet,
                     uu_raw: EdgeSet, ii_raw: EdgeSet, *, alpha_pop: float,
                     k_cap: int, state_params: Dict, keep_state: bool,
-                    t0: float) -> HeteroGraph:
+                    t0: float,
+                    hub_draws: Optional[Dict[str, HubDraws]] = None
+                    ) -> HeteroGraph:
     """Shared tail of full build and incremental refresh: Eq.3 correction,
     top-K_CAP subsampling, group split, state retention."""
     uu = _mirror(uu_raw)
@@ -313,7 +388,8 @@ def _finalize_graph(n_users: int, n_items: int, ui_full: EdgeSet,
     g1i = np.zeros(n_items, bool)
     g1i[ii_s.src] = True
 
-    state = (RefreshState(ui_full, uu_raw, ii_raw, dict(state_params))
+    state = (RefreshState(ui_full, uu_raw, ii_raw, dict(state_params),
+                          hub_draws=hub_draws)
              if keep_state else None)
     return HeteroGraph(n_users, n_items, ui_s, uu_s, ii_s,
                        group1_users=g1u, group1_items=g1i,
@@ -337,7 +413,6 @@ def build_graph(log: EngagementLog, *,
     (opt-in: the raw co-pair sets can dwarf the subsampled graph).
     """
     t0 = time.perf_counter()
-    rng = np.random.default_rng(seed)
     ui = build_ui_edges(log, event_weights)
 
     # (1) user retention by business value for the U-U side
@@ -345,18 +420,22 @@ def build_graph(log: EngagementLog, *,
                                    user_budget or log.n_users)
     ui_for_uu = filter_edges(ui, keep_u, np.ones(log.n_items, bool))
 
-    uu_raw = EdgeSet(*_co_engagement(ui_for_uu.dst, ui_for_uu.src,
-                                     ui_for_uu.weight, log.n_users,
-                                     c_u, hub_cap, rng))
-    ii_raw = EdgeSet(*_co_engagement(ui.src, ui.dst, ui.weight,
-                                     log.n_items, c_i, hub_cap, rng))
+    lo, hi, w, uu_draws = _co_engagement(ui_for_uu.dst, ui_for_uu.src,
+                                         ui_for_uu.weight, log.n_users,
+                                         c_u, hub_cap, seed, "uu")
+    uu_raw = EdgeSet(lo, hi, w)
+    lo, hi, w, ii_draws = _co_engagement(ui.src, ui.dst, ui.weight,
+                                         log.n_items, c_i, hub_cap,
+                                         seed, "ii")
+    ii_raw = EdgeSet(lo, hi, w)
     params = dict(alpha_pop=alpha_pop, c_u=c_u, c_i=c_i, k_cap=k_cap,
                   hub_cap=hub_cap, user_budget=user_budget,
                   event_weights=event_weights, seed=seed)
     return _finalize_graph(log.n_users, log.n_items, ui, uu_raw, ii_raw,
                            alpha_pop=alpha_pop, k_cap=k_cap,
                            state_params=params, keep_state=keep_state,
-                           t0=t0)
+                           t0=t0,
+                           hub_draws={"uu": uu_draws, "ii": ii_draws})
 
 
 # ---------------------------------------------------------------------------
@@ -412,10 +491,27 @@ def _canonical_pair_order(e: EdgeSet, n_other: int) -> EdgeSet:
     return EdgeSet(e.src[order], e.dst[order], e.weight[order])
 
 
+def _merge_hub_draws(prev: Optional[HubDraws], new: HubDraws,
+                     recomputed: np.ndarray, cap: int) -> HubDraws:
+    """Carry forward persisted hub draws: rows for anchors outside the
+    recomputed set survive from ``prev``; recomputed anchors take their
+    fresh rows from ``new`` (which already reused matching prev rows)."""
+    if prev is None or len(prev.anchor_ids) == 0:
+        return new
+    keep = ~np.isin(prev.anchor_ids, recomputed)
+    ids = np.concatenate([prev.anchor_ids[keep], new.anchor_ids])
+    offs = np.concatenate([prev.offsets[keep], new.offsets]) \
+        if len(ids) else np.zeros((0, cap), np.int64)
+    lens = np.concatenate([prev.lens[keep], new.lens])
+    order = np.argsort(ids, kind="stable")
+    return HubDraws(ids[order], offs[order], lens[order])
+
+
 def _recompute_touching_pairs(anchor: np.ndarray, other: np.ndarray,
                               w: np.ndarray, touched_other: np.ndarray,
                               n_other: int, min_common: int, hub_cap: int,
-                              rng: np.random.Generator
+                              seed: int, tag: str,
+                              prev_draws: Optional[HubDraws]
                               ) -> Tuple[np.ndarray, ...]:
     """Re-derive all co-engagement pairs with >= 1 touched endpoint.
 
@@ -423,17 +519,42 @@ def _recompute_touching_pairs(anchor: np.ndarray, other: np.ndarray,
     full (a touched pair's common anchors are all adjacent to its touched
     endpoint, so the recomputed weights/counts are complete); pairs whose
     endpoints are both untouched are discarded — their old values stand.
+
+    Returns ``(lo, hi, w, draws, recomputed_anchor_ids)``.
     """
     if len(anchor):
         a_mask = np.zeros(int(anchor.max()) + 1, bool)
         a_mask[anchor[touched_other[other]]] = True
         sel = a_mask[anchor]
+        recomputed = np.flatnonzero(a_mask)
     else:
         sel = np.zeros(0, bool)
-    lo, hi, pw = _co_engagement(anchor[sel], other[sel], w[sel], n_other,
-                                min_common, hub_cap, rng)
+        recomputed = np.zeros(0, np.int64)
+    lo, hi, pw, draws = _co_engagement(anchor[sel], other[sel], w[sel],
+                                       n_other, min_common, hub_cap,
+                                       seed, tag, prev_draws)
     touching = touched_other[lo] | touched_other[hi]
-    return lo[touching], hi[touching], pw[touching]
+    return lo[touching], hi[touching], pw[touching], draws, recomputed
+
+
+def _hub_resample_members(old_ui: EdgeSet, new_ui: EdgeSet,
+                          anchor_of, other_of, n_anchor: int,
+                          cap: int) -> np.ndarray:
+    """Other-side members of anchors whose *degree* changed past the hub
+    cap.  A hub anchor's subsample draw is keyed by (anchor id, degree)
+    — a degree change redraws it, which can add or drop co-pairs between
+    endpoints the delta never touched.  Marking every member of such an
+    anchor as touched routes all its pairs through the full
+    re-expansion, preserving refresh == rebuild bitwise."""
+    old_deg = np.bincount(anchor_of(old_ui), minlength=n_anchor)
+    new_deg = np.bincount(anchor_of(new_ui), minlength=n_anchor)
+    changed = ((old_deg != new_deg)
+               & (np.maximum(old_deg, new_deg) > cap))
+    if not changed.any():
+        return np.zeros(0, np.int64)
+    sel_old = changed[anchor_of(old_ui)]
+    sel_new = changed[anchor_of(new_ui)]
+    return np.union1d(other_of(old_ui)[sel_old], other_of(new_ui)[sel_new])
 
 
 def refresh_graph(g: HeteroGraph, delta_log: EngagementLog
@@ -443,14 +564,14 @@ def refresh_graph(g: HeteroGraph, delta_log: EngagementLog
 
     Only co-engagement pairs reachable from the delta are re-derived;
     the cheap O(E) tails (Eq. 3 correction, top-K subsampling) run in
-    full.  When hub subsampling never triggers (``hub_cap`` >= the
-    largest anchor degree) every retained edge matches a from-scratch
-    build on the merged window bit-for-bit; anchors above ``hub_cap``
-    are re-subsampled from a fresh RNG stream — statistically
-    equivalent to a full rebuild's draw (the hub subsample is itself a
-    Monte-Carlo approximation), but not bitwise.  The item space may
-    grow (``delta_log.n_items >= g.n_items``); the user-id space must
-    be stable.
+    full.  Every retained edge matches a from-scratch build on the
+    merged window bit-for-bit — including when ``hub_cap`` triggers:
+    hub-subsample offsets are keyed by (anchor id, degree)
+    (``hub_uniforms``) and persisted per anchor in ``RefreshState``, so
+    untouched anchors reuse their draws and re-expanded anchors
+    regenerate exactly the draws a full rebuild would consume.  Both id
+    spaces may grow (``delta_log.n_users >= g.n_users``,
+    ``delta_log.n_items >= g.n_items``); grown tails count as touched.
 
     Returns ``(new_graph, report)`` with ``report['touched_users'] /
     ['touched_items']`` — the nodes whose edge sets may have changed.
@@ -464,48 +585,61 @@ def refresh_graph(g: HeteroGraph, delta_log: EngagementLog
         raise ValueError("incremental refresh with a user retention "
                          "budget is not supported (retention is a "
                          "global decision; re-run build_graph)")
-    if delta_log.n_users != g.n_users:
-        raise ValueError("user-id space must be stable across refreshes")
+    if delta_log.n_users < g.n_users:
+        raise ValueError("user space may only grow")
     if delta_log.n_items < g.n_items:
         raise ValueError("item space may only grow")
     t0 = time.perf_counter()
-    nu, ni = g.n_users, delta_log.n_items
+    nu, ni = delta_log.n_users, delta_log.n_items
+    seed = p.get("seed", 0)
+    cap = p["hub_cap"]
+    draws = st.hub_draws or {}
 
     # 1) merge the delta's aggregated U-I engagements
     d_ui = build_ui_edges(delta_log, p.get("event_weights"))
     ui_full = merge_edge_aggregates(st.ui_full, d_ui, ni)
     touched_u = np.unique(delta_log.user_id)
     touched_i = np.unique(delta_log.item_id)
+    if nu > g.n_users:       # grown tail = brand-new users
+        touched_u = np.union1d(touched_u, np.arange(g.n_users, nu))
     if ni > g.n_items:       # grown tail = brand-new items
         touched_i = np.union1d(touched_i, np.arange(g.n_items, ni))
+    # degree-changed hub anchors redraw their subsample: their members'
+    # co-pairs must be recomputed even if the delta never touched them
+    touched_u = np.union1d(touched_u, _hub_resample_members(
+        st.ui_full, ui_full, lambda e: e.dst, lambda e: e.src, ni, cap))
+    touched_i = np.union1d(touched_i, _hub_resample_members(
+        st.ui_full, ui_full, lambda e: e.src, lambda e: e.dst, nu, cap))
     um = np.zeros(nu, bool)
     um[touched_u] = True
     im = np.zeros(ni, bool)
     im[touched_i] = True
 
     # 2) re-derive co-engagement pairs touching the delta
-    rng = np.random.default_rng((p.get("seed", 0), 0x5EF))
-    lo, hi, w = _recompute_touching_pairs(
+    lo, hi, w, uu_new, uu_rec = _recompute_touching_pairs(
         ui_full.dst, ui_full.src, ui_full.weight, um, nu,
-        p["c_u"], p["hub_cap"], rng)
+        p["c_u"], cap, seed, "uu", draws.get("uu"))
     keep = ~(um[st.uu_raw.src] | um[st.uu_raw.dst])
     uu_raw = _canonical_pair_order(
         EdgeSet(np.r_[st.uu_raw.src[keep], lo],
                 np.r_[st.uu_raw.dst[keep], hi],
                 np.r_[st.uu_raw.weight[keep], w]), nu)
+    uu_draws = _merge_hub_draws(draws.get("uu"), uu_new, uu_rec, cap)
 
-    lo, hi, w = _recompute_touching_pairs(
+    lo, hi, w, ii_new, ii_rec = _recompute_touching_pairs(
         ui_full.src, ui_full.dst, ui_full.weight, im, ni,
-        p["c_i"], p["hub_cap"], rng)
+        p["c_i"], cap, seed, "ii", draws.get("ii"))
     keep = ~(im[st.ii_raw.src] | im[st.ii_raw.dst])
     ii_raw = _canonical_pair_order(
         EdgeSet(np.r_[st.ii_raw.src[keep], lo],
                 np.r_[st.ii_raw.dst[keep], hi],
                 np.r_[st.ii_raw.weight[keep], w]), ni)
+    ii_draws = _merge_hub_draws(draws.get("ii"), ii_new, ii_rec, cap)
 
     # 3) cheap O(E) tails in full (Eq. 3, top-K, groups)
     g_new = _finalize_graph(nu, ni, ui_full, uu_raw, ii_raw,
                             alpha_pop=p["alpha_pop"], k_cap=p["k_cap"],
-                            state_params=p, keep_state=True, t0=t0)
+                            state_params=p, keep_state=True, t0=t0,
+                            hub_draws={"uu": uu_draws, "ii": ii_draws})
     report = dict(touched_users=touched_u, touched_items=touched_i)
     return g_new, report

@@ -107,26 +107,32 @@ def build_padded_hetero_adj(g: HeteroGraph, max_deg_per_type: int = 32
 U_BLOCK = 4096       # starts per RNG block — the refresh regeneration unit
 
 
-def walk_uniforms(seed: int, ids: np.ndarray, n_walks: int, walk_len: int
-                  ) -> np.ndarray:
+def walk_uniforms(seed: int, ids: np.ndarray, n_walks: int, walk_len: int,
+                  n_users: int = 0) -> np.ndarray:
     """f32 uniforms for the given start node ids: (len(ids), n_walks,
     2*walk_len); column 2t drives step t's transition draw, column 2t+1
     its restart draw.
 
-    The stream is keyed by *node id* in fixed ``U_BLOCK``-sized blocks
-    (not by position in ``ids`` or by chunk layout), so a refresh that
-    re-walks an arbitrary subset of nodes regenerates exactly the draws
-    a full run over ``arange(n)`` would have consumed for them.
+    The stream is keyed by *node id within its type* — users by user id,
+    items by item-local id (global id minus ``n_users``) — in fixed
+    ``U_BLOCK``-sized blocks, not by position in ``ids`` or by chunk
+    layout.  A refresh that re-walks an arbitrary subset of nodes
+    therefore regenerates exactly the draws a full run over ``arange(n)``
+    would have consumed for them, and growth of *either* id space leaves
+    every pre-existing node's draws unchanged (user growth shifts item
+    global ids, but not their item-local stream keys).
     """
     ids = np.asarray(ids, np.int64)
     out = np.empty((len(ids), n_walks, 2 * walk_len), np.float32)
-    blocks = ids // U_BLOCK
-    for b in np.unique(blocks):
-        rng = np.random.default_rng((seed, int(b)))
+    side = (ids >= n_users).astype(np.int64)       # 0 = user, 1 = item
+    local = ids - side * n_users
+    blocks = local // U_BLOCK
+    for s, b in {(int(s), int(b)) for s, b in zip(side, blocks)}:
+        m = (side == s) & (blocks == b)
+        rng = np.random.default_rng((seed, s, b))
         blk = rng.random((U_BLOCK, n_walks, 2 * walk_len),
                          dtype=np.float32)
-        m = blocks == b
-        out[m] = blk[ids[m] - b * U_BLOCK]
+        out[m] = blk[local[m] - b * U_BLOCK]
     return out
 
 
@@ -169,8 +175,8 @@ def _walk_numpy(adj: PaddedHeteroAdj, starts: np.ndarray, *, n_walks: int,
     for lo in range(0, n_start, step_rows):
         hi = min(n_start, lo + step_rows)
         home = np.repeat(starts[lo:hi], n_walks)
-        u = walk_uniforms(seed, starts[lo:hi], n_walks, walk_len
-                          ).reshape(len(home), 2 * walk_len)
+        u = walk_uniforms(seed, starts[lo:hi], n_walks, walk_len,
+                          adj.n_users).reshape(len(home), 2 * walk_len)
         pos = home.copy()
         block = np.empty((len(home), walk_len), np.int64)
         for t in range(walk_len):
@@ -262,7 +268,8 @@ def _walk_jax(adj: PaddedHeteroAdj, starts: np.ndarray, *, n_walks: int,
         hi = min(n, lo + step_rows)
         ids = starts[lo:hi]
         home = jnp.asarray(np.repeat(ids.astype(np.int32), n_walks))
-        u = jnp.asarray(walk_uniforms(seed, ids, n_walks, walk_len
+        u = jnp.asarray(walk_uniforms(seed, ids, n_walks, walk_len,
+                                      adj.n_users
                                       ).reshape(len(ids) * n_walks,
                                                 2 * walk_len))
         trace = _walk_jax_impl(nbrs_d, cum_d, home, u, r32,
@@ -273,8 +280,8 @@ def _walk_jax(adj: PaddedHeteroAdj, starts: np.ndarray, *, n_walks: int,
 
 def _walk_pallas(adj_nbrs: np.ndarray, adj_cum: np.ndarray,
                  starts: np.ndarray, *, n_walks: int, walk_len: int,
-                 restart: float, seed: int, chunk: int
-                 ) -> Tuple[np.ndarray, np.ndarray]:
+                 restart: float, seed: int, chunk: int,
+                 n_users: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """Fused walk + per-start visit counting via ``kernels/ppr_walk``.
     Returns (visited, counts): counts holds each node's multiplicity at
     its first occurrence in the row, 0 elsewhere."""
@@ -286,7 +293,7 @@ def _walk_pallas(adj_nbrs: np.ndarray, adj_cum: np.ndarray,
     step_rows = max(1, chunk // n_walks)
     for lo in range(0, n, step_rows):
         hi = min(n, lo + step_rows)
-        u = walk_uniforms(seed, starts[lo:hi], n_walks, walk_len)
+        u = walk_uniforms(seed, starts[lo:hi], n_walks, walk_len, n_users)
         v, c = ppr_walk(adj_nbrs, adj_cum, starts[lo:hi], u,
                         restart=restart)
         visited[lo:hi] = np.asarray(v, np.int64)
@@ -317,7 +324,8 @@ def ppr_visit_counts(adj: PaddedHeteroAdj, starts: np.ndarray, *,
     elif backend == "pallas":
         visited, _ = _walk_pallas(adj.nbrs, adj.cum, starts,
                                   n_walks=n_walks, walk_len=walk_len,
-                                  restart=restart, seed=seed, chunk=chunk)
+                                  restart=restart, seed=seed, chunk=chunk,
+                                  n_users=adj.n_users)
     else:
         raise ValueError(f"unknown backend {backend!r}; want {BACKENDS}")
     return visited, starts
@@ -420,7 +428,9 @@ def topk_by_count(visited: np.ndarray, starts: np.ndarray, k: int,
 class PPRState:
     """Everything ``refresh_ppr_neighbors`` needs to splice new walks
     into an existing run: the visit traces, the adjacency snapshot the
-    traces were walked on (for change detection), and the walk knobs."""
+    traces were walked on (for change detection), the user/item split of
+    its unified id space (user growth shifts item global ids — the
+    remap pass needs the old boundary), and the walk knobs."""
     visited: np.ndarray          # (n_nodes, n_walks*walk_len) int64
     nbrs: np.ndarray             # padded adjacency at build time
     cum: np.ndarray
@@ -432,6 +442,7 @@ class PPRState:
     hub_alpha: float
     k_imp: int
     backend: str
+    n_users: int = 0             # unified-id boundary at build time
 
 
 def precompute_ppr_neighbors(g: HeteroGraph, *, k_imp: int = 50,
@@ -450,7 +461,7 @@ def precompute_ppr_neighbors(g: HeteroGraph, *, k_imp: int = 50,
         visited, counts = _walk_pallas(adj.nbrs, adj.cum, starts,
                                        n_walks=n_walks, walk_len=walk_len,
                                        restart=restart, seed=seed,
-                                       chunk=1 << 18)
+                                       chunk=1 << 18, n_users=g.n_users)
         glob = global_visit_mass(visited, adj.n_nodes)
         users, items = _topk_from_counts(visited, counts, starts, k_imp,
                                          g.n_users, hub_alpha, glob)
@@ -465,7 +476,7 @@ def precompute_ppr_neighbors(g: HeteroGraph, *, k_imp: int = 50,
     if return_state:
         state = PPRState(visited, adj.nbrs, adj.cum, n_walks, walk_len,
                          restart, seed, max_deg_per_type, hub_alpha,
-                         k_imp, backend)
+                         k_imp, backend, n_users=g.n_users)
         return users, items, state
     return users, items
 
@@ -503,35 +514,59 @@ def refresh_ppr_neighbors(g_new: HeteroGraph, user_nbrs: np.ndarray,
     """Splice an incremental graph refresh into existing PPR tables.
 
     Re-walks only the nodes whose ``walk_len``-hop neighborhoods saw an
-    adjacency change (plus brand-new item rows), regenerates exactly the
-    uniform draws a full run would have used for them, and re-ranks
-    those rows against the spliced global visit mass — so every affected
-    row is bit-identical to a from-scratch
+    adjacency change (plus brand-new user/item rows), regenerates
+    exactly the uniform draws a full run would have used for them, and
+    re-ranks those rows against the spliced global visit mass — so every
+    affected row is bit-identical to a from-scratch
     ``precompute_ppr_neighbors`` on the refreshed graph, and every
-    unaffected row is left untouched.
+    unaffected row is left untouched (modulo the unified-id remap).
 
-    Returns (user_nbrs, item_nbrs, new_state, affected_ids).
+    Either id space may have grown.  Item growth appends rows; *user*
+    growth shifts every item's global id by the number of new users, so
+    carried-over rows first go through a remap pass: row ``r`` of the
+    old layout moves to ``r + shift`` when ``r`` was an item row, and
+    every item id stored *inside* a trace or neighbor table shifts the
+    same way (-1 pads and user ids are fixed points).  The type-keyed
+    uniform stream (``walk_uniforms``) makes the old traces valid
+    verbatim after the remap.
+
+    Returns (user_nbrs, item_nbrs, new_state, affected_ids) — ids in the
+    *new* unified space.
     """
     backend = backend or state.backend
     adj = build_padded_hetero_adj(g_new, state.max_deg_per_type)
     n_old = state.nbrs.shape[0]
     n_new = adj.n_nodes
+    nu = g_new.n_users
+    old_nu = state.n_users
+    shift = nu - old_nu
     S = state.n_walks * state.walk_len
 
-    changed = np.ones(n_new, bool)                 # grown rows: changed
-    changed[:n_old] = (np.any(adj.nbrs[:n_old] != state.nbrs, axis=1)
-                       | np.any(adj.cum[:n_old] != state.cum, axis=1))
+    # remap pass: old row positions + stored ids in the new unified space
+    old_pos = np.arange(n_old)
+    if shift:
+        old_pos = np.where(old_pos >= old_nu, old_pos + shift, old_pos)
+
+    def _remap(a: np.ndarray) -> np.ndarray:
+        if not shift:
+            return a
+        return np.where(a >= old_nu, a + shift, a)   # -1 pads: fixed points
+
+    changed = np.ones(n_new, bool)                 # inserted rows: changed
+    changed[old_pos] = (np.any(adj.nbrs[old_pos] != _remap(state.nbrs),
+                               axis=1)
+                        | np.any(adj.cum[old_pos] != state.cum, axis=1))
     affected = _expand_affected(adj.nbrs, changed, state.walk_len - 1)
     ids = np.flatnonzero(affected)
 
     visited = np.empty((n_new, S), np.int64)
-    visited[:n_old] = state.visited                # item growth appends
+    visited[old_pos] = _remap(state.visited)
     if len(ids):
         if backend == "pallas":
             vis_new, cnt_new = _walk_pallas(
                 adj.nbrs, adj.cum, ids, n_walks=state.n_walks,
                 walk_len=state.walk_len, restart=state.restart,
-                seed=state.seed, chunk=1 << 18)
+                seed=state.seed, chunk=1 << 18, n_users=nu)
         else:
             vis_new, _ = ppr_visit_counts(
                 adj, ids, n_walks=state.n_walks, walk_len=state.walk_len,
@@ -540,11 +575,10 @@ def refresh_ppr_neighbors(g_new: HeteroGraph, user_nbrs: np.ndarray,
         visited[ids] = vis_new
 
     glob = global_visit_mass(visited, n_new)
-    nu = g_new.n_users
     u_rows = np.full((n_new, state.k_imp), -1, np.int64)
     i_rows = np.full((n_new, state.k_imp), -1, np.int64)
-    u_rows[:n_old] = user_nbrs
-    i_rows[:n_old] = item_nbrs
+    u_rows[old_pos] = _remap(user_nbrs)
+    i_rows[old_pos] = _remap(item_nbrs)
     if len(ids):
         if cnt_new is not None:
             u_new, i_new = _topk_from_counts(vis_new, cnt_new, ids,
@@ -559,7 +593,7 @@ def refresh_ppr_neighbors(g_new: HeteroGraph, user_nbrs: np.ndarray,
 
     new_state = dataclasses.replace(state, visited=visited,
                                     nbrs=adj.nbrs, cum=adj.cum,
-                                    backend=backend)
+                                    backend=backend, n_users=nu)
     return u_rows, i_rows, new_state, ids
 
 

@@ -146,23 +146,48 @@ class ClusterQueueStore:
         self.epoch: Optional[float] = None
         self.pool = BufPool()          # steady-state request scratch
 
+    # -- cluster assignment lookup ------------------------------------------
+
+    def clusters_of(self, user_ids: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Cluster ids for a batch of users plus a known-user mask.
+
+        Users outside the assignment table — ids minted *after* the
+        snapshot this store serves was published (the id space grows at
+        every lifecycle refresh) — map to cluster 0 with ``known=False``;
+        callers must mask their rows out rather than crash or serve
+        another user's cluster.
+        """
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        known = (user_ids >= 0) & (user_ids < self.user_clusters.shape[0])
+        cl = self.user_clusters[np.where(known, user_ids, 0)]
+        return cl, known
+
     # -- ingestion ----------------------------------------------------------
 
     def ingest(self, user_ids: np.ndarray, item_ids: np.ndarray,
                timestamps: np.ndarray) -> None:
         """Stream a batch of engagement events into their users' cluster
         ring buffers (vectorized; oldest-to-newest so the ring order is
-        the time order within the batch)."""
+        the time order within the batch).  Events from users unknown to
+        this snapshot's assignment table are dropped (they enter queues
+        once the next publication assigns them a cluster)."""
         user_ids = np.asarray(user_ids, np.int64).ravel()
-        if user_ids.size == 0:
+        item_ids = np.asarray(item_ids, np.int64).ravel()
+        ts64 = np.asarray(timestamps, np.float64).ravel()
+        cl_all, known = self.clusters_of(user_ids)
+        if not known.all():
+            cl_all = cl_all[known]
+            item_ids = item_ids[known]
+            ts64 = ts64[known]
+        if cl_all.size == 0:
             return
-        ts = np.asarray(timestamps, np.float64).ravel()
         if self.epoch is None:
-            self.epoch = float(ts.min())
-        ts = (ts - self.epoch).astype(np.float32)
+            self.epoch = float(ts64.min())
+        ts = (ts64 - self.epoch).astype(np.float32)
         order = np.argsort(ts, kind="stable")
-        cl = self.user_clusters[user_ids[order]]
-        it = np.asarray(item_ids, np.int64).ravel()[order]
+        cl = cl_all[order]
+        it = item_ids[order]
         ts = ts[order]
 
         # per-cluster arrival rank (stable sort by cluster keeps time order)
@@ -201,7 +226,7 @@ class ClusterQueueStore:
         Q = self.queue_len
         B = user_ids.shape[0]
         pool = self.pool
-        cl = self.user_clusters[user_ids]
+        cl, known = self.clusters_of(user_ids)
         rows = np.take(self.items, cl, axis=0,
                        out=pool.get("rows", (B, Q), np.int32))
         ts = np.take(self.times, cl, axis=0,
@@ -222,6 +247,8 @@ class ClusterQueueStore:
         valid &= mask
         np.greater_equal(rows, 0, out=mask)
         valid &= mask
+        if not known.all():
+            valid &= known[:, None]          # unknown users: empty rows
         return dedup_topk_rows(rows, age, valid, k, Q, pool)
 
     def retrieve(self, user_id: int, now: float, k: int) -> List[int]:
@@ -240,11 +267,16 @@ class ClusterQueueStore:
         ``queue_gather`` kernel instead of the numpy path."""
         if i2i is not None and use_kernel:
             from repro.kernels.queue_gather.ops import queue_gather
+            cl, known = self.clusters_of(user_ids)
             seeds, union = queue_gather(
-                self.items, self.times, self.cursor,
-                self.user_clusters[np.asarray(user_ids, np.int64)], i2i,
+                self.items, self.times, self.cursor, cl, i2i,
                 cutoff=self.rel_cutoff(now), n_recent=n_recent, k=k)
-            return np.asarray(seeds, np.int64), np.asarray(union, np.int64)
+            seeds = np.asarray(seeds, np.int64)
+            union = np.asarray(union, np.int64)
+            if not known.all():
+                seeds[~known] = -1           # unknown users: empty rows
+                union[~known] = -1
+            return seeds, union
         seeds = self.retrieve_batch(user_ids, now, n_recent)
         if i2i is None:
             return seeds, np.full((seeds.shape[0], k), -1, np.int64)

@@ -95,18 +95,19 @@ def incremental_refresh(g: HeteroGraph, tables: NeighborTables,
 
     Edges are re-derived only for co-engagement pairs reachable from the
     delta (``graph_builder.refresh_graph``); walks re-run only for nodes
-    whose walk-length neighborhood changed, and new items — including a
-    grown item space — are spliced into the padded adjacencies and
-    tables (``ppr.refresh_ppr_neighbors``).  Fresh nodes that still lack
-    same-type neighbors route through the Group-2 KNN fallback when
-    ``prev_emb`` (previous-run embeddings, [users; items]) is given.
+    whose walk-length neighborhood changed, and new nodes — *both* id
+    spaces may grow — are spliced into the padded adjacencies and
+    tables (``ppr.refresh_ppr_neighbors``; user growth additionally
+    remaps the unified id space, shifting item global ids).  Fresh nodes
+    that still lack same-type neighbors route through the Group-2 KNN
+    fallback when ``prev_emb`` (previous-run embeddings sized for the
+    *new* space, [users; items]) is given.
 
     Affected rows match a from-scratch build on the merged window
-    bit-for-bit — provided hub subsampling never triggers (``hub_cap``
-    >= the largest anchor degree; above it, hub anchors are
-    re-subsampled from a fresh stream, statistically equivalent but not
-    bitwise — see ``refresh_graph``).  Unaffected rows are left
-    untouched.  Returns ``(new_graph, new_tables, report)``.
+    bit-for-bit — including when ``hub_cap`` triggers: hub-subsample
+    draws are keyed per anchor and persisted in ``RefreshState`` (see
+    ``refresh_graph``).  Unaffected rows are left untouched (modulo the
+    id remap).  Returns ``(new_graph, new_tables, report)``.
     """
     from repro.core.graph_builder import refresh_graph
     if tables.ppr is None:

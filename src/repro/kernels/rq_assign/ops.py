@@ -1,9 +1,13 @@
-"""Public op: RQ assignment with kernel/reference dispatch."""
+"""Public op: RQ assignment with kernel/reference dispatch, plus the
+chunked full-corpus encode used at index publication."""
 from __future__ import annotations
 
+import functools
 from typing import Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.rq_assign.ref import rq_assign_ref
 from repro.kernels.rq_assign.rq_assign import rq_assign as rq_assign_kernel
@@ -17,9 +21,62 @@ def rq_assign(x: jnp.ndarray, codebooks: Sequence[jnp.ndarray], *,
     return rq_assign_ref(x, codebooks)
 
 
+@functools.lru_cache(maxsize=8)
+def _corpus_step(use_kernel: bool, block_b: int):
+    if use_kernel:
+        # the kernel entry is jitted internally with static block shapes
+        return functools.partial(rq_assign_kernel, block_b=block_b)
+    return jax.jit(lambda x, books: rq_assign_ref(x, books))
+
+
+def rq_assign_corpus(x: np.ndarray, codebooks: Sequence[np.ndarray], *,
+                     chunk: int = 8192, use_kernel: bool = False,
+                     block_b: int = 256
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Full-corpus RQ encode for index publication: every chunk is
+    padded to one fixed shape, so the whole pass — hundreds of millions
+    of rows at production scale — reuses a single jitted trace instead
+    of round-tripping a fresh compile/dispatch per batch.
+
+    Row results are bit-identical to per-batch ``rq_assign`` on any
+    batch split (each row's distances depend only on that row and the
+    codebooks), which is what lets publication be audited against the
+    online assignment path.  Returns host ``(codes (N, L) int32,
+    recon (N, d) float32)``.
+    """
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    L = len(codebooks)
+    books = tuple(jnp.asarray(np.asarray(c, np.float32))
+                  for c in codebooks)
+    codes = np.empty((n, L), np.int32)
+    recon = np.empty((n, d), np.float32)
+    if n == 0:
+        return codes, recon
+    chunk = max(min(chunk, n), 1)
+    step = _corpus_step(bool(use_kernel), block_b)
+    for lo in range(0, n, chunk):
+        hi = min(n, lo + chunk)
+        blk = x[lo:hi]
+        if hi - lo < chunk:                  # pad: keep one traced shape
+            blk = np.pad(blk, ((0, chunk - (hi - lo)), (0, 0)))
+        c, r = step(jnp.asarray(blk), books)
+        codes[lo:hi] = np.asarray(c)[: hi - lo]
+        recon[lo:hi] = np.asarray(r)[: hi - lo]
+    return codes, recon
+
+
 def flat_codes(codes: jnp.ndarray, sizes: Sequence[int]) -> jnp.ndarray:
     """(B, L) layer codes -> flat cluster id."""
     flat = jnp.zeros(codes.shape[0], jnp.int32)
+    for l, n in enumerate(sizes):
+        flat = flat * n + codes[:, l]
+    return flat
+
+
+def flat_codes_np(codes: np.ndarray, sizes: Sequence[int]) -> np.ndarray:
+    """Host-side ``flat_codes`` for publication artifacts."""
+    flat = np.zeros(codes.shape[0], np.int64)
     for l, n in enumerate(sizes):
         flat = flat * n + codes[:, l]
     return flat

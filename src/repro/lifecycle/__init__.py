@@ -1,0 +1,27 @@
+"""Lifecycle runtime (paper §4 end-to-end): versioned index publication
+with atomic hot-swap into serving.
+
+The three stages of the paper — construction, training, serving — meet
+here for the first time:
+
+  * ``snapshot``  immutable, versioned ``IndexSnapshot`` artifacts and a
+                  checkpointer-compatible on-disk store;
+  * ``publish``   materialize a snapshot from a ``TrainState``
+                  (full-corpus RQ encode, inverted lists, I2I KNN) and
+                  gate it on retrieval recall vs exact KNN;
+  * ``swap``      double-buffered ``SnapshotHandle`` + ``SwapServer``:
+                  atomic version flips under live traffic, queue
+                  re-keying via a retained event ring;
+  * ``runtime``   the hour-level orchestrator chaining incremental
+                  graph refresh -> training burst -> publish -> swap.
+"""
+from repro.lifecycle.snapshot import IndexSnapshot, SnapshotStore
+from repro.lifecycle.publish import build_snapshot, evaluate_snapshot
+from repro.lifecycle.swap import SnapshotHandle, SwapServer
+from repro.lifecycle.runtime import LifecycleConfig, LifecycleRuntime
+
+__all__ = [
+    "IndexSnapshot", "SnapshotStore", "build_snapshot",
+    "evaluate_snapshot", "SnapshotHandle", "SwapServer",
+    "LifecycleConfig", "LifecycleRuntime",
+]

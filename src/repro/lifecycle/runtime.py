@@ -1,0 +1,261 @@
+"""Step-driven lifecycle orchestrator (the paper's co-design loop).
+
+One ``run_cycle`` = one simulated hour of the production lifecycle:
+
+    1. **refresh**   splice the trailing engagement window into the
+                     graph + PPR tables (``edge_dataset
+                     .incremental_refresh``; both id spaces may grow);
+    2. **train**     a burst of ``steps_per_cycle`` co-training steps on
+                     the refreshed edge dataset (``core.trainer``);
+    3. **publish**   regenerate all embeddings, encode them through the
+                     co-learned RQ codebooks and materialize a versioned
+                     ``IndexSnapshot`` (``lifecycle.publish``), gated on
+                     cluster-index recall vs exact KNN;
+    4. **swap**      atomically flip the serving tier to the new
+                     version (``lifecycle.swap``) — or keep the old one
+                     when the gate fails.
+
+Cadence knobs live on ``LifecycleConfig``; the runtime owns the mutable
+stage state (graph, tables, dataset, train state, serving engine) and
+reports one dict per cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RankGraph2Config
+from repro.core import model as M
+from repro.core import trainer as T
+from repro.core.graph_builder import EngagementLog, HeteroGraph
+from repro.data.edge_dataset import (EdgeDataset, NeighborTables,
+                                     incremental_refresh)
+from repro.lifecycle.publish import (build_snapshot, encode_corpus,
+                                     evaluate_snapshot)
+from repro.lifecycle.snapshot import IndexSnapshot, SnapshotStore
+from repro.lifecycle.swap import SwapServer
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecycleConfig:
+    """Cadence + serving knobs for the lifecycle runtime.
+
+    ``steps_per_cycle``   training-burst length per hour-level cycle —
+                          the compute budget that trades index freshness
+                          against step throughput;
+    ``publish_every``     cycles between publications (1 = publish every
+                          cycle; the graph still refreshes each cycle);
+    ``min_recall_ratio``  swap gate: a snapshot must retain at least
+                          this fraction of exact-KNN Recall@``recall_k``
+                          or the engine keeps serving the old version
+                          (0 disables the gate);
+    ``i2i_k``             offline I2I KNN width published per item;
+    ``queue_len`` / ``recency_s`` / ``ring_capacity``
+                          serving-store geometry: cluster ring-buffer
+                          depth, recency horizon, and how many raw
+                          events are retained for swap-time re-keying;
+    ``use_kernel``        route the publication encode through the
+                          Pallas ``rq_assign`` kernel (TPU) instead of
+                          the jitted reference (CPU);
+    ``snapshot_keep``     on-disk snapshot retention (when a
+                          ``SnapshotStore`` directory is attached).
+    """
+    steps_per_cycle: int = 50
+    batch_per_type: int = 64
+    publish_every: int = 1
+    min_recall_ratio: float = 0.0
+    recall_k: int = 100
+    recall_queries: int = 400
+    n_probe_factor: int = 4
+    i2i_k: int = 16
+    queue_len: int = 256
+    recency_s: float = 3600.0
+    ring_capacity: int = 1 << 16
+    embed_batch: int = 2048
+    encode_chunk: int = 8192
+    use_kernel: bool = False
+    snapshot_keep: int = 3
+
+
+class LifecycleRuntime:
+    """Owns the mutable stage state and drives refresh -> train ->
+    publish -> swap cycles.  ``world`` (a ``SyntheticWorld`` or anything
+    with ``day1`` next-day ground truth) is only needed for the recall
+    gate; pass ``None`` to publish ungated."""
+
+    def __init__(self, cfg: RankGraph2Config, lcfg: LifecycleConfig,
+                 g: HeteroGraph, tables: NeighborTables,
+                 user_feat: np.ndarray, item_feat: np.ndarray, *,
+                 world: Any = None, snapshot_dir: Optional[str] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.lcfg = lcfg
+        self.world = world
+        self.seed = seed
+        self.g = g
+        self.tables = tables
+        self.user_feat = np.asarray(user_feat, np.float32)
+        self.item_feat = np.asarray(item_feat, np.float32)
+        self.state, self.specs, self.optimizer = T.init_state(
+            jax.random.key(seed), cfg)
+        self._step_fn = jax.jit(T.make_train_step(cfg, self.optimizer))
+        self.store = (SnapshotStore(snapshot_dir,
+                                    keep=lcfg.snapshot_keep)
+                      if snapshot_dir else None)
+        self.server: Optional[SwapServer] = None
+        self.cycle = 0
+        self.version = 0
+        self._last_user_emb: Optional[np.ndarray] = None
+        self._last_item_emb: Optional[np.ndarray] = None
+        self._rebuild_dataset()
+
+    # -- stage plumbing -----------------------------------------------------
+
+    def _rebuild_dataset(self) -> None:
+        self.dataset = EdgeDataset(self.g, self.tables, self.user_feat,
+                                   self.item_feat,
+                                   k_train=self.cfg.k_train)
+
+    def refresh(self, delta_log: EngagementLog, *,
+                user_feat: Optional[np.ndarray] = None,
+                item_feat: Optional[np.ndarray] = None,
+                backend: Optional[str] = None) -> Dict:
+        """Stage 1: splice the trailing window in.  Grown id spaces must
+        come with grown feature tables."""
+        prev_emb = (np.concatenate([self._last_user_emb,
+                                    self._last_item_emb], axis=0)
+                    if self._last_user_emb is not None else None)
+        if user_feat is not None:
+            self.user_feat = np.asarray(user_feat, np.float32)
+        if item_feat is not None:
+            self.item_feat = np.asarray(item_feat, np.float32)
+        # validate BEFORE mutating graph/tables: a failed refresh must
+        # leave the runtime consistent (retrying after the error would
+        # otherwise merge the same delta's aggregates twice)
+        if self.user_feat.shape[0] < delta_log.n_users:
+            raise ValueError("user space grew without new user features")
+        if self.item_feat.shape[0] < delta_log.n_items:
+            raise ValueError("item space grew without new item features")
+        if prev_emb is not None and len(prev_emb) != (
+                delta_log.n_users + delta_log.n_items):
+            prev_emb = None            # id space grew past the last embed
+        self.g, self.tables, report = incremental_refresh(
+            self.g, self.tables, delta_log, prev_emb=prev_emb,
+            backend=backend)
+        self._rebuild_dataset()
+        return report
+
+    def train_burst(self, steps: Optional[int] = None) -> Dict[str, float]:
+        """Stage 2: co-train model + RQ index on the current dataset."""
+        steps = steps if steps is not None else self.lcfg.steps_per_cycle
+        per_type = {et: self.lcfg.batch_per_type
+                    for et in ("uu", "ui", "ii")}
+        m: Dict[str, Any] = {}
+        base = int(self.state.step)
+        for t in range(steps):
+            batch = jax.tree.map(jnp.asarray, self.dataset.sample_batch(
+                base + t, self.seed, per_type))
+            self.state, m = self._step_fn(self.state, batch,
+                                          jax.random.key(1000 + base + t))
+        return {k: float(v) for k, v in m.items()}
+
+    def embed_corpus(self) -> None:
+        nu, ni = self.g.n_users, self.g.n_items
+        self._last_user_emb = T.embed_all(
+            self.state.params, self.cfg, self.dataset, node_type=M.USER,
+            ids=np.arange(nu), batch=self.lcfg.embed_batch)
+        self._last_item_emb = T.embed_all(
+            self.state.params, self.cfg, self.dataset, node_type=M.ITEM,
+            ids=np.arange(nu, nu + ni), batch=self.lcfg.embed_batch)
+
+    def gate_passes(self, snap: IndexSnapshot) -> bool:
+        """The swap/persist gate: ungated, or recall ratio above the
+        configured floor."""
+        gate = self.lcfg.min_recall_ratio
+        ratio = snap.metrics.get("recall_ratio")
+        return not (gate > 0 and ratio is not None and ratio < gate)
+
+    def publish(self) -> IndexSnapshot:
+        """Stage 3: materialize + gate + persist the next version.
+
+        Gate-failed snapshots are *not* written to the store: the
+        on-disk ``latest`` pointer (what a restarted server loads) must
+        only ever name a snapshot that passed, and retention must never
+        evict a known-good version in favor of rejected ones.
+        """
+        self.embed_corpus()
+        self.version += 1
+        snap, recon = build_snapshot(
+            self.version, self._last_user_emb, self._last_item_emb,
+            self.state.params["rq"], self.cfg, i2i_k=self.lcfg.i2i_k,
+            chunk=self.lcfg.encode_chunk,
+            use_kernel=self.lcfg.use_kernel, want_user_recon=True)
+        if self.world is not None:
+            metrics = evaluate_snapshot(
+                snap, self._last_user_emb, recon, self.world,
+                recall_k=self.lcfg.recall_k,
+                n_queries=self.lcfg.recall_queries, seed=self.seed,
+                n_probe_factor=self.lcfg.n_probe_factor,
+                hitrate_pairs=self._hitrate_pairs())
+            snap = dataclasses.replace(
+                snap, gate_metrics=tuple(sorted(
+                    (k, float(v)) for k, v in metrics.items())))
+        if self.store is not None and self.gate_passes(snap):
+            self.store.publish(snap)
+        return snap
+
+    def _hitrate_pairs(self, n: int = 512) -> np.ndarray:
+        """U-U positive pairs for the §5.2.3 index hitrate."""
+        uu = self.g.uu
+        if len(uu) == 0:
+            return np.zeros((0, 2), np.int64)
+        rng = np.random.default_rng(self.seed)
+        idx = rng.integers(0, len(uu), min(n, len(uu)))
+        return np.stack([uu.src[idx], uu.dst[idx]], axis=1)
+
+    def swap(self, snap: IndexSnapshot, now: float) -> Dict[str, float]:
+        """Stage 4: flip serving to ``snap`` (or bring serving up)."""
+        if self.server is None:
+            self.server = SwapServer(
+                snap, queue_len=self.lcfg.queue_len,
+                recency_s=self.lcfg.recency_s,
+                ring_capacity=self.lcfg.ring_capacity)
+            return dict(from_version=0.0,
+                        to_version=float(snap.version),
+                        build_ms=0.0, stall_ms=0.0, replayed_events=0.0)
+        return self.server.swap_to(snap, now)
+
+    # -- the loop -----------------------------------------------------------
+
+    def run_cycle(self, delta_log: Optional[EngagementLog] = None, *,
+                  now: float = 0.0,
+                  user_feat: Optional[np.ndarray] = None,
+                  item_feat: Optional[np.ndarray] = None,
+                  backend: Optional[str] = None) -> Dict[str, Any]:
+        """One full lifecycle cycle; returns a stage-by-stage report."""
+        report: Dict[str, Any] = dict(cycle=self.cycle)
+        if delta_log is not None:
+            r = self.refresh(delta_log, user_feat=user_feat,
+                             item_feat=item_feat, backend=backend)
+            report["refresh"] = dict(
+                touched_users=len(r["touched_users"]),
+                touched_items=len(r["touched_items"]),
+                affected_nodes=len(r["affected_nodes"]),
+                refresh_seconds=r["refresh_seconds"])
+        report["train"] = self.train_burst()
+        if self.cycle % max(self.lcfg.publish_every, 1) == 0:
+            snap = self.publish()
+            report["publish"] = dict(version=snap.version,
+                                     **snap.metrics)
+            if self.gate_passes(snap):
+                report["swap"] = self.swap(snap, now)
+            else:
+                report["swap"] = dict(
+                    skipped=True,
+                    recall_ratio=snap.metrics.get("recall_ratio"))
+        self.cycle += 1
+        return report

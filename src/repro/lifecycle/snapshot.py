@@ -1,0 +1,163 @@
+"""Versioned, immutable serving-index snapshots.
+
+An ``IndexSnapshot`` is the publication artifact that crosses the
+offline/online boundary: everything the serving tier needs to run
+KNN-free retrieval — per-user RQ codes and flat cluster ids, the
+cluster->member inverted lists, the coarse codebook (for multi-probe
+candidate routing) and the offline I2I KNN table — frozen at one
+version.  Serving never mutates a snapshot; the swap engine flips a
+handle between whole versions (``lifecycle.swap``).
+
+On disk a snapshot uses exactly the checkpointer's layout
+(``step_<version>/{manifest.json, 000000.npy, ...}`` plus the atomic
+``latest`` pointer), written *through* ``checkpoint.Checkpointer`` — a
+snapshot directory is a checkpoint directory, with the snapshot's
+scalar fields riding in the manifest metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSnapshot:
+    """One published version of the co-learned cluster index.
+
+    Flat cluster id = ``sum_l code_l * prod(sizes[l+1:])`` — with the
+    production two-layer (5000, 50) codebooks the coarse (layer-0) code
+    owns the contiguous flat range ``[k0*50, (k0+1)*50)``, which is what
+    lets the member lists double as an IVF-style multi-probe index.
+    """
+    # array leaves (flatten order == field order; keep stable on disk)
+    user_codes: np.ndarray       # (n_users, L) int32 per-layer codes
+    item_codes: np.ndarray       # (n_items, L) int32
+    user_clusters: np.ndarray    # (n_users,) int64 flat cluster ids
+    member_ptr: np.ndarray       # (n_clusters + 1,) int64 CSR offsets
+    member_ids: np.ndarray       # (n_users,) int64 users by cluster
+    coarse_codebook: np.ndarray  # (sizes[0], d) f32 layer-0 centroids
+    i2i: np.ndarray              # (n_items, k) int64 offline I2I KNN
+    # manifest metadata (meta fields must stay hashable — they ride in
+    # the pytree treedef; metrics is therefore a tuple of pairs)
+    version: int
+    n_users: int
+    n_items: int
+    codebook_sizes: Tuple[int, ...]
+    gate_metrics: Tuple[Tuple[str, float], ...] = ()
+
+    @property
+    def metrics(self) -> Dict[str, float]:
+        """Publication-time gate numbers as a dict."""
+        return dict(self.gate_metrics)
+
+    @property
+    def n_clusters(self) -> int:
+        return int(np.prod(self.codebook_sizes))
+
+    def members_of(self, cluster: int) -> np.ndarray:
+        lo, hi = self.member_ptr[cluster], self.member_ptr[cluster + 1]
+        return self.member_ids[lo:hi]
+
+    def coarse_members(self, k0: int) -> np.ndarray:
+        """All users whose layer-0 code is ``k0`` (the contiguous flat
+        range — the multi-probe candidate unit)."""
+        stride = self.n_clusters // self.codebook_sizes[0]
+        lo = self.member_ptr[k0 * stride]
+        hi = self.member_ptr[(k0 + 1) * stride]
+        return self.member_ids[lo:hi]
+
+
+_DATA_FIELDS = ("user_codes", "item_codes", "user_clusters",
+                "member_ptr", "member_ids", "coarse_codebook", "i2i")
+_META_FIELDS = ("version", "n_users", "n_items", "codebook_sizes",
+                "gate_metrics")
+
+jax.tree_util.register_dataclass(
+    IndexSnapshot, data_fields=list(_DATA_FIELDS),
+    meta_fields=list(_META_FIELDS))
+
+
+def derive_members(user_clusters: np.ndarray, n_clusters: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Cluster -> member-user inverted lists as CSR ``(ptr, ids)``;
+    members ascend within each cluster."""
+    user_clusters = np.asarray(user_clusters, np.int64)
+    order = np.argsort(user_clusters, kind="stable")
+    counts = np.bincount(user_clusters, minlength=n_clusters)
+    ptr = np.zeros(n_clusters + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    return ptr, order.astype(np.int64)
+
+
+class SnapshotStore:
+    """Versioned snapshot directory on the checkpointer's manifest
+    format: save goes through ``Checkpointer.save`` (atomic tmp+rename,
+    retention, ``latest`` pointer), load reads the manifest + leaf files
+    directly — no template tree needed, shapes come from the ``.npy``
+    headers."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self._ck = Checkpointer(directory, keep=keep)
+
+    # -- publish ------------------------------------------------------------
+
+    def publish(self, snap: IndexSnapshot, *, blocking: bool = True
+                ) -> None:
+        meta = dict(kind="index_snapshot",
+                    version=int(snap.version),
+                    n_users=int(snap.n_users),
+                    n_items=int(snap.n_items),
+                    codebook_sizes=list(snap.codebook_sizes),
+                    metrics={k: float(v)
+                             for k, v in snap.metrics.items()})
+        self._ck.save(snap.version, snap, metadata=meta,
+                      blocking=blocking)
+
+    def wait(self) -> None:
+        self._ck.wait()
+
+    # -- load ---------------------------------------------------------------
+
+    def versions(self) -> List[int]:
+        return self._ck.all_steps()
+
+    def latest_version(self) -> Optional[int]:
+        return self._ck.latest_step()
+
+    def load(self, version: Optional[int] = None) -> IndexSnapshot:
+        version = (version if version is not None
+                   else self.latest_version())
+        if version is None:
+            raise FileNotFoundError(f"no snapshots under {self.dir}")
+        d = os.path.join(self.dir, f"step_{version}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            meta = json.load(f)
+        if meta.get("kind") != "index_snapshot":
+            raise ValueError(f"{d} is not an index snapshot "
+                             f"(kind={meta.get('kind')!r})")
+        if meta["n_leaves"] != len(_DATA_FIELDS):
+            raise ValueError(
+                f"snapshot has {meta['n_leaves']} leaves, expected "
+                f"{len(_DATA_FIELDS)} — incompatible format version")
+        leaves: Dict[str, Any] = {}
+        for i, name in enumerate(_DATA_FIELDS):
+            leaves[name] = np.load(os.path.join(d, f"{i:06d}.npy"),
+                                   allow_pickle=False)
+        return IndexSnapshot(
+            version=int(meta["version"]),
+            n_users=int(meta["n_users"]),
+            n_items=int(meta["n_items"]),
+            codebook_sizes=tuple(int(s)
+                                 for s in meta["codebook_sizes"]),
+            gate_metrics=tuple(sorted(
+                (str(k), float(v))
+                for k, v in meta.get("metrics", {}).items())),
+            **leaves)

@@ -1,0 +1,197 @@
+"""Atomic hot-swap of published index versions into live serving.
+
+``SnapshotHandle`` is the double-buffer: two slots, each holding an
+immutable ``ServingBundle`` (snapshot + its ``ClusterQueueStore`` + I2I
+table), and one active-slot reference.  Every request path captures the
+bundle reference exactly once at entry, so an in-flight
+``retrieve_batch``/``serve_batch`` sees one version in full — never a
+mix — and the flip itself is a single Python reference assignment
+(atomic under the interpreter; the store/i2i/version triplet travels as
+one object, so there is no window where a reader can pair version N's
+queues with version N+1's I2I table).
+
+Queue re-keying across versions: the store's ring buffers are keyed by
+cluster id, and a user's cluster can change between snapshots, so queue
+contents cannot be carried over by array copy.  Instead the engine
+retains the recent raw event window in an ``EventRing`` and *replays*
+it into the incoming snapshot's store before the flip — events land in
+their users' *new* clusters by construction, and anything older than
+the recency horizon (or past the ring capacity) is drained by
+staleness, which the recency filter would have discarded anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.serving import ClusterQueueStore
+from repro.lifecycle.snapshot import IndexSnapshot
+
+
+class EventRing:
+    """Fixed-capacity ring of raw (user, item, ts) engagement events —
+    the replay source for queue re-keying at swap time."""
+
+    def __init__(self, capacity: int = 1 << 16):
+        self.capacity = int(capacity)
+        self.user = np.full(self.capacity, -1, np.int64)
+        self.item = np.full(self.capacity, -1, np.int64)
+        self.ts = np.full(self.capacity, -np.inf, np.float64)
+        self.cursor = 0                   # total events ever pushed
+
+    def push(self, user_ids: np.ndarray, item_ids: np.ndarray,
+             timestamps: np.ndarray) -> None:
+        u = np.asarray(user_ids, np.int64).ravel()
+        if u.size == 0:
+            return
+        i = np.asarray(item_ids, np.int64).ravel()
+        t = np.asarray(timestamps, np.float64).ravel()
+        if u.size >= self.capacity:       # only the trailing window fits
+            u, i, t = (a[-self.capacity:] for a in (u, i, t))
+        slot = (self.cursor + np.arange(u.size)) % self.capacity
+        self.user[slot] = u
+        self.item[slot] = i
+        self.ts[slot] = t
+        self.cursor += u.size
+
+    def window_since(self, start: int, min_ts: float
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """Events pushed at positions ``[start, cursor)`` (clamped to
+        ring capacity) with ``ts >= min_ts``, oldest first.  Returns
+        ``(users, items, ts, cursor_at_read)``."""
+        end = self.cursor
+        lo = max(start, end - self.capacity)
+        if lo >= end:
+            z = np.zeros(0, np.int64)
+            return z, z.copy(), np.zeros(0, np.float64), end
+        pos = np.arange(lo, end) % self.capacity
+        u, i, t = self.user[pos], self.item[pos], self.ts[pos]
+        keep = t >= min_ts
+        return u[keep], i[keep], t[keep], end
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingBundle:
+    """Everything one snapshot version needs to serve — flipped as a
+    single immutable unit."""
+    version: int
+    snapshot: IndexSnapshot
+    store: ClusterQueueStore
+    i2i: np.ndarray
+
+
+class SnapshotHandle:
+    """Double-buffered bundle holder with an atomic flip.
+
+    Readers call ``acquire()`` once per request batch and use only the
+    returned bundle; ``flip(bundle)`` installs a new version in the
+    spare slot and swaps the active reference.  The previous bundle
+    stays alive in the spare slot until the *next* flip, giving
+    still-running readers a consistent view for their whole call.
+    """
+
+    def __init__(self, bundle: ServingBundle):
+        self._slots = [bundle, None]
+        self._active = bundle
+
+    def acquire(self) -> ServingBundle:
+        return self._active              # one atomic reference read
+
+    def flip(self, bundle: ServingBundle) -> ServingBundle:
+        """Install ``bundle`` and return the displaced one."""
+        old = self._active
+        spare = 1 if self._slots[0] is old else 0
+        self._slots[spare] = bundle
+        self._active = bundle            # THE atomic publication point
+        return old
+
+    @property
+    def version(self) -> int:
+        return self._active.version
+
+
+class SwapServer:
+    """The serving facade the lifecycle runtime drives: ingest + batched
+    retrieval against whichever snapshot version is live, and
+    ``swap_to`` for zero-downtime version changes.
+
+    Every retrieval returns ``(results, version)`` so each response is
+    attributable to exactly one published snapshot.
+    """
+
+    def __init__(self, snapshot: IndexSnapshot, *, queue_len: int = 256,
+                 recency_s: float = 3600.0, ring_capacity: int = 1 << 16):
+        self.queue_len = int(queue_len)
+        self.recency_s = float(recency_s)
+        self.ring = EventRing(ring_capacity)
+        self.handle = SnapshotHandle(self._bundle(snapshot))
+        self.swap_reports: list = []
+
+    def _bundle(self, snapshot: IndexSnapshot) -> ServingBundle:
+        store = ClusterQueueStore(snapshot.user_clusters,
+                                  queue_len=self.queue_len,
+                                  recency_s=self.recency_s,
+                                  n_clusters=snapshot.n_clusters)
+        return ServingBundle(version=snapshot.version, snapshot=snapshot,
+                             store=store, i2i=snapshot.i2i)
+
+    @property
+    def version(self) -> int:
+        return self.handle.version
+
+    # -- request path -------------------------------------------------------
+
+    def ingest(self, user_ids, item_ids, timestamps) -> None:
+        self.ring.push(user_ids, item_ids, timestamps)
+        self.handle.acquire().store.ingest(user_ids, item_ids, timestamps)
+
+    def retrieve_batch(self, user_ids, now: float, k: int
+                       ) -> Tuple[np.ndarray, int]:
+        b = self.handle.acquire()
+        return b.store.retrieve_batch(user_ids, now, k), b.version
+
+    def serve_batch(self, user_ids, now: float, *, n_recent: int = 8,
+                    k: int = 32, use_kernel: bool = False
+                    ) -> Tuple[np.ndarray, np.ndarray, int]:
+        b = self.handle.acquire()
+        seeds, union = b.store.serve_batch(user_ids, now,
+                                           n_recent=n_recent, k=k,
+                                           i2i=b.i2i,
+                                           use_kernel=use_kernel)
+        return seeds, union, b.version
+
+    # -- version flip -------------------------------------------------------
+
+    def swap_to(self, snapshot: IndexSnapshot, now: float
+                ) -> Dict[str, float]:
+        """Hot-swap to ``snapshot``: build + warm its store off to the
+        side (the old version keeps serving), replay the retained event
+        window into the new clusters, catch up any events that raced in
+        during the replay, then flip.
+
+        The *stall* — the span in which a hypothetical concurrent
+        request could observe the engine mid-transition — is only the
+        catch-up + flip section; the bulk replay is off-path.
+        """
+        t0 = time.perf_counter()
+        bundle = self._bundle(snapshot)
+        cutoff = now - self.recency_s
+        u, i, t, seen = self.ring.window_since(0, cutoff)
+        bundle.store.ingest(u, i, t)                  # bulk re-key
+        t_flip = time.perf_counter()
+        u, i, t, seen = self.ring.window_since(seen, cutoff)
+        if len(u):                                    # raced-in events
+            bundle.store.ingest(u, i, t)
+        old = self.handle.flip(bundle)
+        t1 = time.perf_counter()
+        report = dict(
+            from_version=float(old.version),
+            to_version=float(bundle.version),
+            replayed_events=float(bundle.store.cursor.sum()),
+            build_ms=(t_flip - t0) * 1e3,
+            stall_ms=(t1 - t_flip) * 1e3)
+        self.swap_reports.append(report)
+        return report

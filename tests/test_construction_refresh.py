@@ -305,6 +305,113 @@ def test_incremental_refresh_grows_item_space_and_routes_group2():
         np.testing.assert_array_equal(row[m], 50 + knn[m])
 
 
+def test_incremental_refresh_bitwise_under_hub_subsampling():
+    """hub_cap small enough to trigger: keyed, persisted hub draws must
+    keep refresh == full rebuild bitwise (the old per-call RNG stream
+    diverged here)."""
+    world = make_world(n_users=50, n_items=40, events_per_user=20.0,
+                       seed=11)
+    old, delta = _split_log(world.day0, 79200.0)
+    assert len(delta.user_id) > 0
+    kw = dict(k_cap=12, hub_cap=6)                      # hubs everywhere
+    pw = dict(k_imp=6, n_walks=8, walk_len=3, seed=0)
+    g_old = GB.build_graph(old, keep_state=True, **kw)
+    st = g_old.refresh
+    assert (len(st.hub_draws["uu"].anchor_ids) > 0
+            or len(st.hub_draws["ii"].anchor_ids) > 0)  # cap triggered
+    t_old = build_neighbor_tables(g_old, keep_state=True, **pw)
+    g_ref, t_ref, rep = incremental_refresh(g_old, t_old, delta)
+    g_full = GB.build_graph(world.day0, **kw)
+    t_full = build_neighbor_tables(g_full, **pw)
+    for et in ("ui", "uu", "ii"):
+        a, b = getattr(g_ref, et), getattr(g_full, et)
+        np.testing.assert_array_equal(a.src, b.src)
+        np.testing.assert_array_equal(a.dst, b.dst)
+        np.testing.assert_array_equal(a.weight, b.weight)
+    np.testing.assert_array_equal(t_ref.user_nbrs, t_full.user_nbrs)
+    np.testing.assert_array_equal(t_ref.item_nbrs, t_full.item_nbrs)
+
+
+def test_hub_draws_persisted_and_reused():
+    """Sanity on the persisted offsets: a refresh with an empty-ish delta
+    keeps untouched anchors' draws verbatim, and redrawn offsets are a
+    pure function of (seed, tag, anchor id, degree)."""
+    world = make_world(n_users=40, n_items=30, events_per_user=20.0,
+                       seed=3)
+    g = GB.build_graph(world.day0, k_cap=12, hub_cap=6, keep_state=True)
+    d0 = g.refresh.hub_draws
+    assert len(d0["uu"].anchor_ids) or len(d0["ii"].anchor_ids)
+    # keyed regeneration reproduces the persisted offsets exactly
+    for tag in ("uu", "ii"):
+        hd = d0[tag]
+        if not len(hd.anchor_ids):
+            continue
+        u = GB.hub_uniforms(0, tag, hd.anchor_ids, hd.offsets.shape[1])
+        o = (u * hd.lens[:, None]).astype(np.int64)
+        o.sort(axis=1)
+        dup = np.zeros_like(o, bool)
+        dup[:, 1:] = o[:, 1:] == o[:, :-1]
+        o[dup] = -1
+        np.testing.assert_array_equal(o, hd.offsets)
+
+
+def test_incremental_refresh_grows_user_space():
+    """User growth: the unified id space shifts (items move up by the
+    number of new users); refreshed tables must match a full rebuild on
+    affected rows and equal the remapped old tables elsewhere."""
+    nu, ni = 50, 60
+    world = make_world(n_users=nu, n_items=ni, events_per_user=8.0,
+                       seed=21)
+    old = world.day0
+    nu_new = 56
+    rng = np.random.default_rng(17)
+    # delta: some old users re-engage + 6 brand-new users engage
+    du = np.r_[rng.integers(0, nu, 20),
+               np.arange(nu, nu_new)].astype(np.int64)
+    di = rng.integers(0, ni, len(du)).astype(np.int64)
+    delta = GB.EngagementLog(du, di,
+                             rng.integers(0, 4, len(du)).astype(np.int32),
+                             np.full(len(du), 90000.0), nu_new, ni)
+    merged = GB.EngagementLog(
+        np.r_[old.user_id, delta.user_id],
+        np.r_[old.item_id, delta.item_id],
+        np.r_[old.event_type, delta.event_type],
+        np.r_[old.timestamp, delta.timestamp], nu_new, ni)
+    kw = dict(k_cap=12, hub_cap=512)
+    pw = dict(k_imp=6, n_walks=8, walk_len=3, seed=0)
+    prev_emb = rng.normal(0, 1, (nu_new + ni, 16)).astype(np.float32)
+    g_old = GB.build_graph(old, keep_state=True, **kw)
+    t_old = build_neighbor_tables(g_old, keep_state=True, **pw)
+    g_ref, t_ref, rep = incremental_refresh(g_old, t_old, delta,
+                                            prev_emb=prev_emb)
+    g_full = GB.build_graph(merged, **kw)
+    t_full = build_neighbor_tables(g_full, **pw, prev_emb=prev_emb)
+
+    assert g_ref.n_users == nu_new
+    n = nu_new + ni
+    assert t_ref.user_nbrs.shape[0] == n
+    am = np.zeros(n, bool)
+    am[rep["affected_nodes"]] = True
+    assert am[np.arange(nu, nu_new)].all()       # new users are affected
+    # edge sets match the full rebuild bitwise
+    for et in ("ui", "uu", "ii"):
+        a, b = getattr(g_ref, et), getattr(g_full, et)
+        np.testing.assert_array_equal(a.src, b.src)
+        np.testing.assert_array_equal(a.dst, b.dst)
+        np.testing.assert_array_equal(a.weight, b.weight)
+    # affected rows match the rebuild; unaffected rows == remapped old
+    np.testing.assert_array_equal(t_ref.user_nbrs[am], t_full.user_nbrs[am])
+    np.testing.assert_array_equal(t_ref.item_nbrs[am], t_full.item_nbrs[am])
+    shift = nu_new - nu
+    old_pos = np.r_[np.arange(nu), np.arange(nu, nu + ni) + shift]
+    remap = lambda a: np.where(a >= nu, a + shift, a)   # noqa: E731
+    for t_r, t_o in ((t_ref.user_nbrs, t_old.user_nbrs),
+                     (t_ref.item_nbrs, t_old.item_nbrs)):
+        carried = ~am[old_pos]
+        np.testing.assert_array_equal(t_r[old_pos[carried]],
+                                      remap(t_o[carried]))
+
+
 def test_refresh_leaves_isolated_component_untouched():
     """A disconnected community never reachable from the delta keeps its
     tables bit-identical (and is not re-walked at all)."""
@@ -346,10 +453,15 @@ def test_refresh_requires_state():
         GB.refresh_graph(g, delta)
 
 
-def test_refresh_rejects_user_space_change():
+def test_refresh_rejects_shrinking_id_spaces():
     g = _small_graph(nu=10, ni=12, keep_state=True)
     delta = GB.EngagementLog(np.array([0]), np.array([0]),
                              np.array([0], np.int32), np.array([0.0]),
-                             11, 12)
-    with pytest.raises(ValueError, match="user-id space"):
+                             9, 12)
+    with pytest.raises(ValueError, match="user space"):
+        GB.refresh_graph(g, delta)
+    delta = GB.EngagementLog(np.array([0]), np.array([0]),
+                             np.array([0], np.int32), np.array([0.0]),
+                             10, 11)
+    with pytest.raises(ValueError, match="item space"):
         GB.refresh_graph(g, delta)

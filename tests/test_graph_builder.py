@@ -74,7 +74,7 @@ def test_hub_subsample_single_anchor_cannot_fake_min_common():
             timestamp=np.zeros(n_users), n_users=n_users, n_items=n_items)
         ui = GB.build_ui_edges(log)
         uu = GB.build_uu_edges(ui, n_users, min_common=2, hub_cap=6,
-                               rng=np.random.default_rng(seed))
+                               seed=seed)
         assert len(uu) == 0, f"seed {seed}: single-anchor pair passed " \
                              f"min_common"
 

@@ -1,0 +1,427 @@
+"""Lifecycle runtime: full-corpus encode vs the per-batch oracle,
+snapshot save/load round-trips (and TrainState round-trips incl. the
+RQState ring buffers), publication artifacts, and swap atomicity under
+an interleaved version-flip storm."""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RQConfig
+from repro.core.serving import ClusterQueueStore, build_i2i_knn
+from repro.kernels.rq_assign.ops import (flat_codes_np, rq_assign,
+                                         rq_assign_corpus)
+from repro.lifecycle.snapshot import (IndexSnapshot, SnapshotStore,
+                                      derive_members)
+from repro.lifecycle.swap import EventRing, SnapshotHandle, SwapServer
+
+
+# ---------------------------------------------------------------------------
+# full-corpus RQ encode == per-batch oracle, bit for bit
+# ---------------------------------------------------------------------------
+
+def _books(rng, d=24, sizes=(16, 8)):
+    return [rng.normal(size=(n, d)).astype(np.float32) * s
+            for n, s in zip(sizes, (0.3, 0.1))]
+
+
+def test_rq_corpus_encode_matches_per_batch_oracle():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1037, 24)).astype(np.float32)
+    books = _books(rng)
+    codes, recon = rq_assign_corpus(x, books, chunk=256)
+    # arbitrary batch splits through the online assignment path
+    for splits in ([0, 1037], [0, 13, 700, 1037], [0, 512, 1037]):
+        for lo, hi in zip(splits[:-1], splits[1:]):
+            c, r = rq_assign(jnp.asarray(x[lo:hi]),
+                             [jnp.asarray(b) for b in books],
+                             use_kernel=False)
+            np.testing.assert_array_equal(np.asarray(c), codes[lo:hi])
+            np.testing.assert_array_equal(np.asarray(r), recon[lo:hi])
+
+
+def test_rq_corpus_encode_kernel_path_bitwise():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(300, 24)).astype(np.float32)
+    books = _books(rng)
+    ck, rk = rq_assign_corpus(x, books, chunk=128, use_kernel=True,
+                              block_b=64)
+    cr, rr = rq_assign_corpus(x, books, chunk=300)
+    np.testing.assert_array_equal(ck, cr)
+    np.testing.assert_array_equal(rk, rr)
+
+
+def test_corpus_flat_codes_match_online_assignment():
+    """Publication (corpus encode -> flat ids) must agree with the
+    online serving-side assignment path (``rq_index.assign_codes``)."""
+    from repro.core import rq_index as RQ
+    rng = np.random.default_rng(2)
+    sizes = (16, 8)
+    books = _books(rng, sizes=sizes)
+    params = {"codebooks": {f"layer{l}": jnp.asarray(b)
+                            for l, b in enumerate(books)}}
+    emb = rng.normal(size=(257, 24)).astype(np.float32)
+    codes, _ = rq_assign_corpus(emb, books, chunk=100)
+    flat = flat_codes_np(codes, sizes)
+    online = np.asarray(RQ.assign_codes(
+        params, jnp.asarray(emb), RQConfig(codebook_sizes=sizes)))
+    np.testing.assert_array_equal(flat, online)
+
+
+def test_rq_corpus_encode_empty_and_tiny():
+    rng = np.random.default_rng(3)
+    books = _books(rng)
+    c, r = rq_assign_corpus(np.zeros((0, 24), np.float32), books)
+    assert c.shape == (0, 2) and r.shape == (0, 24)
+    x = rng.normal(size=(3, 24)).astype(np.float32)
+    c, r = rq_assign_corpus(x, books, chunk=4096)
+    cr, rr = rq_assign(jnp.asarray(x), [jnp.asarray(b) for b in books],
+                       use_kernel=False)
+    np.testing.assert_array_equal(c, np.asarray(cr))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trips: TrainState (RQ ring buffers) + IndexSnapshot
+# ---------------------------------------------------------------------------
+
+def test_train_state_roundtrip_preserves_rq_ring_buffers(
+        tmp_path, tiny_cfg, tiny_dataset):
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.core import trainer as T
+    state, _, opt = T.init_state(jax.random.key(0), tiny_cfg, pool_size=64)
+    step = jax.jit(T.make_train_step(tiny_cfg, opt))
+    for t in range(4):
+        batch = jax.tree.map(jnp.asarray, tiny_dataset.sample_batch(
+            t, 0, {"uu": 8, "ui": 8, "ii": 8}))
+        state, _ = step(state, batch, jax.random.key(t))
+    assert int(state.rq_state.ptr) == 4          # buffers actually moved
+    assert any(float(jnp.sum(h)) > 0 for h in state.rq_state.hists)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(int(state.step), state)
+    restored, _ = ck.restore(jax.tree.map(jnp.zeros_like, state))
+    for a, b in zip(state.rq_state.hists, restored.rq_state.hists):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(restored.rq_state.ptr) == int(state.rq_state.ptr)
+    assert int(restored.rq_state.filled) == int(state.rq_state.filled)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _random_snapshot(rng, version=1, n_users=40, n_items=30,
+                     sizes=(4, 2), d=8, k=5):
+    n_clusters = int(np.prod(sizes))
+    flat = rng.integers(0, n_clusters, n_users).astype(np.int64)
+    ptr, ids = derive_members(flat, n_clusters)
+    codes = np.stack([flat // sizes[1], flat % sizes[1]],
+                     axis=1).astype(np.int32)
+    return IndexSnapshot(
+        user_codes=codes,
+        item_codes=rng.integers(0, sizes[0], (n_items, 2)).astype(np.int32),
+        user_clusters=flat, member_ptr=ptr, member_ids=ids,
+        coarse_codebook=rng.normal(size=(sizes[0], d)).astype(np.float32),
+        i2i=rng.integers(-1, n_items, (n_items, k)).astype(np.int64),
+        version=version, n_users=n_users, n_items=n_items,
+        codebook_sizes=sizes,
+        gate_metrics=(("recall_ratio", 0.93),))
+
+
+def test_index_snapshot_store_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    store = SnapshotStore(str(tmp_path), keep=2)
+    snap = _random_snapshot(rng, version=3)
+    store.publish(snap)
+    back = store.load()
+    assert back.version == 3
+    assert back.codebook_sizes == (4, 2)
+    assert back.metrics == {"recall_ratio": 0.93}
+    for f in ("user_codes", "item_codes", "user_clusters", "member_ptr",
+              "member_ids", "coarse_codebook", "i2i"):
+        np.testing.assert_array_equal(getattr(snap, f), getattr(back, f))
+    # retention + latest pointer behave like the checkpointer's
+    for v in (4, 5, 6):
+        store.publish(_random_snapshot(rng, version=v))
+    assert store.versions() == [5, 6]
+    assert store.latest_version() == 6
+    assert store.load(5).version == 5
+
+
+def test_snapshot_store_rejects_non_snapshot_dir(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    Checkpointer(str(tmp_path)).save(1, {"w": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="index snapshot"):
+        SnapshotStore(str(tmp_path)).load()
+
+
+def test_derive_members_csr():
+    rng = np.random.default_rng(7)
+    flat = rng.integers(0, 6, 50).astype(np.int64)
+    ptr, ids = derive_members(flat, 6)
+    assert ptr[-1] == 50 and len(ids) == 50
+    for c in range(6):
+        members = ids[ptr[c]:ptr[c + 1]]
+        np.testing.assert_array_equal(np.sort(members),
+                                      np.flatnonzero(flat == c))
+
+
+def test_snapshot_coarse_members():
+    rng = np.random.default_rng(8)
+    snap = _random_snapshot(rng)
+    for k0 in range(snap.codebook_sizes[0]):
+        got = np.sort(snap.coarse_members(k0))
+        want = np.flatnonzero(snap.user_codes[:, 0] == k0)
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# serving guard: users minted after the snapshot
+# ---------------------------------------------------------------------------
+
+def test_store_unknown_user_guard():
+    store = ClusterQueueStore(np.array([0, 1, 0]), queue_len=8,
+                              recency_s=1e9)
+    # unknown-user events are dropped, known ones land
+    store.ingest(np.array([0, 7, 1]), np.array([10, 11, 12]),
+                 np.array([1.0, 2.0, 3.0]))
+    assert store.retrieve(0, 3.0, 4) == [10]
+    assert store.retrieve(1, 3.0, 4) == [12]
+    # unknown users retrieve nothing (and never alias cluster 0's queue)
+    out = store.retrieve_batch(np.array([0, 7, -2]), 3.0, 4)
+    assert out[0].tolist()[0] == 10
+    assert (out[1] == -1).all() and (out[2] == -1).all()
+    # kernel serve path masks unknown rows too
+    i2i = np.array([[1, 2]] * 13)
+    s, u = store.serve_batch(np.array([0, 7]), 3.0, n_recent=2, k=2,
+                             i2i=i2i, use_kernel=True)
+    assert (s[1] == -1).all() and (u[1] == -1).all()
+    assert s[0, 0] == 10
+
+
+# ---------------------------------------------------------------------------
+# swap engine: event ring, handle, atomicity
+# ---------------------------------------------------------------------------
+
+def test_event_ring_window_and_wrap():
+    ring = EventRing(capacity=8)
+    ring.push(np.arange(5), np.arange(5) + 100, np.arange(5, dtype=float))
+    u, i, t, seen = ring.window_since(0, -1.0)
+    assert u.tolist() == [0, 1, 2, 3, 4] and seen == 5
+    ring.push(np.arange(6), np.arange(6) + 200, np.arange(6, dtype=float))
+    u, i, t, seen = ring.window_since(0, -1.0)      # capacity clamps
+    assert len(u) == 8 and seen == 11
+    assert i.tolist()[-6:] == [200, 201, 202, 203, 204, 205]
+    # staleness drain
+    u, i, t, _ = ring.window_since(0, 3.0)
+    assert (t >= 3.0).all()
+    # incremental read: nothing new
+    u, i, t, seen2 = ring.window_since(seen, -1.0)
+    assert len(u) == 0 and seen2 == seen
+
+
+def _mk_snapshot(rng, version, n_users, n_items, flip):
+    """Two snapshot families with disjoint cluster layouts + i2i tables
+    so any cross-version mixing is detectable in the output."""
+    sizes = (4, 2)
+    n_clusters = 8
+    flat = ((np.arange(n_users) + (3 * flip)) % n_clusters).astype(np.int64)
+    ptr, ids = derive_members(flat, n_clusters)
+    codes = np.stack([flat // 2, flat % 2], axis=1).astype(np.int32)
+    i2i = ((np.arange(n_items)[:, None] + 1 + flip * 7)
+           % n_items).astype(np.int64).repeat(3, axis=1)
+    i2i[:, 1] = (i2i[:, 1] + 1 + flip) % n_items
+    i2i[:, 2] = (i2i[:, 2] + 3 + flip) % n_items
+    return IndexSnapshot(
+        user_codes=codes, item_codes=np.zeros((n_items, 2), np.int32),
+        user_clusters=flat, member_ptr=ptr, member_ids=ids,
+        coarse_codebook=np.zeros((4, 4), np.float32), i2i=i2i,
+        version=version, n_users=n_users, n_items=n_items,
+        codebook_sizes=sizes)
+
+
+def test_swap_atomicity_under_interleaved_flips():
+    """Interleave retrieve/serve with a background flip storm: every
+    response must be bit-equal to the output of exactly the version it
+    reports — never a mix of two snapshots' stores/i2i tables."""
+    n_users, n_items, n_ev = 60, 40, 3000
+    rng = np.random.default_rng(0)
+    ev = (rng.integers(0, n_users, n_ev), rng.integers(0, n_items, n_ev),
+          np.sort(rng.random(n_ev) * 1000.0))
+    snap_a = _mk_snapshot(rng, 1, n_users, n_items, flip=0)
+    snap_b = _mk_snapshot(rng, 2, n_users, n_items, flip=1)
+
+    server = SwapServer(snap_a, queue_len=32, recency_s=1e9,
+                        ring_capacity=1 << 13)
+    server.ingest(*ev)
+    now = 1000.0
+
+    # per-version oracles: standalone stores fed the same event stream
+    expected = {}
+    for snap in (snap_a, snap_b):
+        st = ClusterQueueStore(snap.user_clusters, queue_len=32,
+                               recency_s=1e9,
+                               n_clusters=snap.n_clusters)
+        st.ingest(*ev)
+        expected[snap.version] = (st, snap.i2i)
+
+    users = rng.integers(0, n_users, 64)
+    stop = threading.Event()
+    flips = dict(n=0)
+
+    def flipper():
+        v = 2
+        while not stop.is_set():
+            snap = snap_b if v % 2 == 0 else snap_a
+            server.swap_to(dataclasses.replace(snap, version=snap.version),
+                           now)
+            flips["n"] += 1
+            v += 1
+
+    th = threading.Thread(target=flipper, daemon=True)
+    th.start()
+    seen_versions = set()
+    try:
+        for _ in range(150):
+            res, ver = server.retrieve_batch(users, now, 16)
+            st, _ = expected[ver]
+            np.testing.assert_array_equal(
+                res, st.retrieve_batch(users, now, 16))
+            seeds, union, ver2 = server.serve_batch(
+                users[:16], now, n_recent=4, k=8)
+            st, i2i = expected[ver2]
+            from repro.core.serving import u2i2i_retrieve_batch
+            es = st.retrieve_batch(users[:16], now, 4)
+            np.testing.assert_array_equal(seeds, es)
+            np.testing.assert_array_equal(
+                union, u2i2i_retrieve_batch(i2i, es, 8))
+            seen_versions.add(ver)
+    finally:
+        stop.set()
+        th.join(timeout=10)
+    assert flips["n"] > 0
+    assert len(seen_versions) >= 1      # both under normal scheduling
+
+
+def test_swap_rekeys_queues_to_new_clusters():
+    """After a flip, retrieval reflects the *new* user->cluster map:
+    replayed events land in the clusters the new snapshot assigns."""
+    rng = np.random.default_rng(4)
+    n_users, n_items = 30, 20
+    snap_a = _mk_snapshot(rng, 1, n_users, n_items, flip=0)
+    snap_b = _mk_snapshot(rng, 2, n_users, n_items, flip=1)
+    ev = (rng.integers(0, n_users, 500), rng.integers(0, n_items, 500),
+          np.sort(rng.random(500) * 100.0))
+    server = SwapServer(snap_a, queue_len=16, recency_s=1e9)
+    server.ingest(*ev)
+    server.swap_to(snap_b, now=100.0)
+    fresh = ClusterQueueStore(snap_b.user_clusters, queue_len=16,
+                              recency_s=1e9,
+                              n_clusters=snap_b.n_clusters)
+    fresh.ingest(*ev)
+    users = np.arange(n_users)
+    got, ver = server.retrieve_batch(users, 100.0, 8)
+    assert ver == 2
+    np.testing.assert_array_equal(got,
+                                  fresh.retrieve_batch(users, 100.0, 8))
+
+
+def test_snapshot_handle_flip_returns_displaced():
+    rng = np.random.default_rng(5)
+    from repro.lifecycle.swap import ServingBundle
+    snap = _mk_snapshot(rng, 1, 10, 10, flip=0)
+
+    def bundle(v):
+        return ServingBundle(
+            version=v, snapshot=snap,
+            store=ClusterQueueStore(snap.user_clusters, queue_len=4,
+                                    recency_s=1.0,
+                                    n_clusters=snap.n_clusters),
+            i2i=snap.i2i)
+
+    h = SnapshotHandle(bundle(1))
+    assert h.version == 1
+    b2 = bundle(2)
+    old = h.flip(b2)
+    assert old.version == 1 and h.acquire() is b2
+    b3 = bundle(3)
+    old = h.flip(b3)
+    assert old.version == 2 and h.version == 3
+
+
+# ---------------------------------------------------------------------------
+# publisher: artifacts + recall gate plumbing (cheap, untrained RQ)
+# ---------------------------------------------------------------------------
+
+def test_build_and_evaluate_snapshot_smoke(tiny_world):
+    from repro.lifecycle.publish import (build_snapshot,
+                                         cluster_neighbor_users,
+                                         evaluate_snapshot)
+    rng = np.random.default_rng(0)
+    d, sizes = 16, (8, 4)
+    nu, ni = tiny_world.n_users, tiny_world.n_items
+    user_emb = np.ascontiguousarray(
+        tiny_world.user_latent @ rng.normal(size=(
+            tiny_world.user_latent.shape[1], d))).astype(np.float32)
+    item_emb = rng.normal(size=(ni, d)).astype(np.float32)
+    params = {"codebooks": {
+        "layer0": user_emb[rng.choice(nu, sizes[0], replace=False)],
+        "layer1": rng.normal(size=(sizes[1], d)).astype(np.float32) * .1}}
+    snap = build_snapshot(1, user_emb, item_emb, params,
+                          _cfg_for(sizes), i2i_k=6)
+    assert snap.n_clusters == 32
+    assert snap.member_ptr[-1] == nu
+    assert snap.i2i.shape == (ni, 6)
+    # multi-probe neighbors: valid ids, self-excluded
+    q = np.arange(12)
+    nbrs = cluster_neighbor_users(snap, user_emb, q, 10)
+    assert nbrs.shape == (12, 10)
+    for qi, row in zip(q, nbrs):
+        vals = row[row >= 0]
+        assert qi not in vals
+        assert (vals < nu).all()
+    m = evaluate_snapshot(snap, user_emb, user_emb.copy(), tiny_world,
+                          recall_k=20, n_queries=50)
+    assert 0.0 <= m["recall_index"] <= 1.0
+    assert m["recall_ratio"] >= 0.0
+
+
+def _cfg_for(sizes):
+    from repro.configs.base import RankGraph2Config
+    return RankGraph2Config(rq=RQConfig(codebook_sizes=sizes),
+                            d_embed=16, dtype="float32")
+
+
+def test_gate_failed_snapshot_is_not_persisted_or_swapped(
+        tmp_path, tiny_world, tiny_cfg, tiny_graph):
+    """A snapshot below the recall floor must neither reach the on-disk
+    store (a restart would load it via ``latest``) nor serving."""
+    from repro.data.edge_dataset import build_neighbor_tables
+    from repro.lifecycle.runtime import LifecycleConfig, LifecycleRuntime
+    import repro.core.graph_builder as GB
+    g = GB.build_graph(tiny_world.day0, k_cap=16, hub_cap=12,
+                       keep_state=True)
+    tables = build_neighbor_tables(g, k_imp=10, n_walks=12, walk_len=3,
+                                   keep_state=True)
+    lcfg = LifecycleConfig(steps_per_cycle=1, batch_per_type=8,
+                           recall_queries=40, recall_k=20,
+                           min_recall_ratio=2.0)   # unsatisfiable
+    rt = LifecycleRuntime(tiny_cfg, lcfg, g, tables,
+                          tiny_world.user_feat, tiny_world.item_feat,
+                          world=tiny_world, snapshot_dir=str(tmp_path),
+                          seed=0)
+    rep = rt.run_cycle(now=86400.0)
+    assert rep["swap"].get("skipped") is True
+    assert rt.server is None                       # never came up
+    assert rt.store.versions() == []               # nothing persisted
+    with pytest.raises(FileNotFoundError):
+        rt.store.load()
+    # feature validation fires BEFORE graph/tables mutate
+    from repro.core.graph_builder import EngagementLog
+    g_before, t_before = rt.g, rt.tables
+    delta = EngagementLog(np.array([0]), np.array([0]),
+                          np.array([0], np.int32), np.array([86401.0]),
+                          tiny_world.n_users + 3, tiny_world.n_items)
+    with pytest.raises(ValueError, match="user features"):
+        rt.refresh(delta)
+    assert rt.g is g_before and rt.tables is t_before
