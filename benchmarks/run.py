@@ -27,6 +27,7 @@ def main(argv=None) -> int:
     from benchmarks import lifecycle_swap as LS
     from benchmarks import roofline as RL
     from benchmarks import serving_kernels as SK
+    from benchmarks import train_throughput as TT
 
     jobs = [
         ("table2_user_recall", PT.table2_user_recall),
@@ -38,6 +39,7 @@ def main(argv=None) -> int:
         ("table8_serving_cost", PT.table8_serving_cost),
         ("graph_build_scaling", GBS.run),
         ("serving_kernels", SK.run),
+        ("train_throughput", TT.run),
         ("lifecycle_swap", LS.run),
         ("roofline", RL.run),
     ]
@@ -55,7 +57,10 @@ def main(argv=None) -> int:
             dt = time.perf_counter() - t0
             derived = ""
             if isinstance(out, dict):
-                if "rankgraph2" in out:
+                if "speedup_dedup_ids" in out:
+                    derived = (f"train_speedup="
+                               f"{out['speedup_dedup_ids']:.2f}x")
+                elif "rankgraph2" in out:
                     derived = f"recall@100={out['rankgraph2'].get(100, 0):.3f}"
                 elif "modeled_cost_reduction" in out:
                     derived = (f"cost_reduction="

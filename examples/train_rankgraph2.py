@@ -12,6 +12,7 @@ health monitoring.
 """
 import argparse
 import os
+import signal
 import time
 
 import jax
@@ -56,13 +57,17 @@ def main():
         tables = build_neighbor_tables(g, k_imp=cfg.k_imp,
                                        n_walks=cfg.ppr_walks,
                                        walk_len=cfg.ppr_len)
+        # id-only batches: the prefetch thread ships ids + masks only;
+        # features stay device-resident in the step's FeatureStore
         return EdgeDataset(g, tables, world.user_feat, world.item_feat,
-                           k_train=cfg.k_train)
+                           k_train=cfg.k_train, batch_format="dedup_ids")
 
     ds = build(86400.0)
     state, specs, optimizer = T.init_state(jax.random.key(0), cfg,
                                            pool_size=4096)
-    step_fn = jax.jit(T.make_train_step(cfg, optimizer))
+    step_fn = T.make_train_step(
+        cfg, optimizer,
+        features=T.make_feature_store(world.user_feat, world.item_feat))
 
     ck = Checkpointer(args.ckpt_dir, keep=3)
     start = 0
@@ -71,9 +76,14 @@ def main():
         start = int(meta["step"])
         print(f"resumed from step {start}")
 
-    # preemption: a SIGTERM triggers a final blocking save then exit 143
-    ck.install_preemption_handler(
-        lambda: (int(state.step), state, {"preempted_at": time.time()}))
+    # preemption: cooperative SIGTERM — the step is donated, so while a
+    # step is in flight the previous state's buffers are already gone
+    # and a save from inside the signal handler could read dead memory.
+    # The handler only sets a flag; the loop saves right after the next
+    # step returns (a fully-materialized state) and exits 143.
+    preempted = {"flag": False}
+    signal.signal(signal.SIGTERM,
+                  lambda *_: preempted.update(flag=True))
 
     per_type = {"uu": args.batch, "ui": args.batch, "ii": args.batch}
     prefetch = Prefetcher(ds.iter_batches(0, per_type, start_step=start),
@@ -90,6 +100,12 @@ def main():
             print(f"[{t}] graph rebuilt in {ds.g.build_seconds:.1f}s")
         batch = jax.tree.map(jnp.asarray, next(prefetch))
         state, m = step_fn(state, batch, jax.random.key(7000 + t))
+        if preempted["flag"]:
+            ck.save(int(state.step), state,
+                    metadata={"data_seed": 0, "preempted": True,
+                              "preempted_at": time.time()}, blocking=True)
+            prefetch.close()
+            raise SystemExit(143)
         if t % 50 == 0:
             util = RQ.codebook_utilization(state.rq_state)
             print(f"[{t}] total={float(m['total']):.3f} "
@@ -99,8 +115,12 @@ def main():
                   f"steps/s)")
         if t and t % args.ckpt_every == 0:
             ck.save(t, state, metadata={"data_seed": 0}, blocking=False)
-    ck.save(args.steps, state, metadata={"data_seed": 0}, blocking=True)
+    ck.save(args.steps, state,
+            metadata={"data_seed": 0, "preempted": preempted["flag"]},
+            blocking=True)
     prefetch.close()
+    if preempted["flag"]:   # SIGTERM after the last in-loop check
+        raise SystemExit(143)
 
     # embedding refresh + eval
     from repro.core import model as M
@@ -109,6 +129,8 @@ def main():
     rec = EV.user_recall(user_emb, world, n_queries=300)
     print("final user Recall@K:", {k: round(v, 3) for k, v in rec.items()})
     print(f"checkpoints in {args.ckpt_dir}: steps {ck.all_steps()}")
+    if preempted["flag"]:   # SIGTERM during embed/eval: still exit 143
+        raise SystemExit(143)
 
 
 if __name__ == "__main__":

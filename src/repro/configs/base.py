@@ -158,6 +158,9 @@ class RankGraph2Config:
     n_pool_neg: int = 32         # from rolling out-of-batch pool
     margin: float = 0.1
     tau: float = 0.06
+    # training hot path
+    use_fused_contrastive: bool = False   # Pallas fused loss (fwd + VJP)
+    reuse_lprime_negatives: bool = True   # share negs between L and L'
     rq: RQConfig = dataclasses.field(default_factory=RQConfig)
     # graph construction
     alpha_pop: float = 0.3       # popularity bias exponent

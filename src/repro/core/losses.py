@@ -12,7 +12,6 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-import jax
 import jax.numpy as jnp
 
 EDGE_TYPES = ("uu", "ui", "iu", "ii")
@@ -28,15 +27,18 @@ def init_uncertainty(dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
 def pair_losses(src: jnp.ndarray,            # (B, d) l2-normalized
                 dst: jnp.ndarray,            # (B, d) l2-normalized
                 negs: jnp.ndarray,           # (B, N, d) l2-normalized
-                *, margin: float = 0.1, tau: float = 0.06
+                *, margin: float = 0.1, tau: float = 0.06,
+                use_kernel: bool = False
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (margin_loss, infonce_loss), each (B,)."""
-    s_pos = jnp.sum(src * dst, axis=-1)                       # (B,)
-    s_neg = jnp.einsum("bd,bnd->bn", src, negs)               # (B, N)
-    marg = jnp.sum(jax.nn.relu(s_neg - s_pos[:, None] + margin), axis=-1)
-    logits = jnp.concatenate([s_pos[:, None], s_neg], axis=1) / tau
-    infonce = -jax.nn.log_softmax(logits, axis=-1)[:, 0]
-    return marg, infonce
+    """Returns (margin_loss, infonce_loss), each (B,).
+
+    ``use_kernel`` routes through the fused Pallas kernel (forward and
+    backward both single-pass over the (B, N) logits tile); the default
+    jnp path is the autodiff reference.
+    """
+    from repro.kernels.fused_contrastive.ops import contrastive
+    return contrastive(src, dst, negs, margin=margin, tau=tau,
+                       use_kernel=use_kernel)
 
 
 def uncertainty_combine(task_losses: Dict[str, jnp.ndarray],

@@ -88,6 +88,32 @@ def _masked_mean(e: jax.Array, mask: jax.Array) -> jax.Array:
     return tot / cnt
 
 
+def encode_nodes(params, cfg: RankGraph2Config, node_type: int,
+                 feat: jax.Array, ctx: ShardingCtx = NULL_CTX) -> jax.Array:
+    """Type encoder f_t only: (..., d_feat) -> (..., H, d_embed).
+
+    The deduplicated training forward encodes each unique node exactly
+    once through this and shares the result between its self-role and
+    every neighbor-role via gathers (see ``aggregate_nodes``)."""
+    f = params["f_user"] if node_type == USER else params["f_item"]
+    return _encoder_apply(f, feat.astype(jnp.dtype(cfg.dtype)),
+                          cfg.n_heads, cfg.d_embed, ctx)
+
+
+def aggregate_nodes(params, cfg: RankGraph2Config, node_type: int,
+                    self_e: jax.Array,
+                    unbr_e: jax.Array, unbr_mask: jax.Array,
+                    inbr_e: jax.Array, inbr_mask: jax.Array,
+                    ctx: ShardingCtx = NULL_CTX) -> jax.Array:
+    """AGG_t over pre-encoded heads: self_e (B, H, d), neighbor heads
+    (B, K, H, d) + masks -> (B, H, d) l2-normalized."""
+    agg = params["agg_user"] if node_type == USER else params["agg_item"]
+    u_agg = _masked_mean(unbr_e, unbr_mask)
+    i_agg = _masked_mean(inbr_e, inbr_mask)
+    out = _agg_apply(agg, self_e, u_agg, i_agg)
+    return ctx(out, "batch", None, None)
+
+
 def embed_nodes(params, cfg: RankGraph2Config, node_type: int,
                 feat: jax.Array,
                 unbr_feat: jax.Array, unbr_mask: jax.Array,
@@ -99,19 +125,11 @@ def embed_nodes(params, cfg: RankGraph2Config, node_type: int,
     unbr_feat/inbr_feat: (B, K, d_*) features of pre-computed user/item
     neighbors; masks flag padding (-1 neighbors).
     """
-    compute = jnp.dtype(cfg.dtype)
-    f_self = params["f_user"] if node_type == USER else params["f_item"]
-    agg = params["agg_user"] if node_type == USER else params["agg_item"]
-    self_e = _encoder_apply(f_self, feat.astype(compute), cfg.n_heads,
-                            cfg.d_embed, ctx)
-    u_e = _encoder_apply(params["f_user"], unbr_feat.astype(compute),
-                         cfg.n_heads, cfg.d_embed, ctx)
-    i_e = _encoder_apply(params["f_item"], inbr_feat.astype(compute),
-                         cfg.n_heads, cfg.d_embed, ctx)
-    u_agg = _masked_mean(u_e, unbr_mask)
-    i_agg = _masked_mean(i_e, inbr_mask)
-    out = _agg_apply(agg, self_e, u_agg, i_agg)
-    return ctx(out, "batch", None, None)
+    self_e = encode_nodes(params, cfg, node_type, feat, ctx)
+    u_e = encode_nodes(params, cfg, USER, unbr_feat, ctx)
+    i_e = encode_nodes(params, cfg, ITEM, inbr_feat, ctx)
+    return aggregate_nodes(params, cfg, node_type, self_e, u_e, unbr_mask,
+                           i_e, inbr_mask, ctx)
 
 
 def primary_embedding(head_emb: jax.Array) -> jax.Array:

@@ -9,7 +9,7 @@ distribution across batches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,10 +50,16 @@ def _push(buf: jnp.ndarray, ptr: jnp.ndarray, fill: jnp.ndarray,
     return buf, (ptr + B) % P, jnp.minimum(fill + B, P)
 
 
-def update_pool(state: NegPoolState, user_emb: jnp.ndarray,
-                item_emb: jnp.ndarray) -> NegPoolState:
-    ub, up, uf = _push(state.user, state.user_ptr, state.user_fill, user_emb)
-    ib, ip, if_ = _push(state.item, state.item_ptr, state.item_fill, item_emb)
+def update_pool(state: NegPoolState, user_emb: Optional[jnp.ndarray],
+                item_emb: Optional[jnp.ndarray]) -> NegPoolState:
+    """None embeddings (a batch with no endpoints of that type — e.g. a
+    uu-only ablation) leave that type's ring untouched."""
+    ub, up, uf = (state.user, state.user_ptr, state.user_fill) \
+        if user_emb is None else \
+        _push(state.user, state.user_ptr, state.user_fill, user_emb)
+    ib, ip, if_ = (state.item, state.item_ptr, state.item_fill) \
+        if item_emb is None else \
+        _push(state.item, state.item_ptr, state.item_fill, item_emb)
     return NegPoolState(ub, ib, up, ip, uf, if_)
 
 

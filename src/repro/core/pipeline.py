@@ -121,13 +121,15 @@ def run_pipeline(world: SyntheticWorld, cfg: RankGraph2Config, *,
         tables = _fallback_tables(g, cfg.k_imp, neighbor_strategy, seed)
     times["ppr"] = time.perf_counter() - t0
 
+    # id-only batches: features live on device in a FeatureStore and the
+    # jitted step gathers them; the host ships ids + masks only
     ds = EdgeDataset(g, tables, world.user_feat, world.item_feat,
-                     k_train=cfg.k_train)
+                     k_train=cfg.k_train, batch_format="dedup_ids")
     state, specs, optimizer = T.init_state(jax.random.key(seed), cfg,
                                            pool_size=pool_size)
-    # NB: no donate_argnums — jax's constant cache can alias identical
-    # zero-init leaves, and XLA rejects donating the same buffer twice
-    step_fn = jax.jit(T.make_train_step(cfg, optimizer))
+    step_fn = T.make_train_step(
+        cfg, optimizer,
+        features=T.make_feature_store(world.user_feat, world.item_feat))
 
     per_type = {et: batch_per_type for et in ("uu", "ui", "ii")
                 if et in edge_types or et == "ui"}

@@ -5,7 +5,23 @@ computes per-type contrastive losses in both U-I directions, co-learns
 the RQ index (reconstruction + contrastive-on-recon + balance
 regularizer) and combines everything with learned uncertainty weights.
 State (params, optimizer, RQ histograms, negative pool) is one pytree —
-checkpointable and donate-able.
+checkpointable and donated into the step.
+
+Two batch layouts are supported (see ``data.edge_dataset``):
+
+* **legacy** — per-(edge_type, side) feature tensors; each endpoint
+  occurrence is re-encoded (the PR-3 reference path);
+* **dedup / dedup_ids** — packed unique-node sub-batches per node type:
+  every referenced node (endpoint *or* sampled neighbor) runs through
+  the type encoder exactly once, endpoints are aggregated once, and
+  per-edge heads/primaries are pure gathers.  With ``dedup_ids`` the
+  batch is id-only and raw features are gathered inside the jitted step
+  from a device-resident ``FeatureStore`` — the host ships int32 ids
+  and masks instead of (B, K, d) float32 neighbor features.
+
+Both layouts produce the same losses (up to float reduction order) on
+the same edge draws; ``EdgeDataset.expand_batch`` materializes the
+legacy view of a dedup batch for the equivalence tests.
 """
 from __future__ import annotations
 
@@ -40,6 +56,23 @@ jax.tree_util.register_dataclass(
                              "step"], meta_fields=[])
 
 
+@dataclasses.dataclass(frozen=True)
+class FeatureStore:
+    """Device-resident raw feature tables for id-only batches.
+
+    Registered once and closed over by the jitted step: XLA keeps the
+    tables on device, so per-step host->device traffic is just the id /
+    mask integers of the batch."""
+    user_feat: jnp.ndarray     # (n_users, d_user_feat) float32
+    item_feat: jnp.ndarray     # (n_items, d_item_feat) float32
+
+
+def make_feature_store(user_feat: np.ndarray, item_feat: np.ndarray
+                       ) -> FeatureStore:
+    return FeatureStore(jnp.asarray(user_feat, jnp.float32),
+                        jnp.asarray(item_feat, jnp.float32))
+
+
 def init_state(key, cfg: RankGraph2Config, *, pool_size: int = 8192,
                optimizer: Optional[opt_lib.Optimizer] = None
                ) -> Tuple[TrainState, Any, opt_lib.Optimizer]:
@@ -55,30 +88,91 @@ def init_state(key, cfg: RankGraph2Config, *, pool_size: int = 8192,
     pool = N.init_pool(pool_size, cfg.d_embed)
     state = TrainState(params, opt_state, rq_state, pool,
                        jnp.zeros((), jnp.int32))
-    return state, specs, optimizer
+    # the step is donated: jax's constant cache can alias identical
+    # zero-init leaves and XLA rejects donating one buffer twice, so
+    # give every leaf its own buffer once at init
+    return jax.tree.map(jnp.copy, state), specs, optimizer
 
 
 # edge type -> (src node type, dst node type)
 _ET_TYPES = {"uu": (M.USER, M.USER), "ui": (M.USER, M.ITEM),
              "ii": (M.ITEM, M.ITEM)}
+_NODE_TYPES = (("user", M.USER), ("item", M.ITEM))
+
+
+def _dedup_per_type(params, cfg: RankGraph2Config, batch,
+                    ctx: ShardingCtx, features: Optional[FeatureStore]):
+    """Unique-node forward: encode each pack row once, aggregate each
+    endpoint-unique node once, gather per-(edge_type, side) views.
+
+    Returns {et: (src_heads, src_prim, dst_heads, dst_prim)} exactly as
+    the legacy per-endpoint forward would."""
+    nodes, edges = batch["nodes"], batch["edges"]
+    enc: Dict[str, jnp.ndarray] = {}
+    for tname, ntype in _NODE_TYPES:
+        side = nodes[tname]
+        if "feat" in side:
+            feat = side["feat"]
+        else:
+            if features is None:
+                raise ValueError(
+                    "id-only batch but no FeatureStore; pass features= "
+                    "to make_train_step / make_eval_step")
+            table = (features.user_feat if ntype == M.USER
+                     else features.item_feat)
+            feat = jnp.take(table, side["ids"], axis=0)
+        enc[tname] = M.encode_nodes(params, cfg, ntype, feat, ctx)
+
+    heads, prims = {}, {}
+    for tname, ntype in _NODE_TYPES:
+        side = nodes[tname]
+        e_pad = side["unbr_idx"].shape[0]    # endpoint-unique rows first
+        h = M.aggregate_nodes(
+            params, cfg, ntype, enc[tname][:e_pad],
+            jnp.take(enc["user"], side["unbr_idx"], axis=0),
+            side["unbr_mask"],
+            jnp.take(enc["item"], side["inbr_idx"], axis=0),
+            side["inbr_mask"], ctx)
+        heads[tname] = h
+        prims[tname] = M.primary_embedding(h)
+
+    per_type = {}
+    for et, e in edges.items():
+        st, dt = _ET_TYPES[et]
+        sn = "user" if st == M.USER else "item"
+        dn = "user" if dt == M.USER else "item"
+        per_type[et] = (jnp.take(heads[sn], e["src_map"], axis=0),
+                        jnp.take(prims[sn], e["src_map"], axis=0),
+                        jnp.take(heads[dn], e["dst_map"], axis=0),
+                        jnp.take(prims[dn], e["dst_map"], axis=0))
+    return per_type
 
 
 def _forward_losses(params, cfg: RankGraph2Config, batch, pool, rq_state,
-                    key, ctx: ShardingCtx, train: bool):
+                    key, ctx: ShardingCtx, train: bool,
+                    features: Optional[FeatureStore] = None):
     """Returns (task_losses, aux) where aux carries pool/rq updates."""
     tasks: Dict[str, jnp.ndarray] = {}
+
+    if "nodes" in batch:   # dedup layout
+        per_type = _dedup_per_type(params, cfg, batch, ctx, features)
+    else:                  # legacy layout: re-encode every endpoint
+        per_type = {}
+        for et, sub in batch.items():
+            st, dt = _ET_TYPES[et]
+            src_heads, src_prim = M.embed_side(params, cfg, sub["src"],
+                                               st, ctx)
+            dst_heads, dst_prim = M.embed_side(params, cfg, sub["dst"],
+                                               dt, ctx)
+            per_type[et] = (src_heads, src_prim, dst_heads, dst_prim)
+
     user_embs, item_embs = [], []
     endpoint_prims, endpoint_splits = [], []
-
-    per_type = {}
-    for et, sub in batch.items():
+    for et, (sh, sp, dh, dp) in per_type.items():
         st, dt = _ET_TYPES[et]
-        src_heads, src_prim = M.embed_side(params, cfg, sub["src"], st, ctx)
-        dst_heads, dst_prim = M.embed_side(params, cfg, sub["dst"], dt, ctx)
-        per_type[et] = (src_heads, src_prim, dst_heads, dst_prim)
-        (user_embs if st == M.USER else item_embs).append(src_prim)
-        (user_embs if dt == M.USER else item_embs).append(dst_prim)
-        endpoint_prims += [src_prim, dst_prim]
+        (user_embs if st == M.USER else item_embs).append(sp)
+        (user_embs if dt == M.USER else item_embs).append(dp)
+        endpoint_prims += [sp, dp]
         endpoint_splits += [(et, "src"), (et, "dst")]
 
     dp_size = ctx.axis_size("batch")
@@ -92,6 +186,11 @@ def _forward_losses(params, cfg: RankGraph2Config, batch, pool, rq_state,
                                   cfg.n_negatives, cfg.n_pool_neg,
                                   shard_block=blk)
 
+    def _pair(src, dst, negs):
+        return L.pair_losses(src, dst, negs, margin=cfg.margin,
+                             tau=cfg.tau,
+                             use_kernel=cfg.use_fused_contrastive)
+
     keys = jax.random.split(key, 8)
     ki = 0
     loss_dirs = []   # (task_suffix, src_prim, dst_prim, dst_heads, dst_type)
@@ -101,11 +200,12 @@ def _forward_losses(params, cfg: RankGraph2Config, batch, pool, rq_state,
         if et == "ui":  # bidirectional U-I (paper computes L_UI and L_IU)
             loss_dirs.append(("iu", dp, sp, sh, st))
 
-    for suffix, sp, dp, dh, dt in loss_dirs:
-        negs = _neg(keys[ki], dp, dh, dt)
+    dir_negs = {}
+    for suffix, sp_, dp_, dh_, dt_ in loss_dirs:
+        negs = _neg(keys[ki], dp_, dh_, dt_)
         ki += 1
-        marg, info = L.pair_losses(sp, dp, negs, margin=cfg.margin,
-                                   tau=cfg.tau)
+        dir_negs[suffix] = negs
+        marg, info = _pair(sp_, dp_, negs)
         tasks[f"margin_{suffix}"] = jnp.mean(marg)
         tasks[f"infonce_{suffix}"] = jnp.mean(info)
 
@@ -128,10 +228,15 @@ def _forward_losses(params, cfg: RankGraph2Config, batch, pool, rq_state,
         st, dt = _ET_TYPES[et]
         rs = recon_parts[(et, "src")]
         rd = recon_parts[(et, "dst")]
-        negs = _neg(keys[ki], dp, dh, dt)
-        ki += 1
-        marg, info = L.pair_losses(rs, rd, negs, margin=cfg.margin,
-                                   tau=cfg.tau)
+        # the per-direction negative bank is i.i.d. of the recon
+        # endpoints — reuse it for L' instead of a second pool gather
+        # (reuse_lprime_negatives=False restores the PR-3 double draw)
+        if cfg.reuse_lprime_negatives:
+            negs = dir_negs[et]
+        else:
+            negs = _neg(keys[ki], dp, dh, dt)
+            ki += 1
+        marg, info = _pair(rs, rd, negs)
         lprime.append(jnp.mean(0.5 * marg + 0.5 * info))
     tasks["rq_contrastive"] = jnp.mean(jnp.stack(lprime))
 
@@ -146,13 +251,24 @@ def _forward_losses(params, cfg: RankGraph2Config, batch, pool, rq_state,
 
 def make_train_step(cfg: RankGraph2Config, optimizer: opt_lib.Optimizer,
                     ctx: ShardingCtx = NULL_CTX, *,
-                    grad_clip: float = 1.0):
-    """Builds the (jit-able) train_step(state, batch, key)."""
+                    grad_clip: float = 1.0,
+                    features: Optional[FeatureStore] = None,
+                    jit: bool = True, donate: bool = True):
+    """Builds train_step(state, batch, key) -> (state, metrics).
+
+    By default the step comes back jitted with ``donate_argnums=0`` —
+    the incoming ``TrainState`` buffers are reused for the outgoing
+    state, halving peak state memory.  Callers that lower/compile the
+    raw function themselves (dry-run, roofline) pass ``jit=False``.
+    ``features`` supplies the device-resident ``FeatureStore`` required
+    by id-only (``dedup_ids``) batches.
+    """
 
     def train_step(state: TrainState, batch, key):
         def loss_fn(params):
             tasks, aux = _forward_losses(params, cfg, batch, state.pool,
-                                         state.rq_state, key, ctx, True)
+                                         state.rq_state, key, ctx, True,
+                                         features)
             total = L.uncertainty_combine(tasks, params["uncertainty"])
             return total, (tasks, aux)
 
@@ -170,13 +286,17 @@ def make_train_step(cfg: RankGraph2Config, optimizer: opt_lib.Optimizer,
         metrics["grad_norm"] = gnorm
         return new_state, metrics
 
-    return train_step
+    if not jit:
+        return train_step
+    return jax.jit(train_step, donate_argnums=(0,) if donate else ())
 
 
-def make_eval_step(cfg: RankGraph2Config, ctx: ShardingCtx = NULL_CTX):
+def make_eval_step(cfg: RankGraph2Config, ctx: ShardingCtx = NULL_CTX, *,
+                   features: Optional[FeatureStore] = None):
     def eval_step(state: TrainState, batch, key):
         tasks, _ = _forward_losses(state.params, cfg, batch, state.pool,
-                                   state.rq_state, key, ctx, False)
+                                   state.rq_state, key, ctx, False,
+                                   features)
         return tasks
 
     return eval_step
@@ -195,9 +315,10 @@ def embed_all(params, cfg: RankGraph2Config, dataset, *, node_type: int,
     out = []
     for lo in range(0, len(ids), batch):
         chunk = ids[lo:lo + batch]
-        pad = 0
-        if len(chunk) < batch and lo > 0:
-            pad = batch - len(chunk)
+        # always pad to the fixed batch size: a ragged tail (or a corpus
+        # smaller than one batch) would otherwise retrace per size
+        pad = batch - len(chunk)
+        if pad:
             chunk = np.r_[chunk, np.repeat(chunk[-1:], pad)]
         side = dataset.node_inference_batch(chunk)
         emb = np.asarray(fn(params, {k: jnp.asarray(v)

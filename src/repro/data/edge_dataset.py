@@ -131,6 +131,29 @@ def incremental_refresh(g: HeteroGraph, tables: NeighborTables,
 
 EDGE_KEYS = ("uu", "ui", "ii")
 
+# batch formats (see sample_batch):
+#   legacy    — PR-3 layout: per (edge_type, side) feature tensors, every
+#               endpoint occurrence re-materialized (and re-encoded);
+#   dedup     — packed unique-node sub-batch per node type (features +
+#               pack-relative sampled-neighbor indices) plus int32 gather
+#               maps per (edge_type, side): each referenced node is
+#               encoded exactly once;
+#   dedup_ids — same packs but id-only (no feature tensors): the trainer
+#               gathers features inside the jitted step from a
+#               device-resident FeatureStore, so the host ships ~K*d
+#               fewer bytes per row.
+BATCH_FORMATS = ("legacy", "dedup", "dedup_ids")
+
+# edge type -> (src, dst) node-type names
+_ET_SIDES = {"uu": ("user", "user"), "ui": ("user", "item"),
+             "ii": ("item", "item")}
+
+
+def _round_up(n: int, m: int) -> int:
+    """Bucket sizes to multiples of m (min m) so jit traces are reused
+    across batches instead of recompiling per unique-node count."""
+    return max(m, -(-n // m) * m)
+
 
 @dataclasses.dataclass
 class EdgeDataset:
@@ -143,6 +166,8 @@ class EdgeDataset:
     # weights (construction's premise: weight == relevance; uniform
     # sampling would train on the spurious-tie tail)
     sample_by_weight: bool = True
+    batch_format: str = "dedup"
+    pad_multiple: int = 64        # unique-pack size bucketing
 
     def _cumw(self, et):
         cache = getattr(self, "_cumw_cache", None)
@@ -159,14 +184,8 @@ class EdgeDataset:
                      ) -> Dict[str, np.ndarray]:
         """Features + sampled neighbor features for global node ids."""
         nu = self.tables.n_users
-        is_user = gids < nu
-        d_uf = self.user_feat.shape[1]
-        d_if = self.item_feat.shape[1]
-        feat = np.zeros((len(gids), d_uf if is_user.all() else
-                         (d_if if not is_user.any() else
-                          max(d_uf, d_if))), np.float32)
         # batches are partitioned by edge type so each side is one type
-        if is_user.all():
+        if (gids < nu).all():
             feat = self.user_feat[gids]
         else:
             feat = self.item_feat[gids - nu]
@@ -190,40 +209,196 @@ class EdgeDataset:
                     inbr_feat=inbr_feat.astype(np.float32),
                     inbr_mask=imask.astype(np.float32))
 
-    def sample_batch(self, step: int, seed: int,
-                     per_type: Dict[str, int]) -> Dict[str, Dict]:
-        """Batch t is a pure function of (seed, step) — resumable."""
-        rng = np.random.default_rng((seed, step))
+    def _draw_edges(self, rng: np.random.Generator, et: str, n: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Draw n (src_gid, dst_gid, weight) samples of one edge type."""
         nu = self.tables.n_users
-        batch: Dict[str, Dict] = {}
-        for et in EDGE_KEYS:
-            n = per_type.get(et, 0)
-            if n == 0:
-                continue
-            es = getattr(self.g, et)
-            if len(es) == 0:   # degenerate graphs: self-pairs as fallback
-                src = rng.integers(0, nu, n)
-                dst = src.copy()
-                w = np.ones(n, np.float32)
+        es = getattr(self.g, et)
+        if len(es) == 0:   # degenerate graphs: self-pairs as fallback
+            src = rng.integers(0, nu, n)
+            dst = src.copy()
+            w = np.ones(n, np.float32)
+        else:
+            if self.sample_by_weight:
+                idx = np.searchsorted(self._cumw(et), rng.random(n))
+                idx = np.minimum(idx, len(es) - 1)
             else:
-                if self.sample_by_weight:
-                    idx = np.searchsorted(self._cumw(et), rng.random(n))
-                    idx = np.minimum(idx, len(es) - 1)
-                else:
-                    idx = rng.integers(0, len(es), n)
-                src, dst, w = es.src[idx], es.dst[idx], es.weight[idx]
-            if et == "uu":
-                sg, dg = src, dst
-            elif et == "ui":
-                sg, dg = src, dst + nu
-            else:  # ii
-                sg, dg = src + nu, dst + nu
-            batch[et] = dict(
-                src=self._gather_side(sg, rng),
-                dst=self._gather_side(dg, rng),
-                weight=w.astype(np.float32),
+                idx = rng.integers(0, len(es), n)
+            src, dst, w = es.src[idx], es.dst[idx], es.weight[idx]
+        if et == "uu":
+            sg, dg = src, dst
+        elif et == "ui":
+            sg, dg = src, dst + nu
+        else:  # ii
+            sg, dg = src + nu, dst + nu
+        return sg, dg, w.astype(np.float32)
+
+    def sample_batch(self, step: int, seed: int, per_type: Dict[str, int],
+                     format: Optional[str] = None) -> Dict[str, Dict]:
+        """Batch t is a pure function of (seed, step, format) — resumable.
+
+        ``format`` (default: ``self.batch_format``) selects the layout —
+        see ``BATCH_FORMATS``.  The legacy path keeps PR-3's exact rng
+        consumption order (edge draw, then src/dst neighbor draws, per
+        edge type) so old runs stay reproducible bit-for-bit.
+        """
+        fmt = format or self.batch_format
+        if fmt not in BATCH_FORMATS:
+            raise ValueError(f"unknown batch format {fmt!r}")
+        rng = np.random.default_rng((seed, step))
+        if fmt == "legacy":
+            batch: Dict[str, Dict] = {}
+            for et in EDGE_KEYS:
+                n = per_type.get(et, 0)
+                if n == 0:
+                    continue
+                sg, dg, w = self._draw_edges(rng, et, n)
+                batch[et] = dict(src=self._gather_side(sg, rng),
+                                 dst=self._gather_side(dg, rng),
+                                 weight=w,
+                                 src_ids=sg.astype(np.int32),
+                                 dst_ids=dg.astype(np.int32))
+            return batch
+        edges = {et: self._draw_edges(rng, et, n) for et in EDGE_KEYS
+                 if (n := per_type.get(et, 0))}
+        return self._dedup_batch(rng, edges, id_only=(fmt == "dedup_ids"))
+
+    def _dedup_batch(self, rng: np.random.Generator, edges: Dict[str, Tuple],
+                     id_only: bool) -> Dict[str, Dict]:
+        """Packed unique-node batch: every node referenced by any
+        endpoint or sampled neighbor appears exactly once per node type.
+
+        Pack layout per type: ``[endpoint uniques (E, sorted) | pad to
+        E_pad | neighbor-only extras (sorted) | pad to U_pad]``; sizes
+        are bucketed to ``pad_multiple`` so jit traces are shared across
+        batches.  Endpoint rows [0, E) are the only ones aggregated;
+        extras exist only to be feature-encoded and gathered as
+        neighbors.
+        """
+        nu, ni = self.tables.n_users, self.tables.n_items
+        mult = self.pad_multiple
+        k_imp = self.tables.user_nbrs.shape[1]
+        k = self.k_train
+
+        ep = {"user": [], "item": []}
+        for et, (sg, dg, w) in edges.items():
+            st, dt = _ET_SIDES[et]
+            ep[st].append(sg)
+            ep[dt].append(dg)
+
+        sides: Dict[str, Dict[str, np.ndarray]] = {}
+        uniq: Dict[str, np.ndarray] = {}
+        nbr_gids: Dict[str, Dict[str, np.ndarray]] = {}
+        for t in ("user", "item"):
+            u = (np.unique(np.concatenate(ep[t])) if ep[t]
+                 else np.zeros(0, np.int64))
+            uniq[t] = u
+            # one neighbor draw per unique endpoint node (the legacy
+            # format draws per occurrence; dedup makes the draw — like
+            # the encode — a per-node event)
+            cols = rng.integers(0, k_imp, (len(u), k))
+            unbr = self.tables.user_nbrs[u[:, None], cols] if len(u) else \
+                np.zeros((0, k), np.int64)
+            cols = rng.integers(0, k_imp, (len(u), k))
+            inbr = self.tables.item_nbrs[u[:, None], cols] if len(u) else \
+                np.zeros((0, k), np.int64)
+            nbr_gids[t] = dict(
+                unbr=np.clip(unbr, 0, nu - 1), umask=unbr >= 0,
+                inbr=np.clip(inbr, nu, nu + ni - 1), imask=inbr >= nu)
+
+        # neighbor-only extras per pack (valid neighbors not already
+        # endpoint uniques of that type)
+        extras, e_pad = {}, {}
+        for t, key_m in (("user", "umask"), ("item", "imask")):
+            key_g = "unbr" if t == "user" else "inbr"
+            valid = [nbr_gids[s][key_g][nbr_gids[s][key_m]]
+                     for s in ("user", "item")]
+            allv = (np.unique(np.concatenate(valid)) if valid
+                    else np.zeros(0, np.int64))
+            extras[t] = np.setdiff1d(allv, uniq[t], assume_unique=True)
+            e_pad[t] = _round_up(len(uniq[t]), mult)
+
+        def pack_index(t: str, gids: np.ndarray, mask: np.ndarray
+                       ) -> np.ndarray:
+            """Pack-relative index of global ids (masked entries -> 0)."""
+            u, ex = uniq[t], extras[t]
+            if len(u) == 0:   # a type with no endpoints: extras only
+                idx = e_pad[t] + np.searchsorted(ex, gids)
+            else:
+                pos = np.minimum(np.searchsorted(u, gids), len(u) - 1)
+                idx = np.where(u[pos] == gids, pos,
+                               e_pad[t] + np.searchsorted(ex, gids))
+            return np.where(mask, idx, 0).astype(np.int32)
+
+        for t in ("user", "item"):
+            E, Ep = len(uniq[t]), e_pad[t]
+            u_pad = _round_up(Ep + len(extras[t]), mult)
+            local = np.zeros(u_pad, np.int64)
+            off, hi = (0, nu - 1) if t == "user" else (nu, ni - 1)
+            local[:E] = np.clip(uniq[t] - off, 0, hi)
+            local[Ep:Ep + len(extras[t])] = np.clip(extras[t] - off, 0, hi)
+            n = nbr_gids[t]
+            unbr_idx = np.zeros((Ep, k), np.int32)
+            inbr_idx = np.zeros((Ep, k), np.int32)
+            umask = np.zeros((Ep, k), np.float32)
+            imask = np.zeros((Ep, k), np.float32)
+            unbr_idx[:E] = pack_index("user", n["unbr"], n["umask"])
+            inbr_idx[:E] = pack_index("item", n["inbr"], n["imask"])
+            umask[:E] = n["umask"].astype(np.float32)
+            imask[:E] = n["imask"].astype(np.float32)
+            side = dict(unbr_idx=unbr_idx, unbr_mask=umask,
+                        inbr_idx=inbr_idx, inbr_mask=imask)
+            if id_only:
+                side["ids"] = local.astype(np.int32)
+            else:
+                table = self.user_feat if t == "user" else self.item_feat
+                side["feat"] = table[local].astype(np.float32)
+            sides[t] = side
+
+        out_edges = {}
+        for et, (sg, dg, w) in edges.items():
+            st, dt = _ET_SIDES[et]
+            out_edges[et] = dict(
+                src_map=np.searchsorted(uniq[st], sg).astype(np.int32),
+                dst_map=np.searchsorted(uniq[dt], dg).astype(np.int32),
+                weight=w,
                 src_ids=sg.astype(np.int32), dst_ids=dg.astype(np.int32))
-        return batch
+        return {"nodes": sides, "edges": out_edges}
+
+    def expand_batch(self, batch: Dict[str, Dict]) -> Dict[str, Dict]:
+        """Re-materialize a dedup batch in the legacy per-endpoint layout
+        (same neighbor draws — the dedup forward on ``batch`` and the
+        legacy forward on the expansion must produce the same losses)."""
+        if "nodes" not in batch:
+            return batch
+        nu = self.tables.n_users
+        feats = {}
+        for t, table in (("user", self.user_feat), ("item", self.item_feat)):
+            side = batch["nodes"][t]
+            feats[t] = (np.asarray(side["feat"]) if "feat" in side
+                        else table[np.asarray(side["ids"])])
+        out: Dict[str, Dict] = {}
+        for et, e in batch["edges"].items():
+            st, dt = _ET_SIDES[et]
+            sub = {}
+            for side_name, t, m in (("src", st, e["src_map"]),
+                                    ("dst", dt, e["dst_map"])):
+                nd = batch["nodes"][t]
+                m = np.asarray(m)
+                umask = np.asarray(nd["unbr_mask"])[m]
+                imask = np.asarray(nd["inbr_mask"])[m]
+                sub[side_name] = dict(
+                    feat=feats[t][m],
+                    unbr_feat=feats["user"][np.asarray(nd["unbr_idx"])[m]]
+                    * umask[..., None],
+                    unbr_mask=umask,
+                    inbr_feat=feats["item"][np.asarray(nd["inbr_idx"])[m]]
+                    * imask[..., None],
+                    inbr_mask=imask)
+            out[et] = dict(weight=np.asarray(e["weight"]),
+                           src_ids=np.asarray(e["src_ids"]),
+                           dst_ids=np.asarray(e["dst_ids"]), **sub)
+        return out
 
     def iter_batches(self, seed: int, per_type: Dict[str, int],
                      start_step: int = 0) -> Iterator[Dict]:

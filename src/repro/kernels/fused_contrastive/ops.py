@@ -1,4 +1,10 @@
-"""Public fused-contrastive op with kernel/reference dispatch."""
+"""Public fused-contrastive op with kernel/reference dispatch.
+
+Both paths are differentiable: the reference is plain jnp (autodiff),
+the kernel path routes through ``fused_contrastive_diff``'s custom VJP
+(fused backward tile), so callers can flip ``use_kernel`` under
+``jax.value_and_grad`` without changing anything else.
+"""
 from __future__ import annotations
 
 from typing import Tuple
@@ -6,12 +12,13 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from repro.kernels.fused_contrastive.fused_contrastive import (
-    fused_contrastive)
+    fused_contrastive, fused_contrastive_diff)
 from repro.kernels.fused_contrastive.ref import contrastive_ref
 
 
 def contrastive(src, dst, negs, *, margin: float = 0.1, tau: float = 0.06,
                 use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if use_kernel:
-        return fused_contrastive(src, dst, negs, margin=margin, tau=tau)
+        return fused_contrastive_diff(float(margin), float(tau), src, dst,
+                                      negs)
     return contrastive_ref(src, dst, negs, margin=margin, tau=tau)

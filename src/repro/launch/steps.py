@@ -556,25 +556,51 @@ def _rankgraph2_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Cell:
 
     if shape.step == "train":
         B = shape.dims["batch"] // 3
+        K = cfg.k_train
+
+        # dedup-format batch (the production train hot path): packed
+        # unique-node sub-batches per node type + per-(edge_type, side)
+        # gather maps.  Sizes assume the duplicate rates measured by
+        # benchmarks/train_throughput.py: ~0.6 unique endpoints per
+        # endpoint slot and ~2 neighbor-only pack rows per endpoint row.
+        # (feat-mode rather than id-only: lowering closes over no
+        # concrete FeatureStore; the compute structure is identical up
+        # to two device-side gathers.)
+        from repro.data.edge_dataset import _round_up
+        slots = 3 * B                 # endpoint slots per type
+        # 128 (not the dataset's pad_multiple) for pjit divisibility on
+        # the production meshes; the cell is a shape model either way
+        E = _round_up(slots * 6 // 10, 128)    # endpoint-unique rows
+        U = 3 * E                              # + neighbor-only extras
+
+        def pack_sds(d_feat):
+            return {"feat": _sds((U, d_feat), f32),
+                    "unbr_idx": _sds((E, K), i32),
+                    "unbr_mask": _sds((E, K), f32),
+                    "inbr_idx": _sds((E, K), i32),
+                    "inbr_mask": _sds((E, K), f32)}
+
+        def edge_sds():
+            return {"src_map": _sds((B,), i32), "dst_map": _sds((B,), i32),
+                    "weight": _sds((B,), f32),
+                    "src_ids": _sds((B,), i32), "dst_ids": _sds((B,), i32)}
+
         batch = {
-            "uu": {"src": side_sds(B, cfg.d_user_feat),
-                   "dst": side_sds(B, cfg.d_user_feat),
-                   "weight": _sds((B,), f32)},
-            "ui": {"src": side_sds(B, cfg.d_user_feat),
-                   "dst": side_sds(B, cfg.d_item_feat),
-                   "weight": _sds((B,), f32)},
-            "ii": {"src": side_sds(B, cfg.d_item_feat),
-                   "dst": side_sds(B, cfg.d_item_feat),
-                   "weight": _sds((B,), f32)},
+            "nodes": {"user": pack_sds(cfg.d_user_feat),
+                      "item": pack_sds(cfg.d_item_feat)},
+            "edges": {et: edge_sds() for et in ("uu", "ui", "ii")},
         }
         bsh = jax.tree.map(lambda v: _safe(mesh, bspec, v), batch)
         full_state = jax.eval_shape(
             lambda: T.init_state(jax.random.key(0), cfg)[0])
         sshard = dataclasses_set(full_state, pshard, rep, mesh, specs)
 
-        step = T.make_train_step(cfg, optimizer, ctx)
+        # jit=False: the dry-run lowers/compiles the raw step itself
+        # (with in_shardings); production call sites take the default
+        # donated jit from make_train_step
+        step = T.make_train_step(cfg, optimizer, ctx, jit=False)
         key = jax.eval_shape(lambda: jax.random.key(0))
-        flops = 3.0 * _rg2_flops(cfg, B * 3)
+        flops = 3.0 * _rg2_dedup_train_flops(cfg, 3 * B, E, U)
         return Cell(arch.arch_id, shape.name, step,
                     (full_state, batch, key),
                     (sshard, bsh, rep), flops)
@@ -625,6 +651,21 @@ def dataclasses_set(full_state, pshard, rep, mesh, specs):
     rq = jax.tree.map(lambda _: rep, full_state.rq_state)
     pool = jax.tree.map(lambda _: rep, full_state.pool)
     return T.TrainState(pshard, opt, rq, pool, rep)
+
+
+def _rg2_dedup_train_flops(cfg, n_edges: int, E: int, U: int) -> float:
+    """Useful FLOPs of the dedup train forward: each pack row runs the
+    type encoder once, each endpoint-unique row aggregates once, and the
+    contrastive + RQ terms stay per-edge (the legacy per-endpoint model
+    in ``_rg2_flops`` would overstate encoder work by the dedup factor)."""
+    de, h, H = cfg.d_embed, cfg.d_hidden, cfg.n_heads
+    enc_u = 2 * cfg.d_user_feat * h + 2 * h * H * de
+    enc_i = 2 * cfg.d_item_feat * h + 2 * h * H * de
+    agg = H * 2 * 3 * de * de
+    contrastive = 2 * cfg.n_negatives * de + 2 * de
+    rq = 2 * de * sum(cfg.rq.codebook_sizes)
+    return float(U * (enc_u + enc_i) + 2 * E * agg
+                 + n_edges * (4 * contrastive + 2 * rq))
 
 
 def _rg2_flops(cfg, B: int) -> float:

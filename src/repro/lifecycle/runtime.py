@@ -102,7 +102,8 @@ class LifecycleRuntime:
         self.item_feat = np.asarray(item_feat, np.float32)
         self.state, self.specs, self.optimizer = T.init_state(
             jax.random.key(seed), cfg)
-        self._step_fn = jax.jit(T.make_train_step(cfg, self.optimizer))
+        self._step_fn = None         # built by _rebuild_dataset below
+        self._features_stale = True
         self.store = (SnapshotStore(snapshot_dir,
                                     keep=lcfg.snapshot_keep)
                       if snapshot_dir else None)
@@ -118,7 +119,19 @@ class LifecycleRuntime:
     def _rebuild_dataset(self) -> None:
         self.dataset = EdgeDataset(self.g, self.tables, self.user_feat,
                                    self.item_feat,
-                                   k_train=self.cfg.k_train)
+                                   k_train=self.cfg.k_train,
+                                   batch_format="dedup_ids")
+        # id-only batches gather features inside the jitted step from a
+        # device-resident store; the donated step only needs rebuilding
+        # when the feature tables themselves change (id-space growth or
+        # in-place edits) — graph/table refreshes alone keep the
+        # compiled step warm
+        if self._step_fn is None or self._features_stale:
+            self._step_fn = T.make_train_step(
+                self.cfg, self.optimizer,
+                features=T.make_feature_store(self.user_feat,
+                                              self.item_feat))
+            self._features_stale = False
 
     def refresh(self, delta_log: EngagementLog, *,
                 user_feat: Optional[np.ndarray] = None,
@@ -133,6 +146,10 @@ class LifecycleRuntime:
             self.user_feat = np.asarray(user_feat, np.float32)
         if item_feat is not None:
             self.item_feat = np.asarray(item_feat, np.float32)
+        if user_feat is not None or item_feat is not None:
+            # explicit tables may be the same ndarray object mutated in
+            # place — always refresh the device-resident FeatureStore
+            self._features_stale = True
         # validate BEFORE mutating graph/tables: a failed refresh must
         # leave the runtime consistent (retrying after the error would
         # otherwise merge the same delta's aggregates twice)

@@ -60,7 +60,7 @@ def test_atomicity_no_tmp_left(tmp_path):
 def test_train_state_roundtrip(tmp_path, tiny_cfg, tiny_dataset):
     from repro.core import trainer as T
     state, _, opt = T.init_state(jax.random.key(0), tiny_cfg, pool_size=64)
-    step = jax.jit(T.make_train_step(tiny_cfg, opt))
+    step = T.make_train_step(tiny_cfg, opt)     # jitted, donated
     for t in range(3):
         batch = jax.tree.map(jnp.asarray, tiny_dataset.sample_batch(
             t, 0, {"uu": 8, "ui": 8, "ii": 8}))

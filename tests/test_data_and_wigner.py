@@ -41,22 +41,112 @@ def test_next_day_ground_truth_csr():
 # edge dataset
 # ---------------------------------------------------------------------------
 
-def test_batch_shapes_and_determinism(tiny_dataset, tiny_cfg):
-    b1 = tiny_dataset.sample_batch(5, 0, {"uu": 8, "ui": 8, "ii": 8})
-    b2 = tiny_dataset.sample_batch(5, 0, {"uu": 8, "ui": 8, "ii": 8})
+def test_legacy_batch_shapes_and_determinism(tiny_dataset, tiny_cfg):
+    per = {"uu": 8, "ui": 8, "ii": 8}
+    b1 = tiny_dataset.sample_batch(5, 0, per, format="legacy")
+    b2 = tiny_dataset.sample_batch(5, 0, per, format="legacy")
     for et in ("uu", "ui", "ii"):
         np.testing.assert_array_equal(b1[et]["src_ids"], b2[et]["src_ids"])
         assert b1[et]["src"]["feat"].shape == (8, 64)
         assert b1[et]["src"]["unbr_feat"].shape == (8, tiny_cfg.k_train, 64)
-    b3 = tiny_dataset.sample_batch(6, 0, {"uu": 8, "ui": 8, "ii": 8})
+    b3 = tiny_dataset.sample_batch(6, 0, per, format="legacy")
     assert not np.array_equal(b1["ui"]["src_ids"], b3["ui"]["src_ids"])
+
+
+def test_dedup_batch_structure_and_determinism(tiny_dataset, tiny_cfg):
+    per = {"uu": 8, "ui": 8, "ii": 8}
+    b1 = tiny_dataset.sample_batch(5, 0, per)            # default: dedup
+    b2 = tiny_dataset.sample_batch(5, 0, per)
+    assert set(b1) == {"nodes", "edges"}
+    k = tiny_cfg.k_train
+    for t in ("user", "item"):
+        side = b1["nodes"][t]
+        U, E = side["feat"].shape[0], side["unbr_idx"].shape[0]
+        assert U % tiny_dataset.pad_multiple == 0
+        assert E % tiny_dataset.pad_multiple == 0 and E <= U
+        assert side["unbr_idx"].shape == (E, k)
+        assert side["unbr_idx"].max() < b1["nodes"]["user"]["feat"].shape[0]
+        assert side["inbr_idx"].max() < b1["nodes"]["item"]["feat"].shape[0]
+        np.testing.assert_array_equal(side["feat"],
+                                      b2["nodes"][t]["feat"])
+    for et in ("uu", "ui", "ii"):
+        e1 = b1["edges"][et]
+        np.testing.assert_array_equal(e1["src_ids"],
+                                      b2["edges"][et]["src_ids"])
+        # gather maps point at the pack rows holding the edge endpoints
+        st, dt = ("user", "user") if et == "uu" else \
+            (("user", "item") if et == "ui" else ("item", "item"))
+        nu = tiny_dataset.tables.n_users
+        off_s = 0 if st == "user" else nu
+        off_d = 0 if dt == "user" else nu
+        feat_s = (tiny_dataset.user_feat if st == "user"
+                  else tiny_dataset.item_feat)
+        np.testing.assert_array_equal(
+            b1["nodes"][st]["feat"][e1["src_map"]],
+            feat_s[e1["src_ids"] - off_s])
+        feat_d = (tiny_dataset.user_feat if dt == "user"
+                  else tiny_dataset.item_feat)
+        np.testing.assert_array_equal(
+            b1["nodes"][dt]["feat"][e1["dst_map"]],
+            feat_d[e1["dst_ids"] - off_d])
+
+
+def test_id_only_batch_matches_feat_batch(tiny_dataset):
+    per = {"uu": 8, "ui": 8, "ii": 8}
+    bf = tiny_dataset.sample_batch(2, 0, per, format="dedup")
+    bi = tiny_dataset.sample_batch(2, 0, per, format="dedup_ids")
+    for t, table in (("user", tiny_dataset.user_feat),
+                     ("item", tiny_dataset.item_feat)):
+        assert "feat" not in bi["nodes"][t]
+        np.testing.assert_array_equal(table[bi["nodes"][t]["ids"]],
+                                      bf["nodes"][t]["feat"])
+        for key in ("unbr_idx", "unbr_mask", "inbr_idx", "inbr_mask"):
+            np.testing.assert_array_equal(bi["nodes"][t][key],
+                                          bf["nodes"][t][key])
+
+
+def test_expand_batch_round_trips_features(tiny_dataset):
+    per = {"uu": 8, "ui": 8, "ii": 8}
+    b = tiny_dataset.sample_batch(4, 0, per)
+    legacy = tiny_dataset.expand_batch(b)
+    nu = tiny_dataset.tables.n_users
+    for et in ("uu", "ui", "ii"):
+        sub = legacy[et]
+        assert sub["src"]["feat"].shape[0] == 8
+        assert sub["src"]["unbr_mask"].shape == sub["src"]["unbr_feat"].shape[:2]
+        # endpoint features come back exactly
+        sid = sub["src_ids"]
+        table = (tiny_dataset.user_feat if et != "ii"
+                 else tiny_dataset.item_feat)
+        off = 0 if et != "ii" else nu
+        np.testing.assert_array_equal(sub["src"]["feat"], table[sid - off])
+        # masked neighbor features are zeroed like the legacy gather
+        m = sub["src"]["unbr_mask"][..., None]
+        assert (np.abs(sub["src"]["unbr_feat"] * (1 - m)) == 0).all()
+
+
+def test_dedup_batch_single_edge_type(tiny_dataset):
+    """A type with zero endpoints still packs its neighbor-only rows
+    (uu-only batches reference item neighbors and vice versa)."""
+    for per in ({"uu": 8}, {"ii": 8}, {"ui": 8}):
+        b = tiny_dataset.sample_batch(1, 0, per)
+        (et,) = per
+        assert set(b["edges"]) == {et}
+        for t in ("user", "item"):
+            side = b["nodes"][t]
+            assert side["unbr_idx"].max() < \
+                b["nodes"]["user"]["feat"].shape[0]
+            assert side["inbr_idx"].max() < \
+                b["nodes"]["item"]["feat"].shape[0]
+        legacy = tiny_dataset.expand_batch(b)
+        assert legacy[et]["src"]["feat"].shape[0] == 8
 
 
 def test_batch_edges_are_real_edges(tiny_dataset, tiny_graph):
     b = tiny_dataset.sample_batch(0, 0, {"ui": 16})
     nu = tiny_graph.n_users
     pairs = set(zip(tiny_graph.ui.src.tolist(), tiny_graph.ui.dst.tolist()))
-    for s, d in zip(b["ui"]["src_ids"], b["ui"]["dst_ids"]):
+    for s, d in zip(b["edges"]["ui"]["src_ids"], b["edges"]["ui"]["dst_ids"]):
         assert (int(s), int(d) - nu) in pairs
 
 
@@ -67,8 +157,8 @@ def test_prefetcher_yields_in_order(tiny_dataset):
     got = [next(pf) for _ in range(3)]
     want = [tiny_dataset.sample_batch(t, 0, {"ui": 4}) for t in range(3)]
     for g, w in zip(got, want):
-        np.testing.assert_array_equal(g["ui"]["src_ids"],
-                                      w["ui"]["src_ids"])
+        np.testing.assert_array_equal(g["edges"]["ui"]["src_ids"],
+                                      w["edges"]["ui"]["src_ids"])
     pf.close()
 
 

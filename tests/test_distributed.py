@@ -101,7 +101,7 @@ def test_sharded_train_step_matches_single_device():
         tables = build_neighbor_tables(g, k_imp=6, n_walks=8, walk_len=3)
         ds = EdgeDataset(g, tables, world.user_feat, world.item_feat, 4)
         state, specs, opt = T.init_state(jax.random.key(0), cfg, pool_size=64)
-        step = jax.jit(T.make_train_step(cfg, opt))
+        step = T.make_train_step(cfg, opt)
         batch = jax.tree.map(jnp.asarray,
                              ds.sample_batch(0, 0, {"uu":16,"ui":16,"ii":16}))
         state, m = step(state, batch, jax.random.key(7))
