@@ -26,6 +26,7 @@ def main(argv=None) -> int:
     from benchmarks import graph_build_scaling as GBS
     from benchmarks import lifecycle_swap as LS
     from benchmarks import roofline as RL
+    from benchmarks import serving_concurrency as SC
     from benchmarks import serving_kernels as SK
     from benchmarks import train_throughput as TT
 
@@ -41,6 +42,7 @@ def main(argv=None) -> int:
         ("serving_kernels", SK.run),
         ("train_throughput", TT.run),
         ("lifecycle_swap", LS.run),
+        ("serving_concurrency", SC.run),
         ("roofline", RL.run),
     ]
     if args.only:
@@ -57,7 +59,10 @@ def main(argv=None) -> int:
             dt = time.perf_counter() - t0
             derived = ""
             if isinstance(out, dict):
-                if "speedup_dedup_ids" in out:
+                if "thread_speedup" in out:
+                    derived = (f"thread_speedup="
+                               f"{out['thread_speedup']:.2f}x")
+                elif "speedup_dedup_ids" in out:
                     derived = (f"train_speedup="
                                f"{out['speedup_dedup_ids']:.2f}x")
                 elif "rankgraph2" in out:

@@ -1,0 +1,395 @@
+"""Multithreaded serving stress gate: R readers + W writers across
+hot-swaps, with a thread-scaling throughput floor.
+
+What this establishes (and CI gates):
+
+  * **zero mixed-version responses** — while a swap storm flips
+    versions under R concurrent reader threads and W concurrent ingest
+    writers, every ``serve_batch`` response must be internally
+    consistent with exactly the snapshot version it reports (every
+    union candidate comes from that version's I2I rows of that
+    response's own seeds);
+  * **zero lost events** — after the storm quiesces, the live store is
+    *bitwise* identical to a single-threaded oracle fed the same event
+    stream (the post-flip ring drain means nothing ingested during a
+    swap's catch-up/flip window can vanish);
+  * the same properties hold with the swaps triggered through the
+    lifecycle orchestrator (``LifecycleRuntime.run_cycle`` publishing
+    real snapshots while traffic runs);
+  * **thread scaling** — 4 reader threads sustain at least
+    ``SERVE_MIN_THREAD_SPEEDUP`` x the single-thread ``retrieve_batch``
+    throughput on one shared store (per-thread scratch pools + the
+    lock-free seqlock read path are what make this possible; numpy
+    releases the GIL inside the big gather/sort kernels).
+
+Results land in ``benchmarks/results/serving_concurrency.json``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import write_result
+from repro.core.serving import ClusterQueueStore
+from repro.lifecycle.snapshot import IndexSnapshot, derive_members
+from repro.lifecycle.swap import SwapServer
+
+N_READERS = 4
+N_WRITERS = 2
+N_SWAPS = 3
+
+
+# ---------------------------------------------------------------------------
+# phase 1: synthetic-snapshot storm with a bitwise oracle
+# ---------------------------------------------------------------------------
+
+def _mk_snapshot(version: int, flip: int, n_users: int, n_items: int,
+                 n_clusters: int, i2i_k: int) -> IndexSnapshot:
+    """Version-distinct cluster layout + I2I table.  The layout keeps
+    ``cluster % N_WRITERS == user % N_WRITERS`` in every version, so
+    each writer thread owns a disjoint cluster set and the per-cluster
+    event order is its timestamp order — which is what lets the oracle
+    comparison below be bitwise rather than set-based."""
+    flat = ((np.arange(n_users) + flip * 3 * N_WRITERS)
+            % n_clusters).astype(np.int64)
+    ptr, ids = derive_members(flat, n_clusters)
+    codes = np.stack([flat // 2, flat % 2], axis=1).astype(np.int32)
+    i2i = ((np.arange(n_items)[:, None]
+            + 1 + flip * 7 + 13 * np.arange(i2i_k)[None, :])
+           % n_items).astype(np.int64)
+    return IndexSnapshot(
+        user_codes=codes, item_codes=np.zeros((n_items, 2), np.int32),
+        user_clusters=flat, member_ptr=ptr, member_ids=ids,
+        coarse_codebook=np.zeros((4, 4), np.float32), i2i=i2i,
+        version=version, n_users=n_users, n_items=n_items,
+        codebook_sizes=(n_clusters // 2, 2))
+
+
+def _count_mixed(responses: List, i2i_by_version: Dict[int, np.ndarray]
+                 ) -> int:
+    """A response mixes versions iff a union candidate is absent from
+    the reported version's I2I rows of the response's own seeds."""
+    mixed = 0
+    for ver, seeds, union in responses:
+        i2i = i2i_by_version[ver]
+        allowed = i2i[np.where(seeds >= 0, seeds, 0)]      # (B, R, K)
+        allowed = np.where(seeds[:, :, None] >= 0, allowed, -2)
+        ok = ((union[:, :, None, None] == allowed[:, None, :, :])
+              .any(axis=(2, 3)) | (union == -1))
+        mixed += int((~ok).any(axis=1).sum())
+    return mixed
+
+
+def _storm(full: bool) -> Dict:
+    n_users, n_items, n_clusters = 4000, 3000, 32
+    n_iter = 240 if full else 120
+    snaps = [_mk_snapshot(v, flip=v % 2, n_users=n_users,
+                          n_items=n_items, n_clusters=n_clusters,
+                          i2i_k=6) for v in range(1, N_SWAPS + 2)]
+    i2i_by_version = {s.version: s.i2i for s in snaps}
+    server = SwapServer(snaps[0], queue_len=64, recency_s=1e15,
+                        ring_capacity=1 << 15)
+    now = 1e9
+    stop = threading.Event()
+    errs: List = []
+    per_writer: List[List] = [[] for _ in range(N_WRITERS)]
+    responses: List = []
+    resp_lock = threading.Lock()
+
+    def writer(w: int):
+        try:
+            rng = np.random.default_rng(10 + w)
+            for step in range(n_iter):
+                n = int(rng.integers(1, 16))
+                u = (rng.integers(0, n_users // N_WRITERS, n) * N_WRITERS
+                     + w)
+                it = rng.integers(0, n_items, n)
+                ts = ((np.arange(n) + step * 32) * N_WRITERS
+                      + w).astype(float)
+                per_writer[w].append((u, it, ts))
+                server.ingest(u, it, ts)
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    def reader(r: int):
+        try:
+            rng = np.random.default_rng(20 + r)
+            local = []
+            while not stop.is_set():
+                users = rng.integers(0, n_users, 64)
+                seeds, union, ver = server.serve_batch(
+                    users, now, n_recent=4, k=16)
+                local.append((ver, seeds, union))
+                res, ver2 = server.retrieve_batch(users, now, 8)
+                assert ((res == -1)
+                        | ((res >= 0) & (res < n_items))).all()
+            with resp_lock:
+                responses.extend(local)
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    writers = [threading.Thread(target=writer, args=(w,))
+               for w in range(N_WRITERS)]
+    readers = [threading.Thread(target=reader, args=(r,))
+               for r in range(N_READERS)]
+    t0 = time.perf_counter()
+    for t in writers + readers:
+        t.start()
+    stall_ms = []
+    for snap in snaps[1:]:                     # >= N_SWAPS hot swaps
+        time.sleep(0.05)
+        rep = server.swap_to(snap, now)
+        stall_ms.append(rep["stall_ms"])
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    storm_s = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+
+    # quiesce + bitwise oracle for the final version
+    server._drain_into(server.handle.acquire())
+    final = server.handle.acquire()
+    ev = [np.concatenate(x) for x in zip(
+        *(e for w in per_writer for e in w))]
+    order = np.argsort(ev[2], kind="stable")
+    oracle = ClusterQueueStore(final.snapshot.user_clusters,
+                               queue_len=64, recency_s=1e15,
+                               n_clusters=final.snapshot.n_clusters)
+    oracle.ingest(ev[0][order], ev[1][order], ev[2][order])
+    lost = int(np.abs(final.store.cursor - oracle.cursor).sum())
+    users = np.arange(n_users)
+    got, ver = server.retrieve_batch(users, now, 32)
+    assert ver == final.version
+    bitwise_equal = bool(
+        np.array_equal(got, oracle.retrieve_batch(users, now, 32))
+        and np.array_equal(final.store.items, oracle.items))
+    mixed = _count_mixed(responses, i2i_by_version)
+    return dict(events=int(len(ev[0])), swaps=len(stall_ms),
+                responses=len(responses), mixed_version=mixed,
+                lost_events=lost, bitwise_equal=bitwise_equal,
+                storm_s=storm_s, stall_ms_max=float(np.max(stall_ms)))
+
+
+# ---------------------------------------------------------------------------
+# phase 2: run_cycle-triggered swaps under live traffic
+# ---------------------------------------------------------------------------
+
+def _lifecycle_storm(full: bool) -> Dict:
+    from repro.configs.base import RankGraph2Config, RQConfig
+    from repro.core.graph_builder import build_graph
+    from repro.data.edge_dataset import build_neighbor_tables
+    from repro.data.synthetic import make_world
+    from repro.lifecycle import LifecycleConfig, LifecycleRuntime
+
+    world = make_world(n_users=400, n_items=600, events_per_user=15.0,
+                       seed=3)
+    cfg = RankGraph2Config(
+        d_user_feat=64, d_item_feat=64, d_embed=24, n_heads=2,
+        d_hidden=48, k_imp=10, k_train=4, n_negatives=16, n_pool_neg=4,
+        rq=RQConfig(codebook_sizes=(8, 4), hist_len=20), dtype="float32")
+    # queue_len exceeds the bounded event budget below: with shared
+    # clusters, eviction order would be schedule-dependent, so the
+    # oracle check requires that no cluster ever evicts
+    lcfg = LifecycleConfig(steps_per_cycle=8 if full else 4,
+                           batch_per_type=16, recall_queries=40,
+                           recall_k=20, queue_len=4096, recency_s=1e15)
+    g = build_graph(world.day0, k_cap=16, hub_cap=12, keep_state=True)
+    tables = build_neighbor_tables(g, k_imp=10, n_walks=12, walk_len=3,
+                                   keep_state=True)
+    rt = LifecycleRuntime(cfg, lcfg, g, tables, world.user_feat,
+                          world.item_feat, world=world, seed=0)
+    rt.run_cycle(now=1e9)                      # brings serving up (v1)
+    now = 1e9
+    stop = threading.Event()
+    errs: List = []
+    pushed: List = []
+    push_lock = threading.Lock()
+    seen_versions = set()
+
+    def writer(w: int):
+        try:
+            rng = np.random.default_rng(40 + w)
+            for step in range(150):            # bounded: <= 2250 events
+                if stop.is_set():              # per writer, < queue_len
+                    break
+                n = int(rng.integers(1, 16))
+                u = rng.integers(0, world.n_users, n)
+                it = rng.integers(0, world.n_items, n)
+                ts = ((np.arange(n) + step * 32) * N_WRITERS
+                      + w).astype(float)
+                with push_lock:
+                    pushed.append((u, it, ts))
+                rt.server.ingest(u, it, ts)
+                time.sleep(0.002)
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    def reader(r: int):
+        try:
+            rng = np.random.default_rng(50 + r)
+            while not stop.is_set():
+                users = rng.integers(0, world.n_users, 32)
+                res, ver = rt.server.retrieve_batch(users, now, 8)
+                seen_versions.add(ver)
+                assert ((res == -1)
+                        | ((res >= 0) & (res < world.n_items))).all()
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    ths = ([threading.Thread(target=writer, args=(w,))
+            for w in range(N_WRITERS)]
+           + [threading.Thread(target=reader, args=(r,))
+              for r in range(N_READERS)])
+    for t in ths:
+        t.start()
+    try:
+        for _ in range(N_SWAPS):               # publish + swap live
+            rt.run_cycle(now=now)
+    finally:
+        stop.set()
+        for t in ths:
+            t.join()
+    if errs:
+        raise errs[0]
+
+    # set-based lost-event check (writers share clusters here, so slot
+    # order is schedule-dependent — membership per cluster is not)
+    rt.server._drain_into(rt.server.handle.acquire())
+    final = rt.server.handle.acquire()
+    ev = [np.concatenate(x) for x in zip(*pushed)]
+    oracle = ClusterQueueStore(final.snapshot.user_clusters,
+                               queue_len=4096, recency_s=1e15,
+                               n_clusters=final.snapshot.n_clusters)
+    oracle.ingest(*ev)
+    lost = int(np.abs(final.store.cursor - oracle.cursor).sum())
+    same_members = bool(np.array_equal(
+        np.sort(final.store.items, axis=1),
+        np.sort(oracle.items, axis=1)))
+    return dict(events=int(len(ev[0])), cycles=N_SWAPS + 1,
+                versions_seen=sorted(int(v) for v in seen_versions),
+                final_version=int(final.version), lost_events=lost,
+                same_members=same_members)
+
+
+# ---------------------------------------------------------------------------
+# phase 3: reader-thread throughput scaling
+# ---------------------------------------------------------------------------
+
+def _thread_scaling_of(fn, n_iter: int, nthreads: int) -> float:
+    """Aggregate-throughput speedup of ``nthreads`` threads each running
+    ``fn`` ``n_iter`` times vs one thread doing the same."""
+    fn()                                       # warm (pools, caches)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()
+    t1 = time.perf_counter() - t0
+
+    def loop():
+        for _ in range(n_iter):
+            fn()
+
+    ths = [threading.Thread(target=loop) for _ in range(nthreads)]
+    t0 = time.perf_counter()
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    tn = time.perf_counter() - t0
+    return float(nthreads * t1 / tn), float(n_iter / t1)
+
+
+def _scaling(full: bool) -> Dict:
+    import sys
+    rng = np.random.default_rng(0)
+    n_users, n_items, C = 50_000, 20_000, 512
+    store = ClusterQueueStore(rng.integers(0, C, n_users),
+                              queue_len=256, recency_s=1e15)
+    for _ in range(4):
+        store.ingest(rng.integers(0, n_users, 100_000),
+                     rng.integers(0, n_items, 100_000),
+                     rng.integers(0, 10_000, 100_000).astype(float))
+    B, k, now = 4096, 32, 1e6
+    users = rng.integers(0, n_users, B)
+    n_iter = 16 if full else 8
+
+    # machine calibration: what 4-thread scaling does this box give a
+    # *pure* GIL-releasing numpy workload of comparable shape?  On a
+    # dedicated 4-core runner this lands near 3x; on throttled/shared
+    # 2-core containers it can be barely above 1x, and retrieval cannot
+    # be expected to beat the hardware.
+    ref = rng.integers(0, 1 << 30, (B, store.queue_len)).astype(np.int64)
+
+    def calib_fn():
+        c = ref.copy()
+        c.sort(axis=1)
+        c.partition(31, axis=1)
+
+    old_si = sys.getswitchinterval()
+    sys.setswitchinterval(5e-4)   # soften the GIL convoy between ops
+    try:
+        calib, _ = _thread_scaling_of(calib_fn, n_iter, N_READERS)
+        speedup, batches_s = _thread_scaling_of(
+            lambda: store.retrieve_batch(users, now, k),
+            n_iter, N_READERS)
+    finally:
+        sys.setswitchinterval(old_si)
+    return dict(threads=N_READERS, batch=B,
+                thr_1thread_req_s=float(batches_s * B),
+                machine_calib_speedup=calib,
+                thread_speedup=speedup,
+                parallel_efficiency=float(speedup / calib))
+
+
+def run(full: bool = False) -> Dict:
+    out: Dict = {}
+    out["storm"] = _storm(full)
+    out["lifecycle"] = _lifecycle_storm(full)
+    out["scaling"] = _scaling(full)
+    out["thread_speedup"] = out["scaling"]["thread_speedup"]
+
+    s, lc, sc = out["storm"], out["lifecycle"], out["scaling"]
+    print("\nServing concurrency stress:")
+    print(f"  storm: {s['responses']} responses over {s['swaps']} swaps "
+          f"+ {s['events']} events -> {s['mixed_version']} mixed-version, "
+          f"{s['lost_events']} lost, bitwise_equal={s['bitwise_equal']}")
+    print(f"  lifecycle: versions {lc['versions_seen']} live during "
+          f"{lc['cycles']} run_cycle(s) -> {lc['lost_events']} lost, "
+          f"same_members={lc['same_members']}")
+    print(f"  scaling: {sc['thr_1thread_req_s']:.0f} req/s x1; "
+          f"{sc['threads']}-thread speedup {sc['thread_speedup']:.2f}x "
+          f"(machine ceiling {sc['machine_calib_speedup']:.2f}x, "
+          f"efficiency {sc['parallel_efficiency']:.2f})")
+
+    # acceptance gates
+    assert s["mixed_version"] == 0, "mixed-version responses observed"
+    assert s["lost_events"] == 0 and s["bitwise_equal"], \
+        "storm final state diverged from the single-threaded oracle"
+    assert s["swaps"] >= N_SWAPS
+    assert lc["lost_events"] == 0 and lc["same_members"], \
+        "run_cycle storm lost events vs the single-threaded oracle"
+    # the scaling floor is the configured speedup wherever the machine
+    # demonstrably has that much parallel headroom (the calibration
+    # kernel is pure GIL-releasing numpy); on throttled shared boxes
+    # retrieval is instead held to a fraction of the measured ceiling
+    gate = float(os.environ.get("SERVE_MIN_THREAD_SPEEDUP", "2.0"))
+    eff_floor = float(os.environ.get("SERVE_MIN_THREAD_EFFICIENCY",
+                                     "0.6"))
+    floor = min(gate, eff_floor * sc["machine_calib_speedup"])
+    assert out["thread_speedup"] >= floor, \
+        (f"{sc['threads']}-thread retrieve speedup "
+         f"{out['thread_speedup']:.2f}x < floor {floor:.2f}x "
+         f"(gate {gate}x, machine ceiling "
+         f"{sc['machine_calib_speedup']:.2f}x)")
+    write_result("serving_concurrency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(full=os.environ.get("BENCH_FULL", "") == "1")

@@ -75,14 +75,13 @@ def user_recall(user_emb: np.ndarray, world: SyntheticWorld, *,
     return out
 
 
-def item_recall(item_emb: np.ndarray, world: SyntheticWorld, *,
-                ks: Sequence[int] = (5, 10, 50, 100),
-                n_edges: int = 500, min_common: int = 2,
-                seed: int = 0) -> Dict[int, float]:
-    """Next-day I-I co-engagement ranking recall (temporal split)."""
-    log = world.day1
+def day1_co_pairs(log: EngagementLog, *, n_edges: int = 500,
+                  seed: int = 0) -> np.ndarray:
+    """Sampled next-day I-I co-engagement pairs ``(n, 2)`` — the §5.2.2
+    evaluation unit, shared by the offline ``item_recall`` protocol and
+    the publication gate's index-side variant (identical sampling, so
+    the two numbers are directly comparable)."""
     rng = np.random.default_rng(seed)
-    # build day-1 co-engagement pairs
     order = np.argsort(log.user_id, kind="stable")
     u, it = log.user_id[order], log.item_id[order]
     starts = np.flatnonzero(np.r_[True, u[1:] != u[:-1]])
@@ -95,10 +94,19 @@ def item_recall(item_emb: np.ndarray, world: SyntheticWorld, *,
             for x in range(len(a) - 1):
                 pairs.append((a[x], a[x + 1]))
     if not pairs:
-        return {k: 0.0 for k in ks}
+        return np.zeros((0, 2), np.int64)
     pairs = np.asarray(pairs)
     idx = rng.choice(len(pairs), min(n_edges, len(pairs)), replace=False)
-    pairs = pairs[idx]
+    return pairs[idx]
+
+
+def item_recall(item_emb: np.ndarray, world: SyntheticWorld, *,
+                ks: Sequence[int] = (5, 10, 50, 100),
+                n_edges: int = 500, seed: int = 0) -> Dict[int, float]:
+    """Next-day I-I co-engagement ranking recall (temporal split)."""
+    pairs = day1_co_pairs(world.day1, n_edges=n_edges, seed=seed)
+    if not len(pairs):
+        return {k: 0.0 for k in ks}
     e = item_emb / np.maximum(
         np.linalg.norm(item_emb, axis=1, keepdims=True), 1e-8)
     sims = e[pairs[:, 0]] @ e.T

@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import RQConfig
 
@@ -153,6 +154,20 @@ def codebook_utilization(state: RQState) -> List[float]:
     for hist in state.hists:
         tot = jnp.sum(hist, axis=0)
         out.append(float(jnp.mean((tot > 0).astype(jnp.float32))))
+    return out
+
+
+def codes_utilization(codes, codebook_sizes) -> List[float]:
+    """``codebook_utilization`` measured on actual assignments: fraction
+    of each layer's codebook hit at least once by ``codes`` ``(N, L)``.
+    This is what the publication gate floors — a collapsed layer shows
+    up as ~``1/size`` no matter how healthy the training-window
+    histogram once looked."""
+    codes = np.asarray(codes)
+    out = []
+    for l, size in enumerate(codebook_sizes):
+        used = np.unique(codes[:, l]) if len(codes) else np.zeros(0)
+        out.append(float(len(used)) / float(size))
     return out
 
 

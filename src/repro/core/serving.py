@@ -17,6 +17,14 @@ wrapper over a batch of one.  The fused cluster-gather + I2I-union pass
 also exists as a Pallas kernel (``repro.kernels.queue_gather``) driven
 by ``serve_batch(..., use_kernel=True)``.
 
+Threading contract: one store serves N reader threads concurrently.
+Request scratch comes from a per-thread ``BufPool`` registry (readers
+never alias each other's buffers), and the retrieve path is lock-free —
+a per-cluster seqlock (generation counter, odd while a write is in
+flight) lets readers run against a concurrently-ingesting store and
+retry the gather on the rare torn read.  Writers (``ingest``) serialize
+on the store's write lock.
+
 ``ServingCostModel`` quantifies the paper's 83% claim: FLOPs + bytes per
 request for online-KNN vs cluster-lookup serving at a given active-pool
 size, traffic, and request batch size.
@@ -25,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -39,9 +48,10 @@ class BufPool:
     allocation-free (fresh multi-MB temporaries each request batch cost
     more in page faults than the actual compute).
 
-    Single-threaded by design — the buffers are reused in place, so a
-    pool (and any store that owns one) must not serve concurrent
-    requests; give each serving thread its own store/pool."""
+    Single-threaded by design — the buffers are reused in place, so one
+    pool must never be shared across concurrent requests.  Concurrent
+    callers go through ``ThreadLocalPools`` (one pool per thread) rather
+    than holding a pool directly."""
 
     def __init__(self):
         self._bufs: Dict[str, np.ndarray] = {}
@@ -54,7 +64,23 @@ class BufPool:
         return buf
 
 
-_POOL = BufPool()        # default pool for the module-level entry points
+class ThreadLocalPools:
+    """Per-thread ``BufPool`` registry: ``get()`` hands each thread its
+    own pool, so N serving threads can share one immutable store without
+    aliasing each other's ``rows``/``ts``/``key`` scratch.  Buffers die
+    with their thread (``threading.local`` storage)."""
+
+    def __init__(self):
+        self._tls = threading.local()
+
+    def get(self) -> BufPool:
+        pool = getattr(self._tls, "pool", None)
+        if pool is None:
+            pool = self._tls.pool = BufPool()
+        return pool
+
+
+_POOLS = ThreadLocalPools()   # default pools for module-level entry points
 
 
 def dedup_topk_rows(cand: np.ndarray, prio: np.ndarray, valid: np.ndarray,
@@ -70,7 +96,7 @@ def dedup_topk_rows(cand: np.ndarray, prio: np.ndarray, valid: np.ndarray,
     pass) plus an O(Q) top-k partition — no stable sorts, no scatters,
     no allocations beyond the (B, k) result.
     """
-    pool = pool if pool is not None else _POOL
+    pool = pool if pool is not None else _POOLS.get()
     B, M = cand.shape
     pshift = max(int(prio_bound - 1).bit_length(), 1)  # P = 2^pshift
     P = 1 << pshift
@@ -126,7 +152,17 @@ class ClusterQueueStore:
     writes into cluster ``c`` (write position = ``cursor % queue_len``,
     fill level = ``min(cursor, queue_len)``) — O(1) eviction, no Python
     containers anywhere on the serving path.
+
+    Concurrency: writers serialize on ``write_lock`` (an RLock — the
+    swap engine's ring drain wraps ``ingest`` in the same lock);
+    readers are lock-free via a per-cluster seqlock, ``gen[c]``, which
+    is odd exactly while a write to cluster ``c`` is in flight.  A
+    reader gathers its rows, then re-checks the generations it started
+    from and retries on mismatch; after ``_SEQLOCK_SPINS`` failed
+    attempts it falls back to one gather under ``write_lock``.
     """
+
+    _SEQLOCK_SPINS = 32
 
     def __init__(self, user_clusters: np.ndarray, *, queue_len: int = 256,
                  recency_s: float = 900.0, n_clusters: Optional[int] = None):
@@ -144,7 +180,10 @@ class ClusterQueueStore:
                              np.float32)
         self.cursor = np.zeros(self.n_clusters, np.int64)
         self.epoch: Optional[float] = None
-        self.pool = BufPool()          # steady-state request scratch
+        self.pools = ThreadLocalPools()  # per-thread request scratch
+        self.gen = np.zeros(self.n_clusters, np.int64)   # seqlock, odd=busy
+        self.write_lock = threading.RLock()
+        self.ring_seen = 0     # EventRing watermark (maintained by swap)
 
     # -- cluster assignment lookup ------------------------------------------
 
@@ -171,7 +210,12 @@ class ClusterQueueStore:
         ring buffers (vectorized; oldest-to-newest so the ring order is
         the time order within the batch).  Events from users unknown to
         this snapshot's assignment table are dropped (they enter queues
-        once the next publication assigns them a cluster)."""
+        once the next publication assigns them a cluster).
+
+        Thread-safe vs concurrent writers (``write_lock``) and vs
+        lock-free readers: all array writes happen inside the touched
+        clusters' seqlock window (``gen`` odd), so a reader overlapping
+        the scatter retries instead of returning a torn row."""
         user_ids = np.asarray(user_ids, np.int64).ravel()
         item_ids = np.asarray(item_ids, np.int64).ravel()
         ts64 = np.asarray(timestamps, np.float64).ravel()
@@ -182,34 +226,38 @@ class ClusterQueueStore:
             ts64 = ts64[known]
         if cl_all.size == 0:
             return
-        if self.epoch is None:
-            self.epoch = float(ts64.min())
-        ts = (ts64 - self.epoch).astype(np.float32)
-        order = np.argsort(ts, kind="stable")
-        cl = cl_all[order]
-        it = item_ids[order]
-        ts = ts[order]
+        with self.write_lock:
+            if self.epoch is None:
+                self.epoch = float(ts64.min())
+            ts = (ts64 - self.epoch).astype(np.float32)
+            order = np.argsort(ts, kind="stable")
+            cl = cl_all[order]
+            it = item_ids[order]
+            ts = ts[order]
 
-        # per-cluster arrival rank (stable sort by cluster keeps time order)
-        by_cl = np.argsort(cl, kind="stable")
-        cl_sorted = cl[by_cl]
-        boundary = np.r_[True, cl_sorted[1:] != cl_sorted[:-1]]
-        group_start = np.maximum.accumulate(
-            np.where(boundary, np.arange(cl.size), 0))
-        rank = np.empty(cl.size, np.int64)
-        rank[by_cl] = np.arange(cl.size) - group_start
+            # per-cluster arrival rank (stable sort by cluster keeps
+            # time order)
+            by_cl = np.argsort(cl, kind="stable")
+            cl_sorted = cl[by_cl]
+            boundary = np.r_[True, cl_sorted[1:] != cl_sorted[:-1]]
+            group_start = np.maximum.accumulate(
+                np.where(boundary, np.arange(cl.size), 0))
+            rank = np.empty(cl.size, np.int64)
+            rank[by_cl] = np.arange(cl.size) - group_start
 
-        slot = (self.cursor[cl] + rank) % self.queue_len
-        # keep only the final write per (cluster, slot): with more events
-        # than queue_len for one cluster in a single batch, older events
-        # fall straight through the ring
-        key = cl * self.queue_len + slot
-        _, last = np.unique(key[::-1], return_index=True)
-        last = cl.size - 1 - last
-        self.items[cl[last], slot[last]] = it[last]
-        self.times[cl[last], slot[last]] = ts[last]
-        uniq, counts = np.unique(cl, return_counts=True)
-        self.cursor[uniq] += counts
+            slot = (self.cursor[cl] + rank) % self.queue_len
+            # keep only the final write per (cluster, slot): with more
+            # events than queue_len for one cluster in a single batch,
+            # older events fall straight through the ring
+            key = cl * self.queue_len + slot
+            _, last = np.unique(key[::-1], return_index=True)
+            last = cl.size - 1 - last
+            uniq, counts = np.unique(cl, return_counts=True)
+            self.gen[uniq] += 1                # enter: odd -> readers spin
+            self.items[cl[last], slot[last]] = it[last]
+            self.times[cl[last], slot[last]] = ts[last]
+            self.cursor[uniq] += counts
+            self.gen[uniq] += 1                # exit: even -> consistent
 
     # -- retrieval ----------------------------------------------------------
 
@@ -217,21 +265,52 @@ class ClusterQueueStore:
         """Recency cutoff in the store's internal (epoch-relative) time."""
         return now - self.recency_s - (self.epoch or 0.0)
 
+    def _seqlock_read(self, cl: np.ndarray, fn):
+        """Run ``fn()`` (which reads this store's arrays for clusters
+        ``cl``) under the seqlock discipline: skip while any touched
+        generation is odd, re-check the generations the read started
+        from, and retry on mismatch (a writer scattered into one of our
+        clusters mid-read).  Lock-free on the happy path; after
+        ``_SEQLOCK_SPINS`` collisions, one run under ``write_lock``
+        guarantees progress."""
+        for _ in range(self._SEQLOCK_SPINS):
+            g0 = self.gen[cl]            # fancy index -> private copy
+            if (g0 & 1).any():           # a write is mid-flight: respin
+                continue
+            out = fn()
+            if np.array_equal(self.gen[cl], g0):
+                return out
+        with self.write_lock:            # bounded fallback: quiesced read
+            return fn()
+
+    def _consistent_gather(self, cl: np.ndarray, pool: BufPool
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Seqlock gather of ``(items, times, cursor)`` rows for
+        clusters ``cl`` into per-thread scratch."""
+        B, Q = cl.shape[0], self.queue_len
+        rows = pool.get("rows", (B, Q), np.int32)
+        ts = pool.get("ts", (B, Q), np.float32)
+
+        def gather():
+            np.take(self.items, cl, axis=0, out=rows)
+            np.take(self.times, cl, axis=0, out=ts)
+            return rows, ts, self.cursor[cl]
+
+        return self._seqlock_read(cl, gather)
+
     def retrieve_batch(self, user_ids: np.ndarray, now: float,
                        k: int) -> np.ndarray:
         """Batched U2U2I: ``(B,)`` user ids -> ``(B, k)`` item ids,
         newest-first, recency-filtered, deduped, ``-1``-padded.  One
-        vectorized pass over the whole request batch."""
+        vectorized pass over the whole request batch.  Safe to call from
+        many threads at once (per-thread scratch, seqlock-guarded
+        gather)."""
         user_ids = np.asarray(user_ids, np.int64).ravel()
         Q = self.queue_len
         B = user_ids.shape[0]
-        pool = self.pool
+        pool = self.pools.get()
         cl, known = self.clusters_of(user_ids)
-        rows = np.take(self.items, cl, axis=0,
-                       out=pool.get("rows", (B, Q), np.int32))
-        ts = np.take(self.times, cl, axis=0,
-                     out=pool.get("ts", (B, Q), np.float32))
-        total = self.cursor[cl]                              # (B,)
+        rows, ts, total = self._consistent_gather(cl, pool)
         head = (total % Q).astype(np.int32)
         slot = np.arange(Q, dtype=np.int32)[None, :]
         age = pool.get("age", (B, Q), np.int32)
@@ -268,11 +347,17 @@ class ClusterQueueStore:
         if i2i is not None and use_kernel:
             from repro.kernels.queue_gather.ops import queue_gather
             cl, known = self.clusters_of(user_ids)
-            seeds, union = queue_gather(
-                self.items, self.times, self.cursor, cl, i2i,
-                cutoff=self.rel_cutoff(now), n_recent=n_recent, k=k)
-            seeds = np.asarray(seeds, np.int64)
-            union = np.asarray(union, np.int64)
+
+            def _run():
+                s, u = queue_gather(
+                    self.items, self.times, self.cursor, cl, i2i,
+                    cutoff=self.rel_cutoff(now), n_recent=n_recent, k=k)
+                return np.asarray(s, np.int64), np.asarray(u, np.int64)
+
+            # same seqlock discipline as the numpy path: the kernel
+            # snapshots the store arrays at launch, so relaunch on a
+            # torn read
+            seeds, union = self._seqlock_read(cl, _run)
             if not known.all():
                 seeds[~known] = -1           # unknown users: empty rows
                 union[~known] = -1
@@ -326,6 +411,8 @@ def build_i2i_knn(item_emb: np.ndarray, k: int, *, chunk: int = 2048,
     e = e.astype(np.float32)
     n = len(e)
     kk = min(k, n - 1)
+    if kk <= 0:      # 0- or 1-item corpus: no neighbors exist at all
+        return np.full((n, k), -1, np.int64)
     chunk = min(chunk, n)
     score = _topk_scorer(kk, exclude_self)
     out = np.empty((n, kk), np.int64)

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs.base import RankGraph2Config
 from repro.core import evaluation as E
+from repro.core.rq_index import codes_utilization
 from repro.core.serving import build_i2i_knn
 from repro.kernels.rq_assign.ops import rq_assign_corpus, flat_codes_np
 from repro.lifecycle.snapshot import IndexSnapshot, derive_members
@@ -149,19 +150,40 @@ def cluster_user_recall(snap: IndexSnapshot, user_emb: np.ndarray,
     return out
 
 
+def i2i_item_recall(snap: IndexSnapshot, world, *, n_edges: int = 500,
+                    seed: int = 0) -> float:
+    """§5.2.2 item-ranking recall *through the published index*: the
+    fraction of sampled next-day co-engagement pairs ``(i, j)`` where
+    ``j`` appears in the snapshot's I2I table row of ``i`` (the list
+    serving actually unions at request time)."""
+    pairs = E.day1_co_pairs(world.day1, n_edges=n_edges, seed=seed)
+    if not len(pairs):
+        return 0.0
+    n = snap.i2i.shape[0]
+    pairs = pairs[(pairs[:, 0] < n) & (pairs[:, 1] < n)]
+    if not len(pairs):
+        return 0.0
+    hits = (snap.i2i[pairs[:, 0]] == pairs[:, 1][:, None]).any(axis=1)
+    return float(hits.mean())
+
+
 def evaluate_snapshot(snap: IndexSnapshot, user_emb: np.ndarray,
                       user_recon: np.ndarray, world, *,
                       recall_k: int = 100, n_queries: int = 500,
                       seed: int = 0, n_probe_factor: int = 4,
-                      hitrate_pairs: Optional[np.ndarray] = None
+                      hitrate_pairs: Optional[np.ndarray] = None,
+                      item_emb: Optional[np.ndarray] = None
                       ) -> Dict[str, float]:
     """The publication gate: cluster-index recall vs exact-KNN recall on
-    the same held-out next-day engagements, plus the §5.2.3 index
-    hitrate (original vs RQ-reconstructed embeddings) when positive
-    pairs are supplied.
+    the same held-out next-day engagements, the §5.2.2 item-ranking
+    recall through the published I2I table vs exact embedding ranking
+    (when ``item_emb`` is supplied), per-layer codebook utilization of
+    the *published* assignments (a collapsed codebook cannot publish),
+    and the §5.2.3 index hitrate (original vs RQ-reconstructed
+    embeddings) when positive pairs are supplied.
 
-    ``recall_ratio`` is the number the swap gate thresholds: the
-    fraction of exact-KNN Recall@k the published index retains.
+    ``recall_ratio`` / ``item_recall_ratio`` / ``codebook_util_min``
+    are the numbers the swap gate thresholds.
     """
     exact = E.user_recall(user_emb, world, ks=(recall_k,),
                           n_queries=n_queries, seed=seed)[recall_k]
@@ -171,6 +193,24 @@ def evaluate_snapshot(snap: IndexSnapshot, user_emb: np.ndarray,
     out = dict(recall_exact=float(exact), recall_index=float(routed),
                recall_ratio=float(routed / max(exact, 1e-12)),
                recall_k=float(recall_k))
+    # §5.2.2 item side: exact ranking at the I2I table's own width, so
+    # the index number has an apples-to-apples ceiling
+    if item_emb is not None:
+        k_i2i = int(snap.i2i.shape[1])
+        exact_i = E.item_recall(item_emb, world, ks=(k_i2i,),
+                                n_edges=n_queries, seed=seed)[k_i2i]
+        routed_i = i2i_item_recall(snap, world, n_edges=n_queries,
+                                   seed=seed)
+        out["item_recall_exact"] = float(exact_i)
+        out["item_recall_index"] = float(routed_i)
+        out["item_recall_ratio"] = float(routed_i / max(exact_i, 1e-12))
+        out["item_recall_k"] = float(k_i2i)
+    # collapse floor: utilization of the published user+item codes
+    all_codes = np.concatenate([snap.user_codes, snap.item_codes], axis=0)
+    util = codes_utilization(all_codes, snap.codebook_sizes)
+    for l, u in enumerate(util):
+        out[f"util_layer{l}"] = float(u)
+    out["codebook_util_min"] = float(min(util)) if util else 0.0
     if hitrate_pairs is not None and len(hitrate_pairs):
         hr_orig, hr_recon = E.index_hitrate(
             user_emb, user_recon, hitrate_pairs, ks=(10,), seed=seed)

@@ -53,6 +53,14 @@ class LifecycleConfig:
                           this fraction of exact-KNN Recall@``recall_k``
                           or the engine keeps serving the old version
                           (0 disables the gate);
+    ``min_item_recall_ratio``
+                          §5.2.2 gate breadth: the published I2I table
+                          must retain this fraction of exact item-
+                          ranking recall at its own width (0 disables);
+    ``min_codebook_util`` publication-side collapse floor: every RQ
+                          layer's published-code utilization must stay
+                          above this fraction or the snapshot is
+                          rejected (0 disables);
     ``i2i_k``             offline I2I KNN width published per item;
     ``queue_len`` / ``recency_s`` / ``ring_capacity``
                           serving-store geometry: cluster ring-buffer
@@ -68,6 +76,8 @@ class LifecycleConfig:
     batch_per_type: int = 64
     publish_every: int = 1
     min_recall_ratio: float = 0.0
+    min_item_recall_ratio: float = 0.0
+    min_codebook_util: float = 0.0
     recall_k: int = 100
     recall_queries: int = 400
     n_probe_factor: int = 4
@@ -190,11 +200,19 @@ class LifecycleRuntime:
             ids=np.arange(nu, nu + ni), batch=self.lcfg.embed_batch)
 
     def gate_passes(self, snap: IndexSnapshot) -> bool:
-        """The swap/persist gate: ungated, or recall ratio above the
-        configured floor."""
-        gate = self.lcfg.min_recall_ratio
-        ratio = snap.metrics.get("recall_ratio")
-        return not (gate > 0 and ratio is not None and ratio < gate)
+        """The swap/persist gate: every enabled floor must hold —
+        user-side recall ratio, §5.2.2 item-side recall ratio, and the
+        published-code utilization (collapse) floor."""
+        m = snap.metrics
+        for gate, key in ((self.lcfg.min_recall_ratio, "recall_ratio"),
+                          (self.lcfg.min_item_recall_ratio,
+                           "item_recall_ratio"),
+                          (self.lcfg.min_codebook_util,
+                           "codebook_util_min")):
+            val = m.get(key)
+            if gate > 0 and val is not None and val < gate:
+                return False
+        return True
 
     def publish(self) -> IndexSnapshot:
         """Stage 3: materialize + gate + persist the next version.
@@ -217,7 +235,8 @@ class LifecycleRuntime:
                 recall_k=self.lcfg.recall_k,
                 n_queries=self.lcfg.recall_queries, seed=self.seed,
                 n_probe_factor=self.lcfg.n_probe_factor,
-                hitrate_pairs=self._hitrate_pairs())
+                hitrate_pairs=self._hitrate_pairs(),
+                item_emb=self._last_item_emb)
             snap = dataclasses.replace(
                 snap, gate_metrics=tuple(sorted(
                     (k, float(v)) for k, v in metrics.items())))
@@ -243,7 +262,8 @@ class LifecycleRuntime:
                 ring_capacity=self.lcfg.ring_capacity)
             return dict(from_version=0.0,
                         to_version=float(snap.version),
-                        build_ms=0.0, stall_ms=0.0, replayed_events=0.0)
+                        build_ms=0.0, stall_ms=0.0, replayed_events=0.0,
+                        dropped_stale=0.0, ring_dropped=0.0)
         return self.server.swap_to(snap, now)
 
     # -- the loop -----------------------------------------------------------
@@ -273,6 +293,10 @@ class LifecycleRuntime:
             else:
                 report["swap"] = dict(
                     skipped=True,
-                    recall_ratio=snap.metrics.get("recall_ratio"))
+                    recall_ratio=snap.metrics.get("recall_ratio"),
+                    item_recall_ratio=snap.metrics.get(
+                        "item_recall_ratio"),
+                    codebook_util_min=snap.metrics.get(
+                        "codebook_util_min"))
         self.cycle += 1
         return report

@@ -392,6 +392,60 @@ def _cfg_for(sizes):
                             d_embed=16, dtype="float32")
 
 
+def test_gate_breadth_collapsed_codebook_cannot_publish(tiny_world):
+    """ROADMAP 'Gate breadth': a deliberately collapsed codebook (every
+    row identical -> every embedding assigned code 0) must trip the
+    published-code utilization floor, and the item-side §5.2.2 recall
+    must ride in the gate metrics."""
+    from types import SimpleNamespace
+    from repro.lifecycle.publish import build_snapshot, evaluate_snapshot
+    from repro.lifecycle.runtime import LifecycleConfig, LifecycleRuntime
+    rng = np.random.default_rng(0)
+    d, sizes = 16, (8, 4)
+    nu, ni = tiny_world.n_users, tiny_world.n_items
+    user_emb = rng.normal(size=(nu, d)).astype(np.float32)
+    item_emb = rng.normal(size=(ni, d)).astype(np.float32)
+    healthy = {"codebooks": {
+        "layer0": user_emb[rng.choice(nu, sizes[0], replace=False)],
+        "layer1": rng.normal(size=(sizes[1], d)).astype(np.float32) * .1}}
+    collapsed = {"codebooks": {
+        "layer0": np.zeros((sizes[0], d), np.float32),   # all rows equal
+        "layer1": np.zeros((sizes[1], d), np.float32)}}
+
+    def metrics_for(params):
+        snap, recon = build_snapshot(1, user_emb, item_emb, params,
+                                     _cfg_for(sizes), i2i_k=6,
+                                     want_user_recon=True)
+        m = evaluate_snapshot(snap, user_emb, recon, tiny_world,
+                              recall_k=20, n_queries=50,
+                              item_emb=item_emb)
+        return dataclasses.replace(snap, gate_metrics=tuple(sorted(
+            (k, float(v)) for k, v in m.items()))), m
+
+    snap_h, m_h = metrics_for(healthy)
+    snap_c, m_c = metrics_for(collapsed)
+    # the new gate metrics are present on both
+    for m in (m_h, m_c):
+        assert {"item_recall_exact", "item_recall_index",
+                "item_recall_ratio", "codebook_util_min",
+                "util_layer0", "util_layer1"} <= set(m)
+    assert m_h["codebook_util_min"] > m_c["codebook_util_min"]
+    # argmin over identical rows is index 0 everywhere -> 1/size per layer
+    assert m_c["util_layer0"] == 1.0 / sizes[0]
+    assert m_c["util_layer1"] == 1.0 / sizes[1]
+
+    gate = LifecycleConfig(min_codebook_util=0.5)
+    rt = SimpleNamespace(lcfg=gate)            # gate_passes uses lcfg only
+    assert LifecycleRuntime.gate_passes(rt, snap_h)
+    assert not LifecycleRuntime.gate_passes(rt, snap_c)
+    # item-side floor is enforced independently of the user-side one
+    rt_item = SimpleNamespace(lcfg=LifecycleConfig(
+        min_item_recall_ratio=2.0))            # unsatisfiable
+    assert not LifecycleRuntime.gate_passes(rt_item, snap_h)
+    rt_off = SimpleNamespace(lcfg=LifecycleConfig())   # all floors off
+    assert LifecycleRuntime.gate_passes(rt_off, snap_c)
+
+
 def test_gate_failed_snapshot_is_not_persisted_or_swapped(
         tmp_path, tiny_world, tiny_cfg, tiny_graph):
     """A snapshot below the recall floor must neither reach the on-disk

@@ -218,6 +218,27 @@ def test_i2i_knn_padding_when_k_exceeds_items():
     assert (knn[:, :3] >= 0).all()
 
 
+def test_i2i_knn_tiny_corpora():
+    """n in {1, 2, k+1}: a 1-item corpus has no neighbors at all (the
+    old code fed ``top_k(..., 0)`` and crashed), a 2-item corpus has
+    exactly one, and n = k+1 fills every column."""
+    rng = np.random.default_rng(4)
+    k = 5
+    knn1 = build_i2i_knn(rng.normal(size=(1, 8)).astype(np.float32), k=k)
+    assert knn1.shape == (1, k) and (knn1 == -1).all()
+    knn2 = build_i2i_knn(rng.normal(size=(2, 8)).astype(np.float32), k=k)
+    assert knn2.shape == (2, k)
+    assert knn2[:, 0].tolist() == [1, 0]       # each other's only neighbor
+    assert (knn2[:, 1:] == -1).all()
+    knn6 = build_i2i_knn(rng.normal(size=(k + 1, 8)).astype(np.float32),
+                         k=k)
+    assert knn6.shape == (k + 1, k) and (knn6 >= 0).all()
+    assert all(i not in knn6[i] for i in range(k + 1))
+    # the empty corpus keeps its shape contract too
+    knn0 = build_i2i_knn(np.zeros((0, 8), np.float32), k=k)
+    assert knn0.shape == (0, k)
+
+
 def test_i2i_knn_chunking_invariant():
     rng = np.random.default_rng(3)
     emb = rng.normal(size=(100, 16)).astype(np.float32)

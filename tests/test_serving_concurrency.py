@@ -1,0 +1,389 @@
+"""Concurrent serving tier: per-thread reader pools, seqlock-guarded
+retrieval against a live-ingesting store, multi-writer EventRing, and
+the deterministic lost-event swap race regression.
+
+The heavyweight R-reader/W-writer storm with throughput gating lives in
+``benchmarks/serving_concurrency.py``; these tests pin the individual
+contracts at test-tier sizes.
+"""
+import threading
+
+import numpy as np
+
+from repro.core.serving import BufPool, ClusterQueueStore, ThreadLocalPools
+from repro.lifecycle.swap import EventRing, SwapServer
+from repro.lifecycle.snapshot import IndexSnapshot, derive_members
+
+from tests._hypothesis_fallback import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# per-thread reader pools
+# ---------------------------------------------------------------------------
+
+def test_thread_local_pools_are_per_thread():
+    pools = ThreadLocalPools()
+    main_pool = pools.get()
+    assert pools.get() is main_pool           # stable within a thread
+    assert isinstance(main_pool, BufPool)
+    got = {}
+
+    def grab(name):
+        got[name] = pools.get()
+
+    ths = [threading.Thread(target=grab, args=(i,)) for i in range(3)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    pool_ids = {id(p) for p in got.values()} | {id(main_pool)}
+    assert len(pool_ids) == 4                 # no sharing across threads
+
+
+def test_concurrent_readers_match_single_thread_bitwise():
+    """N reader threads over one store: every response identical to the
+    single-threaded result (no scratch aliasing between threads)."""
+    rng = np.random.default_rng(0)
+    n_users, n_items, C = 200, 300, 16
+    store = ClusterQueueStore(rng.integers(0, C, n_users), queue_len=32,
+                              recency_s=1e9)
+    store.ingest(rng.integers(0, n_users, 3000),
+                 rng.integers(0, n_items, 3000),
+                 rng.integers(0, 1000, 3000).astype(float))
+    batches = [rng.integers(0, n_users, 64) for _ in range(8)]
+    want = [store.retrieve_batch(u, 1000.0, 16) for u in batches]
+    errs = []
+
+    def reader():
+        try:
+            for _ in range(10):
+                for u, w in zip(batches, want):
+                    np.testing.assert_array_equal(
+                        store.retrieve_batch(u, 1000.0, 16), w)
+        except Exception as e:                # surfaced after join
+            errs.append(e)
+
+    ths = [threading.Thread(target=reader) for _ in range(4)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    assert not errs, errs
+
+
+# ---------------------------------------------------------------------------
+# seqlock: readers against a concurrently-ingesting store
+# ---------------------------------------------------------------------------
+
+def test_retrieve_during_concurrent_ingest_then_oracle():
+    """Readers run lock-free while W writers ingest; mid-flight
+    responses must be well-formed, and once writers finish the store
+    must equal a single-threaded oracle bitwise (zero lost events,
+    zero torn writes).
+
+    Writers own disjoint clusters (user id mod W) and emit strictly
+    increasing timestamps, so the per-cluster slot order is the
+    timestamp order regardless of how the threads interleave — which is
+    exactly what makes the oracle comparison bitwise."""
+    W, C, n_users, n_items = 2, 8, 64, 100
+    clusters = np.arange(n_users) % C          # cluster % W == user % W
+    store = ClusterQueueStore(clusters, queue_len=16, recency_s=1e9)
+    per_writer = [[] for _ in range(W)]
+    errs = []
+
+    def writer(w):
+        try:
+            rng = np.random.default_rng(100 + w)
+            for step in range(60):
+                n = int(rng.integers(1, 12))
+                u = rng.integers(0, n_users // W, n) * W + w
+                it = rng.integers(0, n_items, n)
+                ts = (np.arange(n) + step * 32) * W + w
+                per_writer[w].append((u, it, ts.astype(float)))
+                store.ingest(u, it, ts.astype(float))
+        except Exception as e:
+            errs.append(e)
+
+    def reader():
+        try:
+            rng = np.random.default_rng(7)
+            for _ in range(80):
+                out = store.retrieve_batch(
+                    rng.integers(0, n_users, 32), 1e6, 8)
+                assert ((out == -1) | ((out >= 0) & (out < n_items))).all()
+        except Exception as e:
+            errs.append(e)
+
+    ths = ([threading.Thread(target=writer, args=(w,)) for w in range(W)]
+           + [threading.Thread(target=reader) for _ in range(2)])
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    assert not errs, errs
+
+    oracle = ClusterQueueStore(clusters, queue_len=16, recency_s=1e9)
+    ev = [np.concatenate(x) for x in zip(
+        *(e for w in per_writer for e in w))]
+    order = np.argsort(ev[2], kind="stable")
+    oracle.ingest(ev[0][order], ev[1][order], ev[2][order])
+    users = np.arange(n_users)
+    np.testing.assert_array_equal(store.retrieve_batch(users, 1e6, 16),
+                                  oracle.retrieve_batch(users, 1e6, 16))
+    np.testing.assert_array_equal(store.cursor, oracle.cursor)
+
+
+def test_seqlock_fallback_under_writer_pressure():
+    """The bounded-spin fallback path must return a consistent result
+    even when a writer holds the write lock across the reader's whole
+    spin budget (forced via a tiny spin budget)."""
+    store = ClusterQueueStore(np.array([0, 1]), queue_len=8,
+                              recency_s=1e9)
+    store.ingest(np.array([0, 1]), np.array([5, 6]),
+                 np.array([1.0, 2.0]))
+    store._SEQLOCK_SPINS = 0  # always take the locked fallback
+    assert store.retrieve(0, 10.0, 4) == [5]
+    assert store.retrieve(1, 10.0, 4) == [6]
+
+
+# ---------------------------------------------------------------------------
+# EventRing: multi-writer push
+# ---------------------------------------------------------------------------
+
+def test_event_ring_multi_writer_exactly_once():
+    """W threads push concurrently: after join the committed watermark
+    equals the reserved cursor and the trailing window holds every
+    event exactly once (atomic reservation, no overwrites)."""
+    W, pushes, n = 4, 40, 7
+    ring = EventRing(capacity=1 << 12)
+
+    def writer(w):
+        for s in range(pushes):
+            base = (w * pushes + s) * n
+            ids = np.arange(base, base + n)
+            ring.push(ids, ids + 1, ids.astype(float))
+
+    ths = [threading.Thread(target=writer, args=(w,)) for w in range(W)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    total = W * pushes * n
+    assert ring.cursor == total
+    assert ring.committed == total            # no gap left un-closed
+    u, i, t, end = ring.window_since(0, -np.inf)
+    assert end == total and len(u) == total
+    np.testing.assert_array_equal(np.sort(u), np.arange(total))
+    np.testing.assert_array_equal(i, u + 1)   # rows never mixed across slots
+    np.testing.assert_array_equal(t, u.astype(float))
+
+
+def test_event_ring_window_clamps_below_inflight_wrap():
+    """Wrap safety: with a reservation in flight past the wrap point,
+    physical slots below ``cursor - capacity`` may be mid-overwrite —
+    ``window_since`` must clamp them out rather than return a possibly
+    torn prefix (white-box: the in-flight push is simulated by bumping
+    the reserved cursor past the committed watermark)."""
+    ring = EventRing(capacity=8)
+    ring.push(np.arange(5), np.arange(5) + 100, np.arange(5, dtype=float))
+    ring.push(np.arange(5, 10), np.arange(5, 10) + 100,
+              np.arange(5, 10, dtype=float))  # committed = cursor = 10
+    ring.cursor = 15                          # in-flight: [10, 15)
+    u, i, _, end = ring.window_since(0, -np.inf)
+    assert end == 10
+    # positions [2, 7) alias the in-flight write's slots; only [7, 10)
+    # are provably stable
+    assert u.tolist() == [7, 8, 9]
+    assert i.tolist() == [107, 108, 109]
+    ring.cursor = 10                          # quiesced again
+    u, _, _, _ = ring.window_since(0, -np.inf)
+    assert u.tolist() == [2, 3, 4, 5, 6, 7, 8, 9]
+
+
+def test_event_ring_wrapped_multi_writer_never_tears():
+    """Writers lap a tiny ring — with batch sizes whose combined
+    in-flight span exceeds capacity, so reservation backpressure is
+    exercised — while a reader chains ``window_since``: delivered
+    events may skip overwritten positions, but every delivered tuple
+    must be internally consistent (never one push's user with
+    another's item/ts) and no position is delivered twice."""
+    ring = EventRing(capacity=64)             # laps many times
+    W, pushes = 4, 120
+    stop = threading.Event()
+    errs = []
+
+    def writer(w):
+        try:
+            rng = np.random.default_rng(w)
+            for s in range(pushes):
+                n = int(rng.integers(1, 33))  # 4 writers x 32 > capacity
+                base = (w * pushes + s) * 40
+                ids = np.arange(base, base + n)
+                ring.push(ids, ids + 1_000_000, ids.astype(float))
+        except Exception as e:                # pragma: no cover
+            errs.append(e)
+
+    seen_pos = dict(n=0)
+
+    def reader():
+        try:
+            seen = 0
+            while not stop.is_set() or seen < ring.committed:
+                u, i, t, end = ring.window_since(seen, -np.inf)
+                assert end >= seen
+                np.testing.assert_array_equal(i, u + 1_000_000)
+                np.testing.assert_array_equal(t, u.astype(float))
+                seen_pos["n"] += len(u)
+                seen = end
+        except Exception as e:                # pragma: no cover
+            errs.append(e)
+
+    ths = [threading.Thread(target=writer, args=(w,)) for w in range(W)]
+    rd = threading.Thread(target=reader)
+    rd.start()
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    stop.set()
+    rd.join()
+    assert not errs, errs
+    assert ring.committed == ring.cursor
+    assert seen_pos["n"] <= ring.cursor       # positions never re-delivered
+
+
+def test_event_ring_push_reports_dropped():
+    ring = EventRing(capacity=8)
+    assert ring.push(np.arange(5), np.arange(5), np.arange(5.0)) == 0
+    # a batch larger than the whole ring truncates to its tail — and
+    # says so
+    assert ring.push(np.arange(20), np.arange(20),
+                     np.arange(20.0)) == 12
+    u, _, _, end = ring.window_since(0, -np.inf)
+    assert end == 13 and u.tolist() == list(range(12, 20))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=17),
+                min_size=1, max_size=12),
+       st.integers(min_value=4, max_value=40))
+def test_event_ring_watermark_monotone_and_gap_free(sizes, capacity):
+    """Property: chaining ``window_since`` through the returned cursor
+    yields a monotone watermark and exactly the retained stream — every
+    retained event delivered once, in order, except those that fell off
+    the ring's trailing window between reads.  (A push larger than the
+    whole ring retains only its tail and reports the rest dropped, so
+    ring positions count retained events.)"""
+    ring = EventRing(capacity=capacity)
+    seen = 0
+    eid = 0
+    retained: list = []                       # the ring's position stream
+    delivered = []
+    for n in sizes:
+        ids = np.arange(eid, eid + n)
+        eid += n
+        dropped = ring.push(ids, ids, ids.astype(float))
+        assert dropped == max(0, n - capacity)
+        retained.extend(ids[n - capacity:] if n > capacity else ids)
+        u, _, _, end = ring.window_since(seen, -np.inf)
+        assert end >= seen                    # watermark never regresses
+        assert end == len(retained)           # single-writer: all visible
+        expect = retained[max(seen, end - capacity):end]
+        np.testing.assert_array_equal(u, expect)
+        delivered.extend(u.tolist())
+        seen = end
+    # nothing delivered twice; full-stream read clamps to the window
+    assert len(delivered) == len(set(delivered))
+    u, _, _, _ = ring.window_since(0, -np.inf)
+    np.testing.assert_array_equal(
+        u, retained[max(0, len(retained) - capacity):])
+
+
+# ---------------------------------------------------------------------------
+# the lost-event swap race, deterministically
+# ---------------------------------------------------------------------------
+
+def _mk_snapshot(rng, version, n_users, n_items, flip):
+    sizes = (4, 2)
+    n_clusters = 8
+    flat = ((np.arange(n_users) + 3 * flip) % n_clusters).astype(np.int64)
+    ptr, ids = derive_members(flat, n_clusters)
+    codes = np.stack([flat // 2, flat % 2], axis=1).astype(np.int32)
+    i2i = ((np.arange(n_items)[:, None] + 1 + flip * 7)
+           % n_items).astype(np.int64).repeat(3, axis=1)
+    return IndexSnapshot(
+        user_codes=codes, item_codes=np.zeros((n_items, 2), np.int32),
+        user_clusters=flat, member_ptr=ptr, member_ids=ids,
+        coarse_codebook=np.zeros((4, 4), np.float32), i2i=i2i,
+        version=version, n_users=n_users, n_items=n_items,
+        codebook_sizes=sizes)
+
+
+def test_injected_ingest_between_catchup_and_flip_is_not_lost():
+    """The historical race, pinned: an ingest that lands *between* the
+    swap's catch-up read and the flip used to be written only to the
+    old bundle's store.  The pre-flip hook injects exactly there; the
+    post-flip ring drain must deliver it to the new bundle."""
+    rng = np.random.default_rng(3)
+    n_users, n_items = 40, 30
+    snap_a = _mk_snapshot(rng, 1, n_users, n_items, flip=0)
+    snap_b = _mk_snapshot(rng, 2, n_users, n_items, flip=1)
+    server = SwapServer(snap_a, queue_len=16, recency_s=1e9)
+    base = (rng.integers(0, n_users, 400), rng.integers(0, n_items, 400),
+            np.sort(rng.random(400) * 100.0))
+    server.ingest(*base)
+    injected = (np.arange(12) % n_users, np.arange(12) % n_items,
+                200.0 + np.arange(12.0))      # newer than every base event
+
+    def hook():
+        server._pre_flip_hook = None          # fire exactly once
+        server.ingest(*injected)
+
+    server._pre_flip_hook = hook
+    rep = server.swap_to(snap_b, now=300.0)
+    assert rep["to_version"] == 2.0
+    assert rep["replayed_events"] == 400 + 12  # true count, incl. the race
+    assert rep["dropped_stale"] == 0.0
+    assert rep["ring_dropped"] == 0.0
+
+    oracle = ClusterQueueStore(snap_b.user_clusters, queue_len=16,
+                               recency_s=1e9,
+                               n_clusters=snap_b.n_clusters)
+    oracle.ingest(np.concatenate([base[0], injected[0]]),
+                  np.concatenate([base[1], injected[1]]),
+                  np.concatenate([base[2], injected[2]]))
+    users = np.arange(n_users)
+    got, ver = server.retrieve_batch(users, 300.0, 8)
+    assert ver == 2
+    np.testing.assert_array_equal(got,
+                                  oracle.retrieve_batch(users, 300.0, 8))
+
+
+def test_swap_report_true_replay_count_and_stale_drop():
+    """``replayed_events`` counts events actually drained into the new
+    bundle (not ring-buffer write totals) and ``dropped_stale`` counts
+    window events the recency cutoff discarded."""
+    rng = np.random.default_rng(5)
+    n_users, n_items = 30, 20
+    snap_a = _mk_snapshot(rng, 1, n_users, n_items, flip=0)
+    snap_b = _mk_snapshot(rng, 2, n_users, n_items, flip=1)
+    server = SwapServer(snap_a, queue_len=8, recency_s=50.0)
+    # 100 stale (ts < now - recency) + 60 fresh events
+    server.ingest(rng.integers(0, n_users, 100),
+                  rng.integers(0, n_items, 100),
+                  np.sort(rng.random(100) * 40.0))
+    server.ingest(rng.integers(0, n_users, 60),
+                  rng.integers(0, n_items, 60),
+                  60.0 + np.sort(rng.random(60) * 30.0))
+    rep = server.swap_to(snap_b, now=100.0)
+    assert rep["replayed_events"] == 60.0
+    assert rep["dropped_stale"] == 100.0
+    assert rep["ring_dropped"] == 0.0
+
+    # push-truncation drops surface in the next swap report
+    big = 1 << 17                              # > default ring capacity
+    server.ingest(np.zeros(big, np.int64), np.zeros(big, np.int64),
+                  np.full(big, 99.0))
+    assert server.ring_dropped == big - server.ring.capacity
+    rep2 = server.swap_to(snap_a, now=100.0)
+    assert rep2["ring_dropped"] == float(big - server.ring.capacity)
