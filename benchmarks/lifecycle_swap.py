@@ -6,6 +6,11 @@ What this establishes (and CI gates):
     exact-KNN Recall@100 on held-out next-day engagements (the
     co-learned index is allowed to trade at most a bounded recall loss
     for its O(1) serving reads);
+  * the published codebooks stay *balanced*: every layer's utilization
+    holds >= ``LIFECYCLE_MIN_UTIL`` (0.5, vs the 0.0625 collapse floor
+    this bench used to measure) — utilization-balancing co-training +
+    in-burst dead-code resets keep it there, and the gate-triggered
+    repair burst heals a publish that still trips;
   * an atomic hot-swap under live ingest stalls serving for at most
     ``SWAP_MAX_STALL_MS`` (the bulk store build + event-ring replay run
     off-path; only the catch-up + flip is a critical section);
@@ -35,14 +40,21 @@ def run(full: bool = False) -> Dict:
     n_users, n_items = (1000, 1600) if full else (500, 800)
     world = make_world(n_users=n_users, n_items=n_items,
                        events_per_user=20.0, seed=1)
+    min_util = float(os.environ.get("LIFECYCLE_MIN_UTIL", "0.5"))
     cfg = RankGraph2Config(
         d_user_feat=64, d_item_feat=64, d_embed=32, n_heads=2, d_hidden=96,
         k_imp=10, k_train=4, n_negatives=24, n_pool_neg=8,
-        rq=RQConfig(codebook_sizes=(16, 4), hist_len=50), dtype="float32")
+        # usage_ema half-life must be well under reset_every or codes
+        # that died mid-cadence still look live at the reset pass
+        rq=RQConfig(codebook_sizes=(16, 4), hist_len=50,
+                    util_coef=1.0, usage_ema=0.9, dead_floor=0.25,
+                    reset_every=25), dtype="float32")
     lcfg = LifecycleConfig(steps_per_cycle=200 if full else 150,
                            batch_per_type=64, i2i_k=12,
                            recency_s=2 * 86400.0, recall_k=100,
-                           recall_queries=300, min_recall_ratio=0.0)
+                           recall_queries=300, min_recall_ratio=0.0,
+                           min_codebook_util=min_util,
+                           repair_attempts=2, repair_steps=50)
 
     log = world.day0
     m = log.timestamp <= 82800.0
@@ -60,6 +72,12 @@ def run(full: bool = False) -> Dict:
     rep0 = rt.run_cycle(now=86400.0)
     out["cycle0_s"] = time.perf_counter() - t0
     out["publish_v1"] = rep0["publish"]
+    if "repair" in rep0:
+        out["repair_cycle0"] = dict(attempts=rep0["repair"]["attempts"],
+                                    healed=rep0["repair"]["healed"])
+    assert not rep0["swap"].get("skipped"), \
+        f"cycle 0 never converged to a publishable index: {rep0['swap']}"
+    v1 = rep0["publish"]["version"]
 
     # live traffic against v1
     d1 = world.day1
@@ -71,7 +89,7 @@ def run(full: bool = False) -> Dict:
     t0 = time.perf_counter()
     _, v_before = rt.server.retrieve_batch(users, now, 32)
     out["retrieve_us_per_req"] = (time.perf_counter() - t0) / 1024 * 1e6
-    assert v_before == 1
+    assert v_before == v1
 
     # cycle 1: trailing-hour refresh + publish v2 + hot swap
     delta = log.window(86400.0, 3600.0)
@@ -80,6 +98,8 @@ def run(full: bool = False) -> Dict:
     out["cycle1_s"] = time.perf_counter() - t0
     out["publish_v2"] = rep1["publish"]
     out["swap"] = rep1["swap"]
+    assert not rep1["swap"].get("skipped"), \
+        f"cycle 1 never converged to a publishable index: {rep1['swap']}"
 
     # swap storm: repeated flips under interleaved serving; every
     # response must carry exactly the live version and the worst stall
@@ -87,7 +107,7 @@ def run(full: bool = False) -> Dict:
     import dataclasses as _dc
     snap2 = rt.server.handle.acquire().snapshot
     stalls = []
-    for v in range(3, 6):
+    for v in range(snap2.version + 1, snap2.version + 4):
         snap = _dc.replace(snap2, version=v)
         r = rt.server.swap_to(snap, now)
         stalls.append(r["stall_ms"])
@@ -100,6 +120,12 @@ def run(full: bool = False) -> Dict:
     ratio = min(out["publish_v1"]["recall_ratio"],
                 out["publish_v2"]["recall_ratio"])
     out["recall_ratio_min"] = ratio
+    util = min(out["publish_v1"]["codebook_util_min"],
+               out["publish_v2"]["codebook_util_min"])
+    out["codebook_util_min"] = util
+    out["hitrate10_recon_min"] = min(
+        out["publish_v1"]["hitrate10_recon"],
+        out["publish_v2"]["hitrate10_recon"])
 
     print("\nLifecycle smoke:")
     print(f"  publish v1 recall@100 ratio: "
@@ -108,6 +134,13 @@ def run(full: bool = False) -> Dict:
           f"{out['publish_v1']['recall_exact']:.3f})")
     print(f"  publish v2 recall@100 ratio: "
           f"{out['publish_v2']['recall_ratio']:.3f}")
+    print(f"  index health: util_layer0 "
+          f"{out['publish_v1']['util_layer0']:.3f} -> "
+          f"{out['publish_v2']['util_layer0']:.3f}, "
+          f"list balance {out['publish_v2']['coarse_list_balance']:.3f}, "
+          f"hitrate10_recon "
+          f"{out['publish_v1']['hitrate10_recon']:.3f} -> "
+          f"{out['publish_v2']['hitrate10_recon']:.3f}")
     print(f"  swap: build {out['swap']['build_ms']:.2f}ms, "
           f"stall {out['swap']['stall_ms']:.3f}ms, "
           f"{int(out['swap']['replayed_events'])} events re-keyed")
@@ -119,6 +152,9 @@ def run(full: bool = False) -> Dict:
     max_stall = float(os.environ.get("SWAP_MAX_STALL_MS", "50"))
     assert ratio >= min_recall, \
         f"published index recall ratio {ratio:.3f} < {min_recall}"
+    assert util >= min_util, \
+        f"published codebook utilization {util:.4f} < {min_util} " \
+        f"(collapse not healed)"
     assert out["swap_stall_ms_max"] <= max_stall, \
         f"swap stall {out['swap_stall_ms_max']:.2f}ms > {max_stall}ms"
     write_result("lifecycle_swap", out)

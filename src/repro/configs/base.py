@@ -142,6 +142,12 @@ class RQConfig:
     commit_coef: float = 0.25
     biased_selection: bool = True
     regularize: bool = True
+    # utilization balancing + self-healing (dead-code reset)
+    util_coef: float = 1.0       # weight of the soft-usage entropy gap
+    usage_ema: float = 0.99      # decay of the per-code EMA usage counter
+    dead_floor: float = 0.25     # dead if usage < dead_floor / n_codes
+    reset_every: int = 0         # burst steps between reset passes (0=off)
+    reset_probe: int = 512       # nodes embedded per reset/repair probe
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 EDGE_TYPES = ("uu", "ui", "iu", "ii")
 TASKS = tuple(f"{k}_{et}" for k in ("margin", "infonce") for et in EDGE_TYPES
-              ) + ("rq_recon", "rq_contrastive", "rq_reg")
+              ) + ("rq_recon", "rq_contrastive", "rq_reg", "rq_util")
 
 
 def init_uncertainty(dtype=jnp.float32) -> Dict[str, jnp.ndarray]:

@@ -11,10 +11,23 @@ trained jointly with the graph model:
     the encoder; codebook learns via the reconstruction term);
   * code-balance regularizer  L_reg = p_hat . p_batch  (Eq. 11-12) with
     soft assignment p(h,C)[j] = softmax_j( zeta1 / (zeta2 + d_j) ) and a
-    rolling 1000-batch empirical code histogram p_hat.
+    rolling 1000-batch empirical code histogram p_hat;
+  * utilization-balancing regularizer ``l_util``: a load-balance gap
+    coupling the *hard* (Eq. 9 argmin, stop-grad) batch fractions with
+    the mean soft assignment, ``(K * <f_hard, p_soft_mean> - 1)/(K-1)``
+    — 0 when usage is flat, -> 1 at collapse.  Unlike an entropy-max
+    term (which equalizes soft mass by dragging every centroid toward
+    the data mean, *hardening* argmin collapse) its gradient pushes
+    over-used codes off the mass they hoard, so losers start winning;
+  * per-code EMA usage counters (``RQState.usage``) tracking the
+    *unbiased* argmin assignment — Eq. 13 keeps routed histograms flat
+    even while argmin collapses, so routed counts cannot detect death —
+    feeding a **dead-code reset** pass: codes below a usage floor are
+    re-seeded from high-load clusters' residuals, deterministically
+    under the repo's keyed-uniform discipline (cf. ``ppr.walk_uniforms``).
 
-State (the rolling histograms) is device-resident and carried through
-train_step like optimizer state.
+State (the rolling histograms + EMA usage) is device-resident and
+carried through train_step like optimizer state.
 """
 from __future__ import annotations
 
@@ -30,14 +43,16 @@ from repro.configs.base import RQConfig
 
 @dataclasses.dataclass
 class RQState:
-    """Ring buffers of per-batch code counts, one per codebook layer."""
+    """Ring buffers of per-batch code counts plus EMA usage, per layer."""
     hists: Tuple[jnp.ndarray, ...]     # (hist_len, n_codes_l) float32
+    usage: Tuple[jnp.ndarray, ...]     # (n_codes_l,) f32 EMA batch freq
     ptr: jnp.ndarray                   # ()
     filled: jnp.ndarray                # ()
 
 
 jax.tree_util.register_dataclass(
-    RQState, data_fields=["hists", "ptr", "filled"], meta_fields=[])
+    RQState, data_fields=["hists", "usage", "ptr", "filled"],
+    meta_fields=[])
 
 
 def init_rq(key, cfg: RQConfig, d: int, dtype=jnp.float32
@@ -51,7 +66,11 @@ def init_rq(key, cfg: RQConfig, d: int, dtype=jnp.float32
         specs[f"layer{l}"] = ("codes", "code_dim")
     hists = tuple(jnp.zeros((cfg.hist_len, n), jnp.float32)
                   for n in cfg.codebook_sizes)
-    state = RQState(hists, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    # uniform prior: no code is born dead
+    usage = tuple(jnp.full((n,), 1.0 / n, jnp.float32)
+                  for n in cfg.codebook_sizes)
+    state = RQState(hists, usage, jnp.zeros((), jnp.int32),
+                    jnp.zeros((), jnp.int32))
     return {"codebooks": books}, {"codebooks": specs}, state
 
 
@@ -79,7 +98,9 @@ def rq_forward(params: Dict[str, Any], state: RQState, h: jnp.ndarray,
     recon = jnp.zeros_like(h32)
     codes: List[jnp.ndarray] = []
     reg_terms: List[jnp.ndarray] = []
+    util_terms: List[jnp.ndarray] = []
     new_counts: List[jnp.ndarray] = []
+    hard_counts: List[jnp.ndarray] = []
     books = params["codebooks"]
     biased = cfg.biased_selection and train
 
@@ -91,10 +112,11 @@ def rq_forward(params: Dict[str, Any], state: RQState, h: jnp.ndarray,
         dist = jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-12)       # (B, n)
         p_soft = _soft_assign(dist, cfg.zeta1, cfg.zeta2)
         phat = _phat(state.hists[l])
+        k_hard = jnp.argmin(dist, axis=1)                   # Eq. 9
         if biased:
             k = jnp.argmax(p_soft / phat[None, :], axis=1)  # Eq. 13
         else:
-            k = jnp.argmin(dist, axis=1)                    # Eq. 9
+            k = k_hard
         codes.append(k)
         sel = jnp.take(C, k, axis=0)                        # diff w.r.t. C
         recon = recon + sel
@@ -104,7 +126,25 @@ def rq_forward(params: Dict[str, Any], state: RQState, h: jnp.ndarray,
         p_batch = p_batch / jnp.maximum(jnp.sum(p_batch), 1e-12)
         reg_terms.append(jnp.dot(jax.lax.stop_gradient(phat), p_batch)
                          * cfg.codebook_sizes[l])
-        # hard counts for the rolling histogram
+        # utilization balance: load-balance gap between the hard (Eq. 9)
+        # batch fractions and the mean soft assignment, normalized so a
+        # flat codebook scores 0 and full collapse -> 1.  The hard
+        # fractions carry no gradient (argmin); the soft factor does, and
+        # its gradient *raises* the distance of over-used codes to the
+        # batch — spreading centroids instead of crowding them onto the
+        # data mean the way an entropy-max term does.
+        n_l = cfg.codebook_sizes[l]
+        f_hard = jnp.zeros(n_l, jnp.float32).at[k_hard].add(1.0)
+        f_hard = f_hard / jnp.maximum(jnp.sum(f_hard), 1.0)
+        if n_l > 1:
+            p_mean = jnp.mean(p_soft, axis=0)
+            p_mean = p_mean / jnp.maximum(jnp.sum(p_mean), 1e-12)
+            gap = (n_l * jnp.dot(jax.lax.stop_gradient(f_hard), p_mean)
+                   - 1.0) / (n_l - 1.0)
+            util_terms.append(jnp.maximum(gap, 0.0))
+        hard_counts.append(f_hard * h32.shape[0])
+        # routed counts for the rolling histogram (Eq. 12/13 operate on
+        # the selection actually taken, biased or not)
         new_counts.append(
             jnp.zeros(cfg.codebook_sizes[l], jnp.float32).at[k].add(1.0))
 
@@ -115,21 +155,32 @@ def rq_forward(params: Dict[str, Any], state: RQState, h: jnp.ndarray,
     l_recon = recon_loss + cfg.commit_coef * commit
     l_reg = (jnp.mean(jnp.stack(reg_terms)) if cfg.regularize
              else jnp.zeros((), jnp.float32))
+    l_util = (cfg.util_coef * jnp.mean(jnp.stack(util_terms))
+              if cfg.util_coef > 0 and util_terms
+              else jnp.zeros((), jnp.float32))
     recon_st = h32 + sg(recon - h32)                        # encoder path
 
-    # state update (ring buffer push)
+    # state update (ring buffer push + EMA usage)
     if train:
         p = state.ptr % cfg.hist_len
         hists = tuple(hh.at[p].set(c) for hh, c in zip(state.hists,
                                                        new_counts))
-        new_state = RQState(hists, state.ptr + 1,
+        # deadness tracks the *argmin* assignment: under Eq. 13 the
+        # routed counts stay flat by construction even at full argmin
+        # collapse, so only hard counts can detect a dead code
+        B = max(h32.shape[0], 1)
+        usage = tuple(
+            cfg.usage_ema * u + (1.0 - cfg.usage_ema) * (c / B)
+            for u, c in zip(state.usage, hard_counts))
+        new_state = RQState(hists, usage, state.ptr + 1,
                             jnp.minimum(state.filled + 1, cfg.hist_len))
     else:
         new_state = state
 
     return dict(codes=jnp.stack(codes, axis=1),             # (B, L)
                 recon=recon, recon_st=recon_st.astype(h.dtype),
-                l_recon=l_recon, l_reg=l_reg, state=new_state)
+                l_recon=l_recon, l_reg=l_reg, l_util=l_util,
+                state=new_state)
 
 
 def assign_codes(params: Dict[str, Any], h: jnp.ndarray,
@@ -162,13 +213,134 @@ def codes_utilization(codes, codebook_sizes) -> List[float]:
     of each layer's codebook hit at least once by ``codes`` ``(N, L)``.
     This is what the publication gate floors — a collapsed layer shows
     up as ~``1/size`` no matter how healthy the training-window
-    histogram once looked."""
+    histogram once looked.
+
+    Edge cases are first-class (mirroring the ``build_i2i_knn`` n<=1
+    fix): an empty corpus yields exactly 0.0 per layer, a 1-D ``codes``
+    vector is treated as single-layer ``(N, 1)``, and degenerate
+    ``codebook_sizes`` entries (< 1) yield 0.0 instead of dividing by
+    zero.  Values are always in ``[0, 1]`` and are 0 only when no code
+    of that layer is used at all.
+    """
     codes = np.asarray(codes)
+    if codes.ndim == 1:
+        codes = codes[:, None]
     out = []
     for l, size in enumerate(codebook_sizes):
-        used = np.unique(codes[:, l]) if len(codes) else np.zeros(0)
-        out.append(float(len(used)) / float(size))
+        if size < 1 or len(codes) == 0:
+            out.append(0.0)
+            continue
+        used = np.unique(codes[:, l])
+        out.append(min(float(len(used)) / float(size), 1.0))
     return out
+
+
+def per_code_counts(codes, codebook_sizes) -> List[np.ndarray]:
+    """Per-layer code occupancy of ``codes`` ``(N, L)``: how many rows
+    land on each code.  The corpus-side usage signal the repair path
+    feeds to ``dead_code_reset`` (EMA usage can look healthy long after
+    the published assignments collapsed)."""
+    codes = np.asarray(codes)
+    if codes.ndim == 1:
+        codes = codes[:, None]
+    out = []
+    for l, size in enumerate(codebook_sizes):
+        if size < 1:
+            out.append(np.zeros(0, np.float32))
+        elif len(codes) == 0:
+            out.append(np.zeros(size, np.float32))
+        else:
+            out.append(np.bincount(codes[:, l].astype(np.int64),
+                                   minlength=size).astype(np.float32))
+    return out
+
+
+def dead_code_reset(params: Dict[str, Any], state: RQState,
+                    h: np.ndarray, cfg: RQConfig, *, seed: int,
+                    step: int = 0, usage=None
+                    ) -> Tuple[Dict[str, Any], RQState, Dict[str, int]]:
+    """Re-seed dead codes from high-load clusters' residuals.
+
+    A code of layer ``l`` is *dead* when its usage share falls below
+    ``cfg.dead_floor / n_codes_l``.  Usage defaults to the EMA counters
+    carried in ``state``; the repair path overrides it with the
+    published corpus occupancy (``per_code_counts``), which is what
+    actually collapsed.  Each dead code is re-seeded at the layer-``l``
+    residual of a member of a high-load (donor) cluster — donors are
+    cycled in usage-descending order, the member pick and a tiny
+    de-duplicating jitter are drawn from ``default_rng((seed, step, l,
+    code))``, the same keyed-uniform discipline as ``walk_uniforms`` /
+    ``hub_uniforms``, so the pass is bit-deterministic and independent
+    of probe chunking.
+
+    Guarantees: live rows are bit-unchanged, so with the pre-reset
+    residuals any assignment that moves can only move *to* a revived
+    code (the intended split of an overloaded cluster) — members are
+    never reshuffled between two live codes by the reset itself.
+    Revived codes' EMA usage restarts at the live mean (not instantly
+    dead again); their rolling-histogram columns stay ~0, so Eq. 13
+    biased selection immediately favors routing traffic into them.
+
+    Returns ``(new_params, new_state, report)`` with
+    ``report['reset_layer{l}']`` = number of codes re-seeded.
+    """
+    h = np.asarray(h, np.float32)
+    L = len(cfg.codebook_sizes)
+    books = [np.array(params["codebooks"][f"layer{l}"], np.float32)
+             for l in range(L)]
+
+    def _argmin(resid: np.ndarray, C: np.ndarray) -> np.ndarray:
+        if not len(resid):
+            return np.zeros(0, np.int64)
+        d2 = (np.sum(resid * resid, axis=1, keepdims=True)
+              - 2.0 * resid @ C.T + np.sum(C * C, axis=1)[None, :])
+        return d2.argmin(axis=1)
+
+    usage_in = usage if usage is not None else state.usage
+    report: Dict[str, int] = {}
+    new_usage: List[np.ndarray] = []
+    # the eval-mode (Eq. 9) residual cascade is recomputed layer by
+    # layer *after* each layer's reseed: a revived coarse code changes
+    # the residuals the next layer quantizes, and seeding layer l+1
+    # from pre-reset residuals would plant rows the published cascade
+    # never produces
+    resid = h.copy()
+    for l in range(L):
+        K = cfg.codebook_sizes[l]
+        u = np.asarray(usage_in[l], np.float32).copy()
+        u = u / max(float(u.sum()), 1e-12)
+        dead = np.flatnonzero(u < cfg.dead_floor / K)
+        live = np.flatnonzero(u >= cfg.dead_floor / K)
+        if len(dead) == 0 or len(live) == 0 or len(h) == 0:
+            report[f"reset_layer{l}"] = 0
+            new_usage.append(u)
+            resid = resid - books[l][_argmin(resid, books[l])]
+            continue
+        # donors: live codes, heaviest first (stable ties by index)
+        donors = live[np.argsort(-u[live], kind="stable")]
+        a = _argmin(resid, books[l])       # pre-reset donor membership
+        rms = float(np.sqrt(np.mean(resid * resid))) or 1.0
+        for j_i, j in enumerate(np.sort(dead)):
+            donor = int(donors[j_i % len(donors)])
+            members = np.flatnonzero(a == donor)
+            pool = members if len(members) else np.arange(len(resid))
+            rng = np.random.default_rng((seed, step, l, int(j)))
+            pick = int(pool[min(int(rng.random() * len(pool)),
+                                len(pool) - 1)])
+            jitter = rng.normal(size=resid.shape[1]).astype(np.float32)
+            books[l][j] = resid[pick] + jitter * (1e-3 * rms)
+        u[dead] = float(u[live].mean())
+        new_usage.append(u / max(float(u.sum()), 1e-12))
+        report[f"reset_layer{l}"] = int(len(dead))
+        resid = resid - books[l][_argmin(resid, books[l])]
+
+    new_params = dict(params)
+    new_params["codebooks"] = {
+        f"layer{l}": jnp.asarray(books[l]) for l in range(L)}
+    new_state = RQState(state.hists,
+                        tuple(jnp.asarray(u) for u in new_usage),
+                        state.ptr, state.filled)
+    return new_params, new_state, report
 
 
 def reconstruct(params: Dict[str, Any], codes: jnp.ndarray,

@@ -215,6 +215,10 @@ def _forward_losses(params, cfg: RankGraph2Config, batch, pool, rq_state,
                            train=train)
     tasks["rq_recon"] = rq_out["l_recon"]
     tasks["rq_reg"] = rq_out["l_reg"]
+    if cfg.rq.util_coef > 0:
+        # utilization balance rides as its own uncertainty-weighted task
+        # (a constant-zero task would drive its learned log-var to -inf)
+        tasks["rq_util"] = rq_out["l_util"]
     # contrastive on reconstructed embeddings (L'): recompute the positive
     # pair similarity with straight-through recon endpoints.
     recon_st = rq_out["recon_st"]
@@ -300,6 +304,32 @@ def make_eval_step(cfg: RankGraph2Config, ctx: ShardingCtx = NULL_CTX, *,
         return tasks
 
     return eval_step
+
+
+# ---------------------------------------------------------------------------
+# self-healing: dead-code reset over the whole TrainState
+# ---------------------------------------------------------------------------
+
+def reset_dead_codes(state: TrainState, probe_emb: np.ndarray,
+                     cfg: RankGraph2Config, *, seed: int, step: int = 0,
+                     usage=None) -> Tuple[TrainState, Dict[str, int]]:
+    """Run ``rq_index.dead_code_reset`` against a TrainState.
+
+    Host-side and functional: only the dead codebook rows and the RQ
+    usage counters change, the rest of the state (optimizer moments,
+    histograms, pool, step) is carried through untouched, so the
+    donated jitted step keeps its compiled trace.  ``probe_emb`` is a
+    (P, d_embed) sample of current embeddings supplying the donor
+    residuals; ``usage`` optionally overrides the EMA counters with
+    published corpus occupancy (the repair path).
+    """
+    new_rq, new_rq_state, report = RQ.dead_code_reset(
+        state.params["rq"], state.rq_state, probe_emb, cfg.rq,
+        seed=seed, step=step, usage=usage)
+    params = dict(state.params)
+    params["rq"] = new_rq
+    return (TrainState(params, state.opt_state, new_rq_state,
+                       state.pool, state.step), report)
 
 
 # ---------------------------------------------------------------------------

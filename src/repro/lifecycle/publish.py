@@ -74,6 +74,40 @@ def build_snapshot(version: int, user_emb: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# index health: metrics computable from the snapshot alone
+# ---------------------------------------------------------------------------
+
+def snapshot_health(snap: IndexSnapshot) -> Dict[str, float]:
+    """First-class index-health metrics needing no eval world: per-layer
+    utilization of the published user+item assignments (the collapse
+    floor the gate thresholds), and the balance of the coarse inverted
+    lists — ``coarse_list_balance`` is the normalized entropy of the
+    layer-0 member-list sizes (1 = perfectly flat lists, -> 0 at
+    collapse) and ``coarse_list_max_share`` the heaviest list's share of
+    the user corpus (what bounds serving tail latency)."""
+    all_codes = np.concatenate([snap.user_codes, snap.item_codes], axis=0)
+    util = codes_utilization(all_codes, snap.codebook_sizes)
+    out = {f"util_layer{l}": float(u) for l, u in enumerate(util)}
+    out["codebook_util_min"] = float(min(util)) if util else 0.0
+    k0 = snap.codebook_sizes[0]
+    stride = max(snap.n_clusters // k0, 1)
+    ptr = snap.member_ptr
+    sizes0 = np.array([ptr[(c + 1) * stride] - ptr[c * stride]
+                       for c in range(k0)], np.float64)
+    tot = float(sizes0.sum())
+    if tot <= 0 or k0 <= 1:
+        out["coarse_list_balance"] = 0.0 if k0 > 1 else 1.0
+        out["coarse_list_max_share"] = 0.0 if tot <= 0 else 1.0
+        return out
+    p = sizes0 / tot
+    nz = p[p > 0]
+    out["coarse_list_balance"] = float(-np.sum(nz * np.log(nz))
+                                       / np.log(k0))
+    out["coarse_list_max_share"] = float(p.max())
+    return out
+
+
+# ---------------------------------------------------------------------------
 # recall gate: cluster-routed retrieval vs exact KNN
 # ---------------------------------------------------------------------------
 
@@ -205,12 +239,9 @@ def evaluate_snapshot(snap: IndexSnapshot, user_emb: np.ndarray,
         out["item_recall_index"] = float(routed_i)
         out["item_recall_ratio"] = float(routed_i / max(exact_i, 1e-12))
         out["item_recall_k"] = float(k_i2i)
-    # collapse floor: utilization of the published user+item codes
-    all_codes = np.concatenate([snap.user_codes, snap.item_codes], axis=0)
-    util = codes_utilization(all_codes, snap.codebook_sizes)
-    for l, u in enumerate(util):
-        out[f"util_layer{l}"] = float(u)
-    out["codebook_util_min"] = float(min(util)) if util else 0.0
+    # collapse floor + list balance: utilization of the published
+    # user+item codes and the flatness of the coarse inverted lists
+    out.update(snapshot_health(snap))
     if hitrate_pairs is not None and len(hitrate_pairs):
         hr_orig, hr_recon = E.index_hitrate(
             user_emb, user_recon, hitrate_pairs, ks=(10,), seed=seed)

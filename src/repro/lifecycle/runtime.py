@@ -35,7 +35,7 @@ from repro.core.graph_builder import EngagementLog, HeteroGraph
 from repro.data.edge_dataset import (EdgeDataset, NeighborTables,
                                      incremental_refresh)
 from repro.lifecycle.publish import (build_snapshot, encode_corpus,
-                                     evaluate_snapshot)
+                                     evaluate_snapshot, snapshot_health)
 from repro.lifecycle.snapshot import IndexSnapshot, SnapshotStore
 from repro.lifecycle.swap import SwapServer
 
@@ -61,6 +61,16 @@ class LifecycleConfig:
                           layer's published-code utilization must stay
                           above this fraction or the snapshot is
                           rejected (0 disables);
+    ``min_hitrate_recon`` §5.2.3 reconstruction-health floor: the RQ
+                          reconstruction's hitrate@10 must stay above
+                          this value (0 disables) — catches the
+                          1.0 -> 0.0 flapping a collapse causes;
+    ``repair_attempts``   self-healing: when a gate trips, run up to
+                          this many bounded repair bursts (dead-code
+                          reset from published occupancy + short
+                          re-train + re-publish) instead of only
+                          refusing to publish (0 = refuse-only);
+    ``repair_steps``      training-burst length of one repair attempt;
     ``i2i_k``             offline I2I KNN width published per item;
     ``queue_len`` / ``recency_s`` / ``ring_capacity``
                           serving-store geometry: cluster ring-buffer
@@ -78,6 +88,9 @@ class LifecycleConfig:
     min_recall_ratio: float = 0.0
     min_item_recall_ratio: float = 0.0
     min_codebook_util: float = 0.0
+    min_hitrate_recon: float = 0.0
+    repair_attempts: int = 0
+    repair_steps: int = 30
     recall_k: int = 100
     recall_queries: int = 400
     n_probe_factor: int = 4
@@ -177,18 +190,61 @@ class LifecycleRuntime:
         return report
 
     def train_burst(self, steps: Optional[int] = None) -> Dict[str, float]:
-        """Stage 2: co-train model + RQ index on the current dataset."""
+        """Stage 2: co-train model + RQ index on the current dataset.
+
+        When ``cfg.rq.reset_every > 0`` the burst interleaves dead-code
+        reset passes: every ``reset_every`` steps *and after the final
+        step*, codes whose EMA usage fell below the floor are re-seeded
+        from high-load clusters' residuals (``rq_index
+        .dead_code_reset``).  Each pass embeds a fresh probe — the whole
+        embedding cloud translates under contrastive training, so rows
+        planted from a stale probe are born dead — and the closing pass
+        means a publish right after the burst encodes with a codebook
+        adapted to the *current* cloud, not one ``reset_every`` steps
+        stale."""
         steps = steps if steps is not None else self.lcfg.steps_per_cycle
         per_type = {et: self.lcfg.batch_per_type
                     for et in ("uu", "ui", "ii")}
         m: Dict[str, Any] = {}
         base = int(self.state.step)
+        every = self.cfg.rq.reset_every
+        resets = 0
         for t in range(steps):
             batch = jax.tree.map(jnp.asarray, self.dataset.sample_batch(
                 base + t, self.seed, per_type))
             self.state, m = self._step_fn(self.state, batch,
                                           jax.random.key(1000 + base + t))
-        return {k: float(v) for k, v in m.items()}
+            if every > 0 and ((t + 1) % every == 0 or t + 1 == steps):
+                self.state, rep = T.reset_dead_codes(
+                    self.state, self._probe_embeddings(base + t + 1),
+                    self.cfg, seed=self.seed, step=base + t + 1)
+                resets += sum(rep.values())
+        out = {k: float(v) for k, v in m.items()}
+        if every > 0:
+            out["dead_code_resets"] = float(resets)
+        return out
+
+    def _probe_embeddings(self, step: int) -> np.ndarray:
+        """A keyed-uniform sample of *freshly embedded* nodes for the
+        reset pass.  Freshness is load-bearing: the embedding cloud
+        drifts coherently under contrastive training (it is rotation-
+        invariant; nothing anchors absolute positions), so re-seeding
+        from cached corpus embeddings plants rows where the data no
+        longer is."""
+        n_probe = self.cfg.rq.reset_probe
+        nu, ni = self.g.n_users, self.g.n_items
+        rng = np.random.default_rng((self.seed, 91, step))
+        ids = np.sort(rng.choice(nu + ni, min(n_probe, nu + ni),
+                                 replace=False))
+        parts = []
+        for node_type, sel in ((M.USER, ids[ids < nu]),
+                               (M.ITEM, ids[ids >= nu])):
+            if len(sel):
+                parts.append(T.embed_all(
+                    self.state.params, self.cfg, self.dataset,
+                    node_type=node_type, ids=sel,
+                    batch=min(self.lcfg.embed_batch, len(sel))))
+        return np.concatenate(parts, axis=0)
 
     def embed_corpus(self) -> None:
         nu, ni = self.g.n_users, self.g.n_items
@@ -201,18 +257,46 @@ class LifecycleRuntime:
 
     def gate_passes(self, snap: IndexSnapshot) -> bool:
         """The swap/persist gate: every enabled floor must hold —
-        user-side recall ratio, §5.2.2 item-side recall ratio, and the
-        published-code utilization (collapse) floor."""
+        user-side recall ratio, §5.2.2 item-side recall ratio, the
+        published-code utilization (collapse) floor, and the §5.2.3
+        reconstruction-hitrate floor."""
         m = snap.metrics
         for gate, key in ((self.lcfg.min_recall_ratio, "recall_ratio"),
                           (self.lcfg.min_item_recall_ratio,
                            "item_recall_ratio"),
                           (self.lcfg.min_codebook_util,
-                           "codebook_util_min")):
+                           "codebook_util_min"),
+                          (self.lcfg.min_hitrate_recon,
+                           "hitrate10_recon")):
             val = m.get(key)
             if gate > 0 and val is not None and val < gate:
                 return False
         return True
+
+    def repair_burst(self, snap: IndexSnapshot) -> Dict[str, Any]:
+        """Self-healing: one bounded repair pass after a tripped gate.
+
+        Deadness is judged from the *published* corpus occupancy of
+        ``snap`` (EMA counters can look healthy long after the published
+        assignments collapsed — e.g. an injected all-equal codebook),
+        dead codes are re-seeded from a keyed-uniform sample of the
+        freshly published embeddings, and a short re-train burst
+        (``lcfg.repair_steps``) settles the revived codes before the
+        caller re-publishes."""
+        from repro.core.rq_index import per_code_counts
+        all_codes = np.concatenate([snap.user_codes, snap.item_codes],
+                                   axis=0)
+        usage = per_code_counts(all_codes, snap.codebook_sizes)
+        emb = np.concatenate([self._last_user_emb, self._last_item_emb],
+                             axis=0)
+        rng = np.random.default_rng((self.seed, 93, self.version))
+        n = min(self.cfg.rq.reset_probe, len(emb))
+        probe = emb[np.sort(rng.choice(len(emb), n, replace=False))]
+        self.state, resets = T.reset_dead_codes(
+            self.state, probe, self.cfg, seed=self.seed,
+            step=self.version, usage=usage)
+        train = self.train_burst(self.lcfg.repair_steps)
+        return dict(resets=resets, train=train)
 
     def publish(self) -> IndexSnapshot:
         """Stage 3: materialize + gate + persist the next version.
@@ -237,9 +321,13 @@ class LifecycleRuntime:
                 n_probe_factor=self.lcfg.n_probe_factor,
                 hitrate_pairs=self._hitrate_pairs(),
                 item_emb=self._last_item_emb)
-            snap = dataclasses.replace(
-                snap, gate_metrics=tuple(sorted(
-                    (k, float(v)) for k, v in metrics.items())))
+        else:
+            # ungated publication still carries first-class index-health
+            # metrics (utilization + list balance need no eval world)
+            metrics = snapshot_health(snap)
+        snap = dataclasses.replace(
+            snap, gate_metrics=tuple(sorted(
+                (k, float(v)) for k, v in metrics.items())))
         if self.store is not None and self.gate_passes(snap):
             self.store.publish(snap)
         return snap
@@ -286,6 +374,21 @@ class LifecycleRuntime:
         report["train"] = self.train_burst()
         if self.cycle % max(self.lcfg.publish_every, 1) == 0:
             snap = self.publish()
+            # self-healing: a tripped gate triggers bounded repair
+            # bursts (reset + short re-train + re-publish) so the cycle
+            # converges to a publishable index instead of wedging
+            attempts = 0
+            repairs = []
+            while (not self.gate_passes(snap)
+                   and attempts < self.lcfg.repair_attempts):
+                attempts += 1
+                repairs.append(self.repair_burst(snap))
+                snap = self.publish()
+            if attempts:
+                report["repair"] = dict(
+                    attempts=attempts,
+                    healed=self.gate_passes(snap),
+                    resets=[r["resets"] for r in repairs])
             report["publish"] = dict(version=snap.version,
                                      **snap.metrics)
             if self.gate_passes(snap):
@@ -297,6 +400,7 @@ class LifecycleRuntime:
                     item_recall_ratio=snap.metrics.get(
                         "item_recall_ratio"),
                     codebook_util_min=snap.metrics.get(
-                        "codebook_util_min"))
+                        "codebook_util_min"),
+                    hitrate10_recon=snap.metrics.get("hitrate10_recon"))
         self.cycle += 1
         return report

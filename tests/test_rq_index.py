@@ -1,9 +1,15 @@
-"""Co-learned RQ index tests (paper §4.4)."""
+"""Co-learned RQ index tests (paper §4.4) + index-health properties:
+assignment-range / residual-cascade invariants, published-utilization
+semantics, and the dead-code reset guarantees the self-healing
+lifecycle leans on."""
+import dataclasses as dc
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_fallback import given, settings, st
 from repro.configs.base import RQConfig
 from repro.core import rq_index as RQ
 
@@ -78,7 +84,7 @@ def test_biased_selection_favors_underused_codes():
     cfg, params, state, h = _setup(sizes=(8,))
     # fake history: code 0 used overwhelmingly
     hist = state.hists[0].at[:, 0].set(100.0)
-    state = RQ.RQState((hist,), state.ptr, state.filled)
+    state = RQ.RQState((hist,), state.usage, state.ptr, state.filled)
     out_b = RQ.rq_forward(params, state, h, cfg, train=True)
     import dataclasses as dc
     out_u = RQ.rq_forward(params, state, h,
@@ -126,3 +132,251 @@ def test_straight_through_gradient_reaches_encoder():
 
     g = jax.grad(f)(h)
     assert float(jnp.abs(g).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# utilization-balancing loss (l_util) semantics
+# ---------------------------------------------------------------------------
+
+def test_util_loss_orders_collapse_above_balance():
+    """The load-balance gap must score a collapsed batch strictly above
+    a perfectly spread one, inside [0, util_coef]."""
+    d, K = 6, 8
+    cfg = RQConfig(codebook_sizes=(K,), hist_len=4, util_coef=1.0,
+                   biased_selection=False)
+    _, _, state = RQ.init_rq(jax.random.key(0), cfg, d)
+    C = np.asarray(jax.random.normal(jax.random.key(1), (K, d)),
+                   np.float32)
+    params = {"codebooks": {"layer0": jnp.asarray(C)}}
+    balanced = jnp.asarray(np.repeat(C, 5, axis=0))    # every code wins
+    collapsed = jnp.asarray(np.tile(C[0], (5 * K, 1)))  # code 0 wins all
+    lb = float(RQ.rq_forward(params, state, balanced, cfg)["l_util"])
+    lc = float(RQ.rq_forward(params, state, collapsed, cfg)["l_util"])
+    assert 0.0 <= lb <= 1.0 + 1e-6 and 0.0 <= lc <= 1.0 + 1e-6
+    assert lc > lb
+
+
+def test_util_loss_zero_when_disabled():
+    cfg, params, state, h = _setup()
+    out = RQ.rq_forward(params, state, h,
+                        dc.replace(cfg, util_coef=0.0))
+    assert float(out["l_util"]) == 0.0
+
+
+def test_usage_ema_tracks_argmin_not_routing():
+    """EMA usage must reflect Eq. 9 argmin occupancy even when Eq. 13
+    biased selection routes the batch elsewhere — routed histograms stay
+    flat at full argmin collapse, so they cannot detect a dead code."""
+    d, K = 6, 8
+    cfg = RQConfig(codebook_sizes=(K,), hist_len=4, usage_ema=0.0,
+                   biased_selection=True)
+    _, _, state = RQ.init_rq(jax.random.key(0), cfg, d)
+    C = np.asarray(jax.random.normal(jax.random.key(1), (K, d)),
+                   np.float32)
+    params = {"codebooks": {"layer0": jnp.asarray(C)}}
+    # bias routing away from code 0 (huge rolling-hist mass on it);
+    # points sit NEAR code 0 (not at it — p_soft would saturate and no
+    # histogram ratio could outvote it), argmin-closest to it
+    state = RQ.RQState((state.hists[0].at[:, 0].set(1e4),),
+                       state.usage, state.ptr, state.filled)
+    rng = np.random.default_rng(0)
+    h = np.tile(C[0], (32, 1)) + rng.normal(
+        scale=0.25, size=(32, d)).astype(np.float32)
+    d2 = (np.sum(h * h, 1, keepdims=True) - 2 * h @ C.T
+          + np.sum(C * C, 1)[None])
+    assert (d2.argmin(1) == 0).all()       # construction sanity
+    h = jnp.asarray(h)
+    out = RQ.rq_forward(params, state, h, cfg, train=True)
+    routed = np.bincount(np.asarray(out["codes"][:, 0]), minlength=K)
+    assert routed[0] < 32                  # Eq. 13 routed traffic away
+    usage = np.asarray(out["state"].usage[0])
+    assert usage.argmax() == 0             # ...but usage saw the argmin
+    np.testing.assert_allclose(usage[0], 1.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# index-health properties (hypothesis; skip cleanly without the dep)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 48), st.integers(2, 12), st.integers(0, 2 ** 16))
+def test_property_codes_always_in_range(B, d, seed):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    for sizes in ((5,), (7, 3)):
+        cfg = RQConfig(codebook_sizes=sizes, hist_len=4)
+        params, _, state = RQ.init_rq(jax.random.key(seed % 97), cfg, d)
+        for biased in (True, False):
+            out = RQ.rq_forward(params, state, h,
+                                dc.replace(cfg, biased_selection=biased),
+                                train=True)
+            codes = np.asarray(out["codes"])
+            assert codes.shape == (B, len(sizes))
+            for l, K in enumerate(sizes):
+                assert codes[:, l].min() >= 0
+                assert codes[:, l].max() < K
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 48), st.integers(2, 12), st.integers(0, 2 ** 16))
+def test_property_residual_norm_nonincreasing(B, d, seed):
+    """With a zero code available in every layer, the Eq. 9 argmin
+    cascade can never increase the residual norm: ``||r - C[k]|| =
+    min_j ||r - C_j|| <= ||r - 0||``."""
+    rng = np.random.default_rng(seed)
+    h = rng.normal(size=(B, d)).astype(np.float32)
+    sizes = (6, 4)
+    cfg = RQConfig(codebook_sizes=sizes, hist_len=4)
+    params, _, state = RQ.init_rq(jax.random.key(seed % 89), cfg, d)
+    books = {f"layer{l}": np.asarray(params["codebooks"][f"layer{l}"],
+                                     np.float32).copy()
+             for l in range(len(sizes))}
+    for l in range(len(sizes)):
+        books[f"layer{l}"][0] = 0.0
+    params = {"codebooks": {k: jnp.asarray(v) for k, v in books.items()}}
+    out = RQ.rq_forward(params, state, jnp.asarray(h), cfg, train=False)
+    codes = np.asarray(out["codes"])
+    resid = h.copy()
+    prev = np.linalg.norm(resid, axis=1)
+    for l in range(len(sizes)):
+        resid = resid - books[f"layer{l}"][codes[:, l]]
+        cur = np.linalg.norm(resid, axis=1)
+        assert (cur <= prev + 1e-5).all(), (l, cur.max(), prev.min())
+        prev = cur
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 40), st.integers(1, 9), st.integers(0, 2 ** 16))
+def test_property_codes_utilization_bounds(n, K, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, K, size=(n, 2))
+    util = RQ.codes_utilization(codes, (K, K))
+    for l, u in enumerate(util):
+        assert 0.0 <= u <= 1.0
+        if n == 0:
+            assert u == 0.0            # exactly 0 only for no assignments
+        else:
+            assert u >= 1.0 / K
+            assert u == len(np.unique(codes[:, l])) / K
+
+
+def test_codes_utilization_edge_cases():
+    """Empty corpus, single row, 1-D codes, single-code and degenerate
+    codebooks — every edge the publication gate can meet."""
+    assert RQ.codes_utilization(np.zeros((0, 2), np.int32),
+                                (8, 4)) == [0.0, 0.0]
+    assert RQ.codes_utilization(np.array([[3, 1]]), (8, 4)) == \
+        [1.0 / 8, 1.0 / 4]
+    assert RQ.codes_utilization(np.array([2, 2, 5]), (8,)) == [2.0 / 8]
+    assert RQ.codes_utilization(np.zeros((3, 1), np.int32), (1,)) == [1.0]
+    assert RQ.codes_utilization(np.zeros((3, 1), np.int32), (0,)) == [0.0]
+
+
+def test_per_code_counts_edge_cases():
+    counts = RQ.per_code_counts(np.array([[0, 1], [0, 3], [2, 1]]), (4, 4))
+    np.testing.assert_array_equal(counts[0], [2, 0, 1, 0])
+    np.testing.assert_array_equal(counts[1], [0, 2, 0, 1])
+    empty = RQ.per_code_counts(np.zeros((0, 2), np.int64), (3, 2))
+    np.testing.assert_array_equal(empty[0], np.zeros(3))
+    assert RQ.per_code_counts(np.zeros((2, 1), np.int64), (0,))[0].size == 0
+
+
+# ---------------------------------------------------------------------------
+# dead-code reset: the self-healing pass
+# ---------------------------------------------------------------------------
+
+def _reset_setup(sizes, d=6, n=60, seed=0):
+    cfg = RQConfig(codebook_sizes=sizes, hist_len=4, dead_floor=0.25)
+    params, _, state = RQ.init_rq(jax.random.key(seed), cfg, d)
+    h = np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+    return cfg, params, state, h
+
+
+def test_dead_code_reset_live_rows_bit_unchanged():
+    cfg, params, state, h = _reset_setup((8, 4))
+    usage = [np.array([5, 5, 5, 0, 0, 5, 5, 5], np.float32),
+             np.array([1, 1, 0, 1], np.float32)]
+    new_params, new_state, rep = RQ.dead_code_reset(
+        params, state, h, cfg, seed=7, usage=usage)
+    assert rep == {"reset_layer0": 2, "reset_layer1": 1}
+    for l, dead in ((0, [3, 4]), (1, [2])):
+        before = np.asarray(params["codebooks"][f"layer{l}"])
+        after = np.asarray(new_params["codebooks"][f"layer{l}"])
+        live = np.setdiff1d(np.arange(cfg.codebook_sizes[l]), dead)
+        np.testing.assert_array_equal(before[live], after[live])
+        assert not np.array_equal(before[dead], after[dead])
+        # revived usage restarts at the live mean: not instantly dead
+        u = np.asarray(new_state.usage[l])
+        assert (u >= cfg.dead_floor / cfg.codebook_sizes[l] - 1e-7).all()
+    # histograms / ring pointers ride through untouched
+    for a, b in zip(state.hists, new_state.hists):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(new_state.ptr) == int(state.ptr)
+
+
+def test_dead_code_reset_moves_assignments_only_to_revived():
+    """Live rows are bit-unchanged, so any probe point whose argmin
+    assignment changes can only have moved TO a revived code (the
+    intended split of an overloaded cluster) — never been reshuffled
+    between two live codes."""
+    cfg, params, state, h = _reset_setup((8,), n=80, seed=1)
+    usage = [np.array([1, 1, 1, 1, 1, 0, 0, 0], np.float32)]
+    dead = {5, 6, 7}
+
+    def assign(C):
+        d2 = (np.sum(h * h, axis=1, keepdims=True) - 2.0 * h @ C.T
+              + np.sum(C * C, axis=1)[None, :])
+        return d2.argmin(axis=1)
+
+    before = assign(np.asarray(params["codebooks"]["layer0"]))
+    new_params, _, rep = RQ.dead_code_reset(params, state, h, cfg,
+                                            seed=11, usage=usage)
+    assert rep["reset_layer0"] == 3
+    after = assign(np.asarray(new_params["codebooks"]["layer0"]))
+    live_members = np.flatnonzero(~np.isin(before, list(dead)))
+    moved = live_members[before[live_members] != after[live_members]]
+    assert len(moved) > 0                  # the reset actually split load
+    # a live code's member is never reshuffled to another live code —
+    # it either stays or is stolen by a revived row (the intended split)
+    assert set(after[moved].tolist()) <= dead
+
+
+def test_dead_code_reset_bit_deterministic():
+    cfg, params, state, h = _reset_setup((8, 4), seed=2)
+    usage = [np.array([9, 0, 9, 0, 9, 0, 9, 0], np.float32),
+             np.array([1, 0, 1, 0], np.float32)]
+    a1, s1, r1 = RQ.dead_code_reset(params, state, h, cfg, seed=5,
+                                    step=3, usage=usage)
+    a2, s2, r2 = RQ.dead_code_reset(params, state, h, cfg, seed=5,
+                                    step=3, usage=usage)
+    assert r1 == r2
+    for l in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(a1["codebooks"][f"layer{l}"]),
+            np.asarray(a2["codebooks"][f"layer{l}"]))
+        np.testing.assert_array_equal(np.asarray(s1.usage[l]),
+                                      np.asarray(s2.usage[l]))
+    # a different (seed, step) key draws different reseeds
+    a3, _, _ = RQ.dead_code_reset(params, state, h, cfg, seed=6,
+                                  step=3, usage=usage)
+    assert not np.array_equal(np.asarray(a1["codebooks"]["layer0"]),
+                              np.asarray(a3["codebooks"]["layer0"]))
+
+
+def test_dead_code_reset_noop_cases():
+    cfg, params, state, h = _reset_setup((4,), n=20, seed=3)
+    # all codes live -> no-op
+    p1, _, r1 = RQ.dead_code_reset(params, state, h, cfg, seed=0,
+                                   usage=[np.ones(4, np.float32)])
+    assert r1 == {"reset_layer0": 0}
+    np.testing.assert_array_equal(np.asarray(p1["codebooks"]["layer0"]),
+                                  np.asarray(params["codebooks"]["layer0"]))
+    # all codes dead -> no donors -> no-op (never trades the whole book)
+    p2, _, r2 = RQ.dead_code_reset(params, state, h, cfg, seed=0,
+                                   usage=[np.zeros(4, np.float32)])
+    assert r2 == {"reset_layer0": 0}
+    # empty probe -> no-op
+    p3, _, r3 = RQ.dead_code_reset(
+        params, state, np.zeros((0, 6), np.float32), cfg, seed=0,
+        usage=[np.array([1, 0, 1, 0], np.float32)])
+    assert r3 == {"reset_layer0": 0}

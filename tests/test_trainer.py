@@ -239,3 +239,37 @@ def test_donated_step_checkpoint_roundtrip(tmp_path, tiny_cfg,
     for a, b in zip(jax.tree.leaves(s_full), jax.tree.leaves(s_resumed)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
+
+
+def test_donated_step_survives_dead_code_reset(tiny_cfg, tiny_dataset):
+    """The self-healing pass swaps codebook rows host-side mid-burst;
+    the already-compiled donated step must keep running on the new
+    state (same pytree structure/dtypes), and optimizer moments must
+    ride through the functional swap untouched."""
+    state, _, opt = T.init_state(jax.random.key(0), tiny_cfg,
+                                 pool_size=128)
+    step = T.make_train_step(tiny_cfg, opt)
+    per_type = {"uu": 16, "ui": 16, "ii": 16}
+    state, _ = _step_n(state, step, tiny_dataset, per_type, 0, 2)
+    probe = np.random.default_rng(0).normal(
+        size=(64, tiny_cfg.d_embed)).astype(np.float32)
+    sizes = tiny_cfg.rq.codebook_sizes
+    usage = [np.r_[np.ones(n // 2), np.zeros(n - n // 2)]
+             .astype(np.float32) for n in sizes]
+    opt_before = [np.asarray(x) for x in jax.tree.leaves(state.opt_state)]
+    books_before = [np.asarray(state.params["rq"]["codebooks"][f"layer{l}"])
+                    for l in range(len(sizes))]
+    state, rep = T.reset_dead_codes(state, probe, tiny_cfg, seed=3,
+                                    usage=usage)
+    assert sum(rep.values()) == sum(n - n // 2 for n in sizes)
+    for a, b in zip(opt_before, jax.tree.leaves(state.opt_state)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    for l, n in enumerate(sizes):                  # live rows untouched
+        after = np.asarray(state.params["rq"]["codebooks"][f"layer{l}"])
+        np.testing.assert_array_equal(books_before[l][: n // 2],
+                                      after[: n // 2])
+        assert not np.array_equal(books_before[l][n // 2:],
+                                  after[n // 2:])
+    state, m = _step_n(state, step, tiny_dataset, per_type, 0, 2, start=2)
+    assert int(state.step) == 4
+    assert np.isfinite(float(m["total"]))
