@@ -29,6 +29,7 @@ def main(argv=None) -> int:
     from benchmarks import serving_concurrency as SC
     from benchmarks import serving_kernels as SK
     from benchmarks import train_throughput as TT
+    from benchmarks import vmem_report as VMR
 
     jobs = [
         ("table2_user_recall", PT.table2_user_recall),
@@ -44,6 +45,7 @@ def main(argv=None) -> int:
         ("lifecycle_swap", LS.run),
         ("serving_concurrency", SC.run),
         ("roofline", RL.run),
+        ("vmem_report", VMR.run),
     ]
     if args.only:
         jobs = [(n, f) for n, f in jobs
@@ -70,6 +72,9 @@ def main(argv=None) -> int:
                 elif "modeled_cost_reduction" in out:
                     derived = (f"cost_reduction="
                                f"{out['modeled_cost_reduction']*100:.0f}%")
+                elif "n_over_budget" in out:
+                    derived = (f"kernels={out['n_kernels']};over_budget="
+                               f"{out['n_over_budget']}")
                 elif "rows" in out and name == "roofline" and out["rows"]:
                     worst = min(out["rows"],
                                 key=lambda r: r["projected_mfu"])

@@ -1,0 +1,34 @@
+"""Static VMEM residency report for every Pallas kernel.
+
+Thin benchmark-harness wrapper around the ``vmem-budget`` analysis rule:
+re-derives each kernel's estimated VMEM working set at production dims
+and writes ``benchmarks/results/vmem_report.json``.  Purely static — no
+devices, no compilation — so it runs anywhere the repo imports.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis import DEFAULT_BUDGET_BYTES, vmem_report
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "vmem_report.json")
+KERNELS = os.path.join(os.path.dirname(__file__), os.pardir, "src",
+                       "repro", "kernels")
+
+
+def run(full: bool = False) -> dict:
+    report = vmem_report(budget_bytes=DEFAULT_BUDGET_BYTES,
+                         report_path=RESULTS,
+                         kernels_path=os.path.normpath(KERNELS))
+    print(f"{report['n_kernels']} kernels, "
+          f"{report['n_over_budget']} over the "
+          f"{report['budget_mib']:.0f} MiB budget")
+    for k in report["kernels"]:
+        flag = "  OVER (suppressed with reason)" if k["over_budget"] else ""
+        print(f"  {k['kernel']:36s} {k['vmem_mib']:8.3f} MiB{flag}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""repro.analysis — stdlib-``ast`` static checks for the repo's own
+invariants: lock discipline in the serving tier, donation safety on the
+training hot path, determinism/trace purity in library code, and the
+per-kernel VMEM budget.
+
+Run: ``PYTHONPATH=src python -m repro.analysis src/ [--format json]``.
+"""
+from repro.analysis.base import (Finding, ModuleContext, Pragma, Rule,
+                                 apply_suppressions, parse_pragmas)
+from repro.analysis.rules import (ALL_RULE_CLASSES, default_rules,
+                                  rules_by_name)
+from repro.analysis.runner import (active, analyze_file, format_json,
+                                   format_text, iter_source_files,
+                                   run_analysis, select_rules)
+from repro.analysis.rules.vmem_budget import (DEFAULT_BUDGET_BYTES,
+                                              VmemBudgetRule)
+
+__all__ = [
+    "Finding", "ModuleContext", "Pragma", "Rule",
+    "apply_suppressions", "parse_pragmas",
+    "ALL_RULE_CLASSES", "default_rules", "rules_by_name",
+    "active", "analyze_file", "format_json", "format_text",
+    "iter_source_files", "run_analysis", "select_rules",
+    "DEFAULT_BUDGET_BYTES", "VmemBudgetRule", "vmem_report",
+]
+
+
+def vmem_report(budget_bytes: int = DEFAULT_BUDGET_BYTES,
+                report_path: str = "benchmarks/results/vmem_report.json",
+                kernels_path: str = "src/repro/kernels"):
+    """Run only the VMEM pass and write the residency report; returns
+    the parsed report dict (used by ``benchmarks/run.py``)."""
+    import json
+
+    rule = VmemBudgetRule(budget_bytes=budget_bytes,
+                          report_path=report_path)
+    run_analysis([kernels_path], rules=[rule])
+    with open(report_path) as f:
+        return json.load(f)

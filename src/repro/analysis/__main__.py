@@ -1,0 +1,55 @@
+"""CLI: ``python -m repro.analysis [paths] [--rules ...] [--format ...]``.
+
+Exit status 0 when every finding is suppressed (with a reason), 1
+otherwise — CI runs this over ``src/`` and fails on any unsuppressed
+finding.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis.rules import ALL_RULE_CLASSES
+from repro.analysis.runner import (active, format_json, format_text,
+                                   run_analysis, select_rules)
+
+DEFAULT_VMEM_REPORT = "benchmarks/results/vmem_report.json"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static checks for the repo's concurrency, "
+                    "donation, determinism, and VMEM invariants.")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to analyze "
+                             "(default: src)")
+    parser.add_argument(
+        "--rules", nargs="+", metavar="RULE",
+        help="subset of rules to run: "
+             + ", ".join(c.name for c in ALL_RULE_CLASSES))
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--budget-mib", type=float, default=16.0,
+                        help="per-core VMEM budget (default 16 MiB)")
+    parser.add_argument(
+        "--vmem-report", default=DEFAULT_VMEM_REPORT,
+        help="where the vmem-budget rule writes its residency table "
+             "('' disables)")
+    args = parser.parse_args(argv)
+
+    vmem_kwargs = {
+        "budget_bytes": int(args.budget_mib * 1024 * 1024),
+        "report_path": args.vmem_report or None,
+    }
+    rules = select_rules(args.rules, **vmem_kwargs)
+    findings = run_analysis(args.paths, rules=rules)
+
+    fmt = format_json if args.format == "json" else format_text
+    print(fmt(findings))
+    return 1 if active(findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

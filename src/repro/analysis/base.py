@@ -1,0 +1,151 @@
+"""Core types for the repro static-analysis toolkit.
+
+Everything here is stdlib-``ast`` only: the analyzer must be importable
+(and runnable in CI) without jax/numpy so a broken environment can never
+mask an invariant violation.
+
+A *rule* is one pass over a parsed module that returns ``Finding``s.
+Rules are pure: they may keep accumulation state for a ``finalize()``
+report (the VMEM residency table) but never mutate the tree.
+
+Suppressions are inline pragmas::
+
+    some_call()   # repro: disable=determinism — benign stage timing
+
+A pragma suppresses matching findings on its own line; a comment-only
+pragma line also covers the next non-blank source line (so multi-line
+statements can carry the pragma just above their anchor).  A pragma
+without a written reason still suppresses, but emits a ``suppression``
+finding of its own — the acceptance bar is that every disable carries a
+reason.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+#: pragma grammar: `# repro: disable=rule-a,rule-b — reason text`
+#: (em dash, en dash, one-or-more hyphens, or a colon may introduce the
+#: reason)
+_PRAGMA_RE = re.compile(
+    r"#\s*repro:\s*disable=(?P<rules>[A-Za-z0-9_,\-]+)"
+    r"(?:\s*(?:[—–:]|-{1,2})\s*(?P<reason>\S.*?))?\s*$")
+
+SUPPRESSION_RULE = "suppression"
+
+
+@dataclasses.dataclass
+class Finding:
+    """One diagnostic: a rule violation anchored at ``path:line:col``."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+    reason: str = ""
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def render(self) -> str:
+        tag = " [suppressed]" if self.suppressed else ""
+        return f"{self.location()}: {self.rule}: {self.message}{tag}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Parsed view of one source file handed to each rule."""
+    path: str
+    source: str
+    tree: ast.Module
+    lines: List[str]
+
+
+class Rule:
+    """Base pass.  Subclasses set ``name``/``description`` and implement
+    ``check``; ``applies`` scopes the rule to a subtree (determinism is
+    library-code only, VMEM is ``kernels/`` only)."""
+
+    name: str = "rule"
+    description: str = ""
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        raise NotImplementedError
+
+    def finalize(self) -> List[Finding]:
+        """Called once after every file was checked (report emission)."""
+        return []
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int
+    rules: Tuple[str, ...]       # ("all",) = every rule
+    reason: str
+    comment_only: bool           # line holds nothing but the pragma
+
+
+def parse_pragmas(lines: List[str]) -> Dict[int, Pragma]:
+    """Line number (1-based) -> pragma found on that line."""
+    out: Dict[int, Pragma] = {}
+    for i, raw in enumerate(lines, start=1):
+        m = _PRAGMA_RE.search(raw)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",")
+                      if r.strip())
+        reason = (m.group("reason") or "").strip()
+        comment_only = raw.strip().startswith("#")
+        out[i] = Pragma(i, rules, reason, comment_only)
+    return out
+
+
+def _covering_pragma(pragmas: Dict[int, Pragma], line: int
+                     ) -> Optional[Pragma]:
+    p = pragmas.get(line)
+    if p is not None:
+        return p
+    prev = pragmas.get(line - 1)
+    if prev is not None and prev.comment_only:
+        return prev
+    return None
+
+
+def apply_suppressions(findings: List[Finding], pragmas: Dict[int, Pragma],
+                       path: str) -> List[Finding]:
+    """Mark suppressed findings in place and append ``suppression``
+    findings for pragmas that lack a written reason."""
+    for f in findings:
+        p = _covering_pragma(pragmas, f.line)
+        if p is not None and (f.rule in p.rules or "all" in p.rules):
+            f.suppressed = True
+            f.reason = p.reason
+    extra = []
+    for p in sorted(pragmas.values(), key=lambda p: p.line):
+        if not p.reason:
+            extra.append(Finding(
+                SUPPRESSION_RULE, path, p.line, 0,
+                f"suppression of {','.join(p.rules)} carries no written "
+                f"reason (use `# repro: disable=RULE — reason`)"))
+    return findings + extra
+
+
+def dotted_name(node: ast.AST) -> str:
+    """`a.b.c` for Attribute/Name chains, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""

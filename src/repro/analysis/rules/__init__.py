@@ -1,0 +1,24 @@
+"""Rule registry: every invariant pass the analyzer knows about."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.base import Rule
+from repro.analysis.rules.determinism import DeterminismRule
+from repro.analysis.rules.donation import DonationSafetyRule
+from repro.analysis.rules.lock_discipline import LockDisciplineRule
+from repro.analysis.rules.vmem_budget import VmemBudgetRule
+
+ALL_RULE_CLASSES = (LockDisciplineRule, DonationSafetyRule,
+                    DeterminismRule, VmemBudgetRule)
+
+
+def default_rules(**vmem_kwargs) -> List[Rule]:
+    """One fresh instance of every registered rule.  ``vmem_kwargs``
+    (``budget_bytes``, ``report_path``) parameterize the VMEM pass."""
+    return [LockDisciplineRule(), DonationSafetyRule(), DeterminismRule(),
+            VmemBudgetRule(**vmem_kwargs)]
+
+
+def rules_by_name() -> Dict[str, type]:
+    return {cls.name: cls for cls in ALL_RULE_CLASSES}

@@ -1,0 +1,194 @@
+"""Rule ``determinism`` — keyed randomness, no wall clocks, pure traces.
+
+The lifecycle contract (PR 3/6) is that ``refresh == rebuild`` holds
+bit-exactly: every stochastic choice in library code must derive from an
+explicit *tuple* key (``np.random.default_rng((seed, tag, block))`` —
+the ``walk_uniforms``/``hub_uniforms`` convention), never from global
+RNG state or the wall clock.  Traced code (jit / pallas) must stay pure:
+host effects inside a trace either fail under jit or silently run once
+at trace time, which is worse.
+
+Three checks, scoped to library code
+(``src/repro/{core,lifecycle,kernels,data,models}/``):
+
+* **unkeyed RNG** — any ``np.random.<fn>()`` module-level call (global
+  mutable RNG state), and any ``default_rng()`` whose seed is missing,
+  a bare numeric constant, or seed arithmetic (``seed + day`` collides
+  across streams; use a tuple key).
+* **wall clock** — calls to ``time.time``/``perf_counter``/
+  ``monotonic``/``datetime.now`` and friends.  Passing a clock
+  *function* as a default (injectable clock) is fine — only calls are
+  flagged.
+* **trace purity** — ``print``, ``.item()``, ``np.asarray``/
+  ``np.array`` and ``jax.device_get`` inside functions that are
+  jit-wrapped (decorator or ``jax.jit(fn)`` call), handed to
+  ``pl.pallas_call`` (directly or through ``functools.partial``), or
+  named ``*_kernel``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.base import Finding, ModuleContext, Rule, dotted_name
+
+SCOPE_DIRS = ("core", "lifecycle", "kernels", "data", "models")
+
+#: np.random attributes that are keyed constructors, not global-state draws
+ALLOWED_NP_RANDOM = ("default_rng", "Generator", "SeedSequence",
+                     "PCG64", "Philox", "SFC64", "MT19937", "BitGenerator")
+
+WALL_CLOCK_CALLS = (
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "datetime.now", "datetime.utcnow",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+)
+
+HOST_EFFECT_CALLS = ("np.asarray", "numpy.asarray", "np.array",
+                     "numpy.array", "jax.device_get")
+
+
+def _is_module_path(path: str) -> bool:
+    parts = path.replace("\\", "/").split("/")
+    return "repro" in parts and any(d in parts for d in SCOPE_DIRS)
+
+
+def _bad_seed(call: ast.Call) -> str:
+    """Non-empty message when a ``default_rng`` seed isn't a tuple key."""
+    if not call.args and not call.keywords:
+        return "no seed: draws depend on OS entropy"
+    seed = call.args[0] if call.args else call.keywords[0].value
+    if isinstance(seed, ast.Constant):
+        return (f"bare constant seed {seed.value!r}: use a tuple key "
+                f"`(seed, stream_tag, ...)` so streams cannot collide")
+    if isinstance(seed, ast.BinOp):
+        return ("arithmetic seed: `seed + offset` streams can collide "
+                "(use a tuple key `(seed, stream_tag, ...)`)")
+    return ""           # tuple / variable / SeedSequence: assume keyed
+
+
+class DeterminismRule(Rule):
+    name = "determinism"
+    description = ("library code must use tuple-keyed RNG, never the "
+                   "wall clock; traced (jit/pallas) functions must be "
+                   "free of host effects")
+
+    def applies(self, path: str) -> bool:
+        return _is_module_path(path)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        self._check_rng_and_clock(ctx, findings)
+        for fn, how in self._traced_functions(ctx.tree).items():
+            self._check_trace_purity(ctx, fn, how, findings)
+        return findings
+
+    # -- unkeyed RNG + wall clock -------------------------------------------
+
+    def _check_rng_and_clock(self, ctx: ModuleContext,
+                             findings: List[Finding]) -> None:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            parts = name.split(".")
+            tail = parts[-1]
+            if len(parts) >= 2 and parts[-2] == "random" \
+                    and parts[0] in ("np", "numpy") \
+                    and tail not in ALLOWED_NP_RANDOM:
+                findings.append(Finding(
+                    self.name, ctx.path, node.lineno, node.col_offset,
+                    f"`{name}()` draws from the global numpy RNG — "
+                    f"library code must thread an explicit "
+                    f"`default_rng((seed, tag, ...))` generator"))
+            elif tail == "default_rng":
+                msg = _bad_seed(node)
+                if msg:
+                    findings.append(Finding(
+                        self.name, ctx.path, node.lineno,
+                        node.col_offset, f"`{name}(...)`: {msg}"))
+            elif name in WALL_CLOCK_CALLS:
+                findings.append(Finding(
+                    self.name, ctx.path, node.lineno, node.col_offset,
+                    f"`{name}()` reads the wall clock in library code — "
+                    f"inject a clock (or suppress if the value never "
+                    f"reaches retained state)"))
+
+    # -- traced-function discovery ------------------------------------------
+
+    def _traced_functions(self, tree: ast.Module
+                          ) -> Dict[ast.FunctionDef, str]:
+        defs: Dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[node.name] = node
+
+        # name -> partial(F, ...) target, for `kern = partial(f, n)` then
+        # `pl.pallas_call(kern, ...)`
+        partial_of: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                fname = dotted_name(node.value.func)
+                if fname.split(".")[-1] == "partial" and node.value.args \
+                        and isinstance(node.value.args[0], ast.Name):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            partial_of[t.id] = node.value.args[0].id
+
+        traced: Dict[ast.FunctionDef, str] = {}
+
+        def mark(name: str, how: str) -> None:
+            name = partial_of.get(name, name)
+            fn = defs.get(name)
+            if fn is not None and fn not in traced:
+                traced[fn] = how
+
+        for fn in defs.values():
+            for dec in fn.decorator_list:
+                text = ast.unparse(dec)
+                if "jit" in text.replace("(", " ").replace(".", " ").split():
+                    traced.setdefault(fn, "jit-decorated")
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func)
+            tail = fname.split(".")[-1]
+            if tail == "jit":
+                for a in node.args:
+                    if isinstance(a, ast.Name):
+                        mark(a.id, "jax.jit-wrapped")
+            elif tail == "pallas_call" and node.args:
+                a = node.args[0]
+                if isinstance(a, ast.Name):
+                    mark(a.id, "pallas kernel")
+                elif isinstance(a, ast.Call) and a.args and isinstance(
+                        a.args[0], ast.Name) and dotted_name(
+                            a.func).split(".")[-1] == "partial":
+                    mark(a.args[0].id, "pallas kernel")
+        for name, fn in defs.items():
+            if name.endswith("_kernel"):
+                traced.setdefault(fn, "pallas kernel")
+        return traced
+
+    def _check_trace_purity(self, ctx: ModuleContext, fn: ast.FunctionDef,
+                            how: str, findings: List[Finding]) -> None:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            bad = ""
+            if name == "print":
+                bad = "`print` runs on the host"
+            elif name in HOST_EFFECT_CALLS:
+                bad = f"`{name}` forces a device->host transfer"
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                bad = "`.item()` forces a device->host sync"
+            if bad:
+                findings.append(Finding(
+                    self.name, ctx.path, node.lineno, node.col_offset,
+                    f"{bad} inside `{fn.name}` ({how}) — traced code "
+                    f"must be pure (use jax.debug.print / return the "
+                    f"value instead)"))

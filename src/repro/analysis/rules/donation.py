@@ -1,0 +1,233 @@
+"""Rule ``donation-safety`` — no reads of a donated ``TrainState``.
+
+PR 4's jitted train step is built with ``donate_argnums=(0,)``: the
+buffers of the state passed as argument 0 are reused for the outputs,
+so *any* later read through the old reference observes freed/aliased
+device memory (a real use-after-donation bug shipped in the train
+example's SIGTERM handler before it was made cooperative).
+
+The pass is a per-function lexical dataflow:
+
+* a *step producer* is a call to ``make_train_step`` (any dotted
+  prefix) without ``donate=False``/``jit=False``, or a direct
+  ``jax.jit(..., donate_argnums=...)`` whose donated positions include
+  0;
+* names bound to a producer result in the same function — and ``self``
+  attributes bound to a producer result anywhere in the same class —
+  are *donated steps*;
+* calling a donated step taints the expression passed as argument 0
+  (a plain name or ``self`` attribute);
+* any later read of the tainted expression is flagged;
+* rebinding the name/attribute (assignment, tuple-unpack target, for
+  target, ``with ... as``) clears the taint — the canonical
+  ``state, m = step(state, batch, key)`` is clean.
+
+Loop bodies are walked twice so a loop-carried taint (tainted on
+iteration ``i``, read at the top of iteration ``i+1``) is caught.
+Nested function bodies are skipped: their execution time is unknown
+(the SIGTERM-handler class of bug is guarded by the cooperative-flag
+convention, not this pass).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import Finding, ModuleContext, Rule, dotted_name
+
+
+def _const_contains_zero(node: Optional[ast.AST]) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, ast.Constant):
+        return node.value == 0
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(isinstance(e, ast.Constant) and e.value == 0
+                   for e in node.elts)
+    return True      # dynamic donate_argnums: assume arg 0 is donated
+
+
+def is_step_producer(call: ast.Call) -> bool:
+    """Does this call build a step that donates its first argument?"""
+    name = dotted_name(call.func)
+    if name.split(".")[-1] == "make_train_step":
+        for kw in call.keywords:
+            if kw.arg in ("donate", "jit") and isinstance(
+                    kw.value, ast.Constant) and kw.value.value is False:
+                return False
+        return True
+    if name.split(".")[-1] == "jit":
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                return _const_contains_zero(kw.value)
+    return False
+
+
+def _taint_key(node: ast.AST) -> Optional[str]:
+    """Taintable expressions: bare names and ``self.X`` attributes."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return f"self.{node.attr}"
+    return None
+
+
+def _donated_class_attrs(cls: ast.ClassDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and is_step_producer(node.value):
+            for t in node.targets:
+                key = _taint_key(t)
+                if key and key.startswith("self."):
+                    out.add(key[len("self."):])
+    return out
+
+
+class DonationSafetyRule(Rule):
+    name = "donation-safety"
+    description = ("no read of a state variable after it was passed as "
+                   "argument 0 to a donated jitted train step")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        # class name -> attrs holding donated steps (self._step_fn, ...)
+        donated_attrs: Dict[ast.ClassDef, Set[str]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                donated_attrs[node] = _donated_class_attrs(node)
+
+        def enclosing_attrs(fn: ast.FunctionDef) -> Set[str]:
+            for cls, attrs in donated_attrs.items():
+                if fn in cls.body:
+                    return attrs
+            return set()
+
+        for fn in [n for n in ast.walk(ctx.tree)
+                   if isinstance(n, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))]:
+            self._check_function(ctx, fn, enclosing_attrs(fn), findings)
+        return findings
+
+    # -- per-function lexical dataflow --------------------------------------
+
+    def _check_function(self, ctx: ModuleContext, fn: ast.FunctionDef,
+                        class_step_attrs: Set[str],
+                        findings: List[Finding]) -> None:
+        step_names: Set[str] = set()
+        tainted: Dict[str, int] = {}     # key -> line it was donated at
+
+        def is_step_call(call: ast.Call) -> bool:
+            f = call.func
+            if isinstance(f, ast.Name) and f.id in step_names:
+                return True
+            if isinstance(f, ast.Attribute) and isinstance(
+                    f.value, ast.Name) and f.value.id == "self" \
+                    and f.attr in class_step_attrs:
+                return True
+            if isinstance(f, ast.Call) and is_step_producer(f):
+                return True               # make_train_step(...)(state, ...)
+            return False
+
+        def eval_expr(node: Optional[ast.AST]) -> None:
+            if node is None:
+                return
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)):
+                    continue              # unknown execution time
+                key = _taint_key(sub)
+                if key is None or key not in tainted:
+                    continue
+                if isinstance(sub, ast.Name) and not isinstance(
+                        sub.ctx, ast.Load):
+                    continue
+                findings.append(Finding(
+                    self.name, ctx.path, sub.lineno, sub.col_offset,
+                    f"`{key}` is read after being donated to a jitted "
+                    f"train step at line {tainted[key]} — its buffers "
+                    f"were reused for the step's outputs (rebind the "
+                    f"name from the step's return value instead)"))
+                del tainted[key]          # one finding per donation event
+            # taints fire *after* read checks: args are read pre-donation
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and is_step_call(sub) \
+                        and sub.args:
+                    key = _taint_key(sub.args[0])
+                    if key is not None:
+                        tainted[key] = sub.lineno
+
+        def bind(target: ast.AST) -> None:
+            if isinstance(target, (ast.Tuple, ast.List)):
+                for e in target.elts:
+                    bind(e)
+                return
+            if isinstance(target, ast.Starred):
+                bind(target.value)
+                return
+            key = _taint_key(target)
+            if key is not None:
+                tainted.pop(key, None)
+
+        def run(stmts: List[ast.stmt]) -> None:
+            for s in stmts:
+                if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                    continue
+                if isinstance(s, ast.Assign):
+                    eval_expr(s.value)
+                    if isinstance(s.value, ast.Call) \
+                            and is_step_producer(s.value):
+                        for t in s.targets:
+                            if isinstance(t, ast.Name):
+                                step_names.add(t.id)
+                    for t in s.targets:
+                        bind(t)
+                elif isinstance(s, ast.AnnAssign):
+                    eval_expr(s.value)
+                    bind(s.target)
+                elif isinstance(s, ast.AugAssign):
+                    eval_expr(s.target)   # augassign reads the target
+                    eval_expr(s.value)
+                    bind(s.target)
+                elif isinstance(s, (ast.For, ast.AsyncFor)):
+                    eval_expr(s.iter)
+                    bind(s.target)
+                    run(s.body)           # twice: catch loop-carried
+                    bind(s.target)
+                    run(s.body)
+                    run(s.orelse)
+                elif isinstance(s, ast.While):
+                    eval_expr(s.test)
+                    run(s.body)
+                    eval_expr(s.test)
+                    run(s.body)
+                    run(s.orelse)
+                elif isinstance(s, ast.If):
+                    eval_expr(s.test)
+                    run(s.body)
+                    run(s.orelse)
+                elif isinstance(s, (ast.With, ast.AsyncWith)):
+                    for item in s.items:
+                        eval_expr(item.context_expr)
+                        if item.optional_vars is not None:
+                            bind(item.optional_vars)
+                    run(s.body)
+                elif isinstance(s, ast.Try):
+                    run(s.body)
+                    for h in s.handlers:
+                        run(h.body)
+                    run(s.orelse)
+                    run(s.finalbody)
+                elif isinstance(s, ast.Return):
+                    eval_expr(s.value)
+                elif isinstance(s, (ast.Expr, ast.Assert, ast.Raise,
+                                    ast.Delete)):
+                    for v in ast.iter_child_nodes(s):
+                        eval_expr(v)
+                else:
+                    eval_expr(getattr(s, "value", None))
+
+        run(fn.body)

@@ -1,0 +1,210 @@
+"""Rule ``lock-discipline`` — the serving tier's seqlock/ring contract.
+
+PR 5 made the serving tier concurrent with two hand-enforced
+disciplines:
+
+* **Seqlock stores** (``ClusterQueueStore``-shaped classes: they own a
+  ``write_lock`` *and* a ``gen`` generation array).  Every write to the
+  store's protected arrays (``items``/``times``/``buf``/``ts`` data,
+  ``cursor``/``heads``/``gen`` metadata) must happen lexically inside a
+  ``with self.write_lock:`` block, and the data-array scatter must be
+  *bracketed* by generation bumps (``gen += 1`` enter-odd before the
+  first scatter, ``gen += 1`` exit-even after the last) so lock-free
+  readers can detect a torn read.
+
+* **Event rings** (``EventRing``-shaped classes: they own a ``_lock``
+  *and* a ``committed`` watermark).  Reservation/commit state
+  (``cursor``/``committed``) must only move under the ring lock.  The
+  slot arrays themselves are deliberately written lock-free (the
+  reservation protocol makes them disjoint), so they are *not*
+  protected here.
+
+* **Acquisition order**: the swap engine nests ring reads inside
+  ``store.write_lock`` (``SwapServer._drain_into``), so the canonical
+  order is write-lock -> ring-lock.  Acquiring a ``write_lock`` (or
+  calling a store write path such as ``ingest``/``_drain_into``) while
+  holding a ring ``_lock`` is an inversion and flagged.
+
+``__init__`` is exempt: construction happens before the object is
+shared.  Purely lexical analysis — a write behind a helper call is not
+seen (keep scatters inline, as the store does today).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import Finding, ModuleContext, Rule, dotted_name
+
+# protected attribute names, per class kind
+SEQLOCK_DATA = ("items", "times", "buf", "ts")
+SEQLOCK_META = ("cursor", "heads", "gen")
+RING_STATE = ("cursor", "committed")
+
+# calls that take a store's write lock internally: invoking them while
+# holding a ring lock inverts the canonical order
+WRITE_PATH_CALLS = ("ingest", "_drain_into")
+
+_WRITE_LOCK = "write_lock"
+_RING_LOCK = "ring_lock"
+
+
+def _self_attrs_assigned(cls: ast.ClassDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    out.add(t.attr)
+    return out
+
+
+def _write_target_attr(target: ast.AST) -> Optional[str]:
+    """``self.X = ...`` / ``self.X[...] = ...`` -> ``X``."""
+    if isinstance(target, ast.Subscript):
+        target = target.value
+    if (isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == "self"):
+        return target.attr
+    return None
+
+
+def _acquired_locks(node: ast.With) -> Set[str]:
+    locks: Set[str] = set()
+    for item in node.items:
+        name = dotted_name(item.context_expr)
+        if name.endswith(".write_lock"):
+            locks.add(_WRITE_LOCK)
+        elif name.endswith("._lock") or name == "_lock":
+            locks.add(_RING_LOCK)
+    return locks
+
+
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    description = ("seqlock-store / event-ring writes must hold their "
+                   "lock, scatters must be gen-bracketed, and lock "
+                   "acquisition order must not invert")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for cls in [n for n in ast.walk(ctx.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            attrs = _self_attrs_assigned(cls)
+            is_store = {"write_lock", "gen"} <= attrs
+            is_ring = {"_lock", "committed"} <= attrs
+            if not (is_store or is_ring):
+                continue
+            protected: Dict[str, str] = {}
+            if is_store:
+                for a in SEQLOCK_DATA + SEQLOCK_META:
+                    if a in attrs:
+                        protected[a] = _WRITE_LOCK
+            if is_ring:
+                for a in RING_STATE:
+                    if a in attrs:
+                        protected[a] = _RING_LOCK
+            for fn in cls.body:
+                if (isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and fn.name != "__init__"):
+                    self._check_method(ctx, cls, fn, protected, is_store,
+                                       findings)
+        return findings
+
+    # -- per-method walk ----------------------------------------------------
+
+    def _check_method(self, ctx: ModuleContext, cls: ast.ClassDef,
+                      fn: ast.FunctionDef, protected: Dict[str, str],
+                      is_store: bool, findings: List[Finding]) -> None:
+
+        def visit(stmts, held: Set[str]):
+            for s in stmts:
+                if isinstance(s, ast.With):
+                    acquired = _acquired_locks(s)
+                    if _RING_LOCK in held and _WRITE_LOCK in acquired:
+                        findings.append(Finding(
+                            self.name, ctx.path, s.lineno, s.col_offset,
+                            "lock-order inversion: write_lock acquired "
+                            "while holding the ring lock (canonical "
+                            "order is write_lock -> ring lock, see "
+                            "SwapServer._drain_into)"))
+                    if is_store and _WRITE_LOCK in acquired:
+                        self._check_gen_bracket(ctx, cls, s, findings)
+                    visit(s.body, held | acquired)
+                    continue
+                if isinstance(s, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    targets = (s.targets if isinstance(s, ast.Assign)
+                               else [s.target])
+                    for t in targets:
+                        for leaf in (t.elts if isinstance(
+                                t, (ast.Tuple, ast.List)) else [t]):
+                            attr = _write_target_attr(leaf)
+                            lock = protected.get(attr or "")
+                            if lock and lock not in held:
+                                what = ("with self.write_lock"
+                                        if lock == _WRITE_LOCK
+                                        else "with self._lock")
+                                findings.append(Finding(
+                                    self.name, ctx.path, s.lineno,
+                                    s.col_offset,
+                                    f"write to protected `self.{attr}` of "
+                                    f"{cls.name} outside `{what}:` — "
+                                    f"lock-free readers may observe a "
+                                    f"torn state"))
+                if _RING_LOCK in held and not isinstance(
+                        s, (ast.If, ast.For, ast.While, ast.Try)):
+                    for call in [n for n in ast.walk(s)
+                                 if isinstance(n, ast.Call)]:
+                        cname = dotted_name(call.func)
+                        if cname.split(".")[-1] in WRITE_PATH_CALLS:
+                            findings.append(Finding(
+                                self.name, ctx.path, call.lineno,
+                                call.col_offset,
+                                f"`{cname}` (a store write path that "
+                                f"takes write_lock) called while holding "
+                                f"the ring lock — lock-order inversion"))
+                for attr in ("body", "orelse", "finalbody"):
+                    visit(getattr(s, attr, []) or [], held)
+                for h in getattr(s, "handlers", []) or []:
+                    visit(h.body, held)
+
+        visit(fn.body, set())
+
+    def _check_gen_bracket(self, ctx: ModuleContext, cls: ast.ClassDef,
+                           with_node: ast.With,
+                           findings: List[Finding]) -> None:
+        """Inside one ``with self.write_lock`` block: every data-array
+        subscript scatter must be preceded and followed by a ``gen``
+        bump so readers started mid-write retry."""
+        scatters: List[Tuple[int, str]] = []
+        bumps: List[int] = []
+        for node in ast.walk(with_node):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if not isinstance(t, ast.Subscript):
+                        continue
+                    attr = _write_target_attr(t)
+                    if attr in SEQLOCK_DATA:
+                        scatters.append((node.lineno, attr))
+                    elif attr == "gen":
+                        bumps.append(node.lineno)
+        if not scatters:
+            return
+        first = min(ln for ln, _ in scatters)
+        last = max(ln for ln, _ in scatters)
+        if not (any(b < first for b in bumps)
+                and any(b > last for b in bumps)):
+            ln, attr = min(scatters)
+            findings.append(Finding(
+                self.name, ctx.path, ln, 0,
+                f"scatter to `self.{attr}` in {cls.name} is not "
+                f"bracketed by seqlock generation bumps (`self.gen[...] "
+                f"+= 1` before the first and after the last array "
+                f"write)"))

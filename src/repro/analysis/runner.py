@@ -1,0 +1,113 @@
+"""File discovery, rule execution, and output formatting."""
+from __future__ import annotations
+
+import ast
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.analysis.base import (Finding, ModuleContext, Rule,
+                                 apply_suppressions, parse_pragmas)
+from repro.analysis.rules import default_rules, rules_by_name
+
+PARSE_ERROR_RULE = "parse-error"
+
+
+def iter_source_files(paths: Sequence[str]) -> Iterable[str]:
+    """Expand files/directories into a sorted stream of ``.py`` paths."""
+    seen = set()
+    for p in paths:
+        if os.path.isfile(p):
+            if p not in seen:
+                seen.add(p)
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__"
+                             and not d.startswith("."))
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    full = os.path.join(root, name)
+                    if full not in seen:
+                        seen.add(full)
+                        yield full
+
+
+def analyze_file(path: str, rules: Sequence[Rule]) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(PARSE_ERROR_RULE, path, e.lineno or 0, 0,
+                        f"file does not parse: {e.msg}")]
+    lines = source.splitlines()
+    ctx = ModuleContext(path=path, source=source, tree=tree, lines=lines)
+    findings: List[Finding] = []
+    for rule in rules:
+        if rule.applies(path):
+            findings.extend(rule.check(ctx))
+    pragmas = parse_pragmas(lines)
+    return apply_suppressions(findings, pragmas, path)
+
+
+def run_analysis(paths: Sequence[str],
+                 rules: Optional[Sequence[Rule]] = None,
+                 **vmem_kwargs) -> List[Finding]:
+    """Run every rule over every file; findings sorted by location."""
+    if rules is None:
+        rules = default_rules(**vmem_kwargs)
+    findings: List[Finding] = []
+    for path in iter_source_files(paths):
+        findings.extend(analyze_file(path, rules))
+    for rule in rules:
+        findings.extend(rule.finalize())
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def select_rules(names: Optional[Sequence[str]],
+                 **vmem_kwargs) -> List[Rule]:
+    if not names:
+        return default_rules(**vmem_kwargs)
+    registry = rules_by_name()
+    unknown = [n for n in names if n not in registry]
+    if unknown:
+        raise SystemExit(
+            f"unknown rule(s): {', '.join(unknown)} "
+            f"(known: {', '.join(sorted(registry))})")
+    out: List[Rule] = []
+    for n in names:
+        cls = registry[n]
+        out.append(cls(**vmem_kwargs) if n == "vmem-budget" else cls())
+    return out
+
+
+def active(findings: Sequence[Finding]) -> List[Finding]:
+    """Findings that should fail the run (not suppressed)."""
+    return [f for f in findings if not f.suppressed]
+
+
+def format_text(findings: Sequence[Finding]) -> str:
+    out: List[str] = [f.render() for f in findings]
+    n_active = len(active(findings))
+    n_supp = len(findings) - n_active
+    out.append(f"{n_active} finding(s), {n_supp} suppressed")
+    return "\n".join(out)
+
+
+def format_json(findings: Sequence[Finding]) -> str:
+    by_rule: Dict[str, int] = {}
+    for f in active(findings):
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    doc = {
+        "findings": [f.to_dict() for f in findings],
+        "summary": {
+            "total": len(findings),
+            "active": len(active(findings)),
+            "suppressed": len(findings) - len(active(findings)),
+            "by_rule": by_rule,
+        },
+    }
+    return json.dumps(doc, indent=2)

@@ -393,6 +393,7 @@ def _finalize_graph(n_users: int, n_items: int, ui_full: EdgeSet,
              if keep_state else None)
     return HeteroGraph(n_users, n_items, ui_s, uu_s, ii_s,
                        group1_users=g1u, group1_items=g1i,
+                       # repro: disable=determinism — benign build-duration instrumentation; never keyed into graph state
                        build_seconds=time.perf_counter() - t0,
                        refresh=state)
 
@@ -412,6 +413,7 @@ def build_graph(log: EngagementLog, *,
     graph so ``refresh_graph`` can splice in an hour-level delta later
     (opt-in: the raw co-pair sets can dwarf the subsampled graph).
     """
+    # repro: disable=determinism — benign build-duration instrumentation; never keyed into graph state
     t0 = time.perf_counter()
     ui = build_ui_edges(log, event_weights)
 
@@ -589,6 +591,7 @@ def refresh_graph(g: HeteroGraph, delta_log: EngagementLog
         raise ValueError("user space may only grow")
     if delta_log.n_items < g.n_items:
         raise ValueError("item space may only grow")
+    # repro: disable=determinism — benign refresh-duration instrumentation; never keyed into graph state
     t0 = time.perf_counter()
     nu, ni = delta_log.n_users, delta_log.n_items
     seed = p.get("seed", 0)

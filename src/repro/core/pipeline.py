@@ -10,6 +10,7 @@ ablations; every ablation knob of §5.3 is a parameter:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, Optional, Sequence, Tuple
@@ -25,6 +26,19 @@ from repro.core import rq_index as RQ
 from repro.data.edge_dataset import (EdgeDataset, NeighborTables,
                                      build_neighbor_tables)
 from repro.data.synthetic import SyntheticWorld
+
+
+@contextlib.contextmanager
+def _timed(times: Dict[str, float], name: str):
+    """Record a stage's duration in the run report — the single place
+    the pipeline reads the wall clock."""
+    # repro: disable=determinism — benign stage timing for the run report; never feeds model or index state
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        # repro: disable=determinism — benign stage timing for the run report; never feeds model or index state
+        times[name] = time.perf_counter() - t0
 
 
 @dataclasses.dataclass
@@ -103,23 +117,22 @@ def run_pipeline(world: SyntheticWorld, cfg: RankGraph2Config, *,
                  seed: int = 0,
                  ppr_backend: str = "numpy",
                  log_every: int = 0) -> PipelineResult:
-    times = {}
-    t0 = time.perf_counter()
-    g = GB.build_graph(world.day0, alpha_pop=cfg.alpha_pop if popbias
-                       else 0.0, c_u=cfg.c_u, c_i=cfg.c_i, k_cap=cfg.k_cap,
-                       seed=seed)
-    g = _strip_edge_types(g, edge_types)
-    times["construct"] = time.perf_counter() - t0
+    times: Dict[str, float] = {}
+    with _timed(times, "construct"):
+        g = GB.build_graph(world.day0, alpha_pop=cfg.alpha_pop if popbias
+                           else 0.0, c_u=cfg.c_u, c_i=cfg.c_i,
+                           k_cap=cfg.k_cap, seed=seed)
+        g = _strip_edge_types(g, edge_types)
 
-    t0 = time.perf_counter()
-    if neighbor_strategy == "ppr":
-        tables = build_neighbor_tables(
-            g, k_imp=cfg.k_imp, n_walks=cfg.ppr_walks,
-            walk_len=cfg.ppr_len, restart=cfg.ppr_restart, seed=seed,
-            backend=ppr_backend)
-    else:
-        tables = _fallback_tables(g, cfg.k_imp, neighbor_strategy, seed)
-    times["ppr"] = time.perf_counter() - t0
+    with _timed(times, "ppr"):
+        if neighbor_strategy == "ppr":
+            tables = build_neighbor_tables(
+                g, k_imp=cfg.k_imp, n_walks=cfg.ppr_walks,
+                walk_len=cfg.ppr_len, restart=cfg.ppr_restart, seed=seed,
+                backend=ppr_backend)
+        else:
+            tables = _fallback_tables(g, cfg.k_imp, neighbor_strategy,
+                                      seed)
 
     # id-only batches: features live on device in a FeatureStore and the
     # jitted step gathers them; the host ships ids + masks only
@@ -133,28 +146,29 @@ def run_pipeline(world: SyntheticWorld, cfg: RankGraph2Config, *,
 
     per_type = {et: batch_per_type for et in ("uu", "ui", "ii")
                 if et in edge_types or et == "ui"}
-    t0 = time.perf_counter()
-    m = None
-    for t in range(steps):
-        batch = jax.tree.map(jnp.asarray, ds.sample_batch(t, seed, per_type))
-        state, m = step_fn(state, batch, jax.random.key(1000 + t))
-        if log_every and t % log_every == 0:
-            print(f"  step {t}: total={float(m['total']):.3f} "
-                  f"infonce_ui={float(m.get('infonce_ui', 0.0)):.3f}")
-    # steps=0 (embed-only runs): no train metrics, not an UnboundLocalError
-    metrics = {} if m is None else {k: float(v) for k, v in m.items()}
-    times["train"] = time.perf_counter() - t0
+    with _timed(times, "train"):
+        m = None
+        for t in range(steps):
+            batch = jax.tree.map(jnp.asarray,
+                                 ds.sample_batch(t, seed, per_type))
+            state, m = step_fn(state, batch, jax.random.key(1000 + t))
+            if log_every and t % log_every == 0:
+                print(f"  step {t}: total={float(m['total']):.3f} "
+                      f"infonce_ui={float(m.get('infonce_ui', 0.0)):.3f}")
+        # steps=0 (embed-only runs): no train metrics, not an
+        # UnboundLocalError
+        metrics = {} if m is None else {k: float(v) for k, v in m.items()}
 
-    t0 = time.perf_counter()
-    from repro.core import model as M
-    nu = g.n_users
-    user_emb = T.embed_all(state.params, cfg, ds, node_type=M.USER,
-                           ids=np.arange(nu), batch=2048)
-    item_emb = T.embed_all(state.params, cfg, ds, node_type=M.ITEM,
-                           ids=np.arange(nu, nu + g.n_items), batch=2048)
-    codes = np.asarray(RQ.assign_codes(
-        state.params["rq"], jnp.asarray(user_emb), cfg.rq))
-    times["embed"] = time.perf_counter() - t0
+    with _timed(times, "embed"):
+        from repro.core import model as M
+        nu = g.n_users
+        user_emb = T.embed_all(state.params, cfg, ds, node_type=M.USER,
+                               ids=np.arange(nu), batch=2048)
+        item_emb = T.embed_all(state.params, cfg, ds, node_type=M.ITEM,
+                               ids=np.arange(nu, nu + g.n_items),
+                               batch=2048)
+        codes = np.asarray(RQ.assign_codes(
+            state.params["rq"], jnp.asarray(user_emb), cfg.rq))
 
     return PipelineResult(user_emb, item_emb, codes, state, cfg, g, tables,
                           metrics, times)

@@ -113,6 +113,7 @@ def incremental_refresh(g: HeteroGraph, tables: NeighborTables,
     if tables.ppr is None:
         raise ValueError("tables were built without keep_state=True; "
                          "no refresh state retained")
+    # repro: disable=determinism — benign refresh-duration instrumentation reported to the caller
     t0 = time.perf_counter()
     g_new, report = refresh_graph(g, new_log_window)
     user_nbrs, item_nbrs, state, affected = ppr_mod.refresh_ppr_neighbors(
@@ -122,6 +123,7 @@ def incremental_refresh(g: HeteroGraph, tables: NeighborTables,
         _fill_group2(g_new, user_nbrs, item_nbrs, prev_emb,
                      tables.ppr.k_imp, only=affected)
     report["affected_nodes"] = affected
+    # repro: disable=determinism — benign refresh-duration instrumentation reported to the caller
     report["refresh_seconds"] = time.perf_counter() - t0
     return (g_new,
             NeighborTables(user_nbrs, item_nbrs, g_new.n_users,

@@ -76,6 +76,7 @@ def make_world(n_users: int = 2000, n_items: int = 3000, *,
                                             ).astype(np.float32)
 
     def sample_day(day: int, ts0: float) -> EngagementLog:
+        # repro: disable=determinism — legacy arithmetic key; the stream is frozen by the calibrated benchmark gates (recall/util), so rekeying would invalidate them
         r = np.random.default_rng(seed + 1000 + day)
         n_ev = int(n_users * events_per_user)
         users = r.integers(0, n_users, n_ev)

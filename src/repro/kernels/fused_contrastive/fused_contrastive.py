@@ -130,7 +130,12 @@ def _pad_rows(x, pad):
     return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
 
 
-def _padded_fwd(src, dst, negs, margin, tau, interpret, block_b=128):
+# 32-row tiles: the (Bt, N, d) negative block is the VMEM driver, and at
+# production dims (N=100, d=256) the backward pass double-buffers it both
+# in and out — 128-row tiles blow the ~16 MiB budget (vmem-budget rule).
+
+
+def _padded_fwd(src, dst, negs, margin, tau, interpret, block_b=32):
     if interpret is None:
         interpret = should_interpret()
     B = src.shape[0]
@@ -145,7 +150,7 @@ def _padded_fwd(src, dst, negs, margin, tau, interpret, block_b=128):
 
 
 def fused_contrastive(src, dst, negs, *, margin: float = 0.1,
-                      tau: float = 0.06, block_b: int = 128,
+                      tau: float = 0.06, block_b: int = 32,
                       interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Forward-only fused losses (no VJP); see ``fused_contrastive_diff``
     for the differentiable op used on the training path."""
@@ -176,7 +181,7 @@ def _diff_bwd(margin, tau, res, g):
     gm, gi = g
     interpret = should_interpret()
     B = src.shape[0]
-    bb = min(128, B)
+    bb = min(32, B)
     pad = (-B) % bb
     cols = tuple(a[:, None].astype(jnp.float32)
                  for a in (gm, gi, s_pos, lse))

@@ -99,6 +99,10 @@ def _run(starts, u, nbrs, cum, *, n_walks: int, walk_len: int,
                                walk_len=walk_len, restart=restart)
     out_shapes = (jax.ShapeDtypeStruct((n, S), jnp.int32),
                   jax.ShapeDtypeStruct((n, S), jnp.int32))
+    # The (N, D2) adjacency is VMEM-resident by contract: production
+    # shards starts over cores so the hot subgraph fits, and the HBM
+    # double-buffered variant for larger subgraphs is a ROADMAP item.
+    # repro: disable=vmem-budget — deliberate resident adjacency (sharded to fit); HBM double-buffer variant tracked in ROADMAP
     return pl.pallas_call(
         kernel,
         grid=(n,),

@@ -220,9 +220,13 @@ class SwapServer:
     """
 
     def __init__(self, snapshot: IndexSnapshot, *, queue_len: int = 256,
-                 recency_s: float = 3600.0, ring_capacity: int = 1 << 16):
+                 recency_s: float = 3600.0, ring_capacity: int = 1 << 16,
+                 clock: Callable[[], float] = time.perf_counter):
         self.queue_len = int(queue_len)
         self.recency_s = float(recency_s)
+        # injectable so swap-report timings are replayable in tests —
+        # the only clock-derived state this class retains
+        self._clock = clock
         self.ring = EventRing(ring_capacity)
         self.handle = SnapshotHandle(self._bundle(snapshot))
         self.swap_reports: list = []
@@ -315,17 +319,17 @@ class SwapServer:
         request could observe the engine mid-transition — is only the
         catch-up + flip + post-flip drain; the bulk replay is off-path.
         """
-        t0 = time.perf_counter()
+        t0 = self._clock()
         bundle = self._bundle(snapshot)
         cutoff = now - self.recency_s
         applied, stale = self._drain_into(bundle, min_ts=cutoff)
-        t_flip = time.perf_counter()
+        t_flip = self._clock()
         a2, s2 = self._drain_into(bundle, min_ts=cutoff)  # pre-flip catch-up
         if self._pre_flip_hook is not None:
             self._pre_flip_hook()
         old = self.handle.flip(bundle)
         a3, _ = self._drain_into(bundle)                  # post-flip: race
-        t1 = time.perf_counter()
+        t1 = self._clock()
         report = dict(
             from_version=float(old.version),
             to_version=float(bundle.version),

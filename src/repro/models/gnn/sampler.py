@@ -61,10 +61,16 @@ class SampledSubgraph:
     n_seeds: int
 
 
+#: stream tag for the sampler's default generator — keeps its draws
+#: disjoint from every other `(seed, tag, ...)`-keyed stream in the repo
+_SAMPLER_STREAM = 0x2B0             # "two-hop"
+
+
 def sample_two_hop(g: CSRGraph, seeds: np.ndarray, fanout1: int,
-                   fanout2: int, rng: Optional[np.random.Generator] = None
-                   ) -> SampledSubgraph:
-    rng = rng or np.random.default_rng(0)
+                   fanout2: int, rng: Optional[np.random.Generator] = None,
+                   *, seed: int = 0) -> SampledSubgraph:
+    if rng is None:
+        rng = np.random.default_rng((seed, _SAMPLER_STREAM))
     B = len(seeds)
     h1, m1 = g.sample_neighbors(seeds, fanout1, rng)          # (B, f1)
     h1f = h1.reshape(-1)
