@@ -25,6 +25,7 @@ def main(argv=None) -> int:
     from benchmarks import paper_tables as PT
     from benchmarks import graph_build_scaling as GBS
     from benchmarks import lifecycle_swap as LS
+    from benchmarks import obs_overhead as OO
     from benchmarks import roofline as RL
     from benchmarks import serving_concurrency as SC
     from benchmarks import serving_kernels as SK
@@ -44,6 +45,7 @@ def main(argv=None) -> int:
         ("train_throughput", TT.run),
         ("lifecycle_swap", LS.run),
         ("serving_concurrency", SC.run),
+        ("obs_overhead", OO.run),
         ("roofline", RL.run),
         ("vmem_report", VMR.run),
     ]
@@ -64,6 +66,9 @@ def main(argv=None) -> int:
                 if "thread_speedup" in out:
                     derived = (f"thread_speedup="
                                f"{out['thread_speedup']:.2f}x")
+                elif "overhead_pct" in out:
+                    derived = (f"obs_overhead="
+                               f"{out['overhead_pct']:+.2f}%")
                 elif "speedup_dedup_ids" in out:
                     derived = (f"train_speedup="
                                f"{out['speedup_dedup_ids']:.2f}x")

@@ -20,9 +20,14 @@ What this establishes (and CI gates):
     ``SERVE_MIN_THREAD_SPEEDUP`` x the single-thread ``retrieve_batch``
     throughput on one shared store (per-thread scratch pools + the
     lock-free seqlock read path are what make this possible; numpy
-    releases the GIL inside the big gather/sort kernels).
+    releases the GIL inside the big gather/sort kernels);
+  * **telemetry under contention** — the whole run executes with the
+    process telemetry enabled, and the contention counters the obs
+    layer exists to surface (seqlock retries, ring drops, repair
+    bursts) must actually be nonzero by the end.
 
-Results land in ``benchmarks/results/serving_concurrency.json``.
+Results land in ``benchmarks/results/serving_concurrency.json``; the
+telemetry trace in ``benchmarks/results/serving_concurrency_obs.jsonl``.
 """
 from __future__ import annotations
 
@@ -33,7 +38,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import write_result
+from benchmarks.common import RESULTS_DIR, write_result
+from repro import obs
 from repro.core.serving import ClusterQueueStore
 from repro.lifecycle.snapshot import IndexSnapshot, derive_members
 from repro.lifecycle.swap import SwapServer
@@ -199,7 +205,8 @@ def _lifecycle_storm(full: bool) -> Dict:
     # oracle check requires that no cluster ever evicts
     lcfg = LifecycleConfig(steps_per_cycle=8 if full else 4,
                            batch_per_type=16, recall_queries=40,
-                           recall_k=20, queue_len=4096, recency_s=1e15)
+                           recall_k=20, queue_len=4096, recency_s=1e15,
+                           repair_steps=2)
     g = build_graph(world.day0, k_cap=16, hub_cap=12, keep_state=True)
     tables = build_neighbor_tables(g, k_imp=10, n_walks=12, walk_len=3,
                                    keep_state=True)
@@ -272,10 +279,14 @@ def _lifecycle_storm(full: bool) -> Dict:
     same_members = bool(np.array_equal(
         np.sort(final.store.items, axis=1),
         np.sort(oracle.items, axis=1)))
+    # one explicit repair burst so its outcome counters/spans are part
+    # of the stress trace (the healthy cycles above never trip a gate)
+    repair = rt.repair_burst(rt.publish())
     return dict(events=int(len(ev[0])), cycles=N_SWAPS + 1,
                 versions_seen=sorted(int(v) for v in seen_versions),
                 final_version=int(final.version), lost_events=lost,
-                same_members=same_members)
+                same_members=same_members,
+                repair_resets=int(sum(repair["resets"].values())))
 
 
 # ---------------------------------------------------------------------------
@@ -347,12 +358,89 @@ def _scaling(full: bool) -> Dict:
                 parallel_efficiency=float(speedup / calib))
 
 
+# ---------------------------------------------------------------------------
+# phase 4: deterministic contention probes for the obs counters
+# ---------------------------------------------------------------------------
+
+def _contention_probes() -> Dict:
+    """Force the rare paths the storms only hit probabilistically, so
+    the counter gate below is deterministic: a writer holding every
+    cluster generation odd (the mid-scatter window) while readers
+    retrieve — seqlock retries and fallbacks — and one push larger than
+    a tiny ring — a ring drop."""
+    tel = obs.get_telemetry()
+    before = tel.snapshot()["counters"]
+    rng = np.random.default_rng(0)
+    n_users, C = 256, 16
+    store = ClusterQueueStore(rng.integers(0, C, n_users), queue_len=32,
+                              recency_s=1e15)
+    store.ingest(rng.integers(0, n_users, 2000),
+                 rng.integers(0, 1000, 2000),
+                 rng.integers(0, 1000, 2000).astype(float))
+    stop = threading.Event()
+    errs: List = []
+
+    def writer():
+        try:
+            while not stop.is_set():
+                with store.write_lock:
+                    store.gen += 1             # odd: readers must respin
+                    time.sleep(2e-4)
+                    store.gen += 1
+                time.sleep(0)
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    def reader():
+        try:
+            users = np.arange(n_users)
+            for _ in range(100):
+                store.retrieve_batch(users, 1e9, 8)
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    wt = threading.Thread(target=writer)
+    rts = [threading.Thread(target=reader) for _ in range(2)]
+    wt.start()
+    for t in rts:
+        t.start()
+    for t in rts:
+        t.join()
+    stop.set()
+    wt.join()
+    if errs:
+        raise errs[0]
+
+    server = SwapServer(
+        _mk_snapshot(1, flip=0, n_users=64, n_items=64, n_clusters=8,
+                     i2i_k=4),
+        queue_len=16, recency_s=1e15, ring_capacity=256)
+    big = 1024                                 # > the whole ring
+    server.ingest(np.zeros(big, np.int64), np.zeros(big, np.int64),
+                  np.arange(big, dtype=float))
+
+    after = tel.snapshot()["counters"]
+    return {k: after.get(k, 0.0) - before.get(k, 0.0)
+            for k in ("serving.seqlock_retries",
+                      "serving.seqlock_fallbacks", "swap.ring_dropped")}
+
+
 def run(full: bool = False) -> Dict:
+    # the whole stress run executes with telemetry on — the trace is a
+    # benchmark artifact, and the counter gate below is the proof the
+    # contention instrumentation fires outside unit-test conditions
+    trace_path = os.path.join(RESULTS_DIR,
+                              "serving_concurrency_obs.jsonl")
+    if os.path.exists(trace_path):
+        os.remove(trace_path)
+    tel = obs.configure(path=trace_path)
+    tel.reset_metrics()
     out: Dict = {}
     out["storm"] = _storm(full)
     out["lifecycle"] = _lifecycle_storm(full)
     out["scaling"] = _scaling(full)
     out["thread_speedup"] = out["scaling"]["thread_speedup"]
+    out["probes"] = _contention_probes()
 
     s, lc, sc = out["storm"], out["lifecycle"], out["scaling"]
     print("\nServing concurrency stress:")
@@ -366,6 +454,13 @@ def run(full: bool = False) -> Dict:
           f"{sc['threads']}-thread speedup {sc['thread_speedup']:.2f}x "
           f"(machine ceiling {sc['machine_calib_speedup']:.2f}x, "
           f"efficiency {sc['parallel_efficiency']:.2f})")
+    counters = tel.snapshot()["counters"]
+    out["counters"] = counters
+    print(f"  telemetry: retries={counters.get('serving.seqlock_retries', 0):.0f} "
+          f"fallbacks={counters.get('serving.seqlock_fallbacks', 0):.0f} "
+          f"ring_dropped={counters.get('swap.ring_dropped', 0):.0f} "
+          f"repair_bursts={counters.get('lifecycle.repair_bursts', 0):.0f} "
+          f"requests={counters.get('serving.retrieve_requests', 0):.0f}")
 
     # acceptance gates
     assert s["mixed_version"] == 0, "mixed-version responses observed"
@@ -387,6 +482,15 @@ def run(full: bool = False) -> Dict:
          f"{out['thread_speedup']:.2f}x < floor {floor:.2f}x "
          f"(gate {gate}x, machine ceiling "
          f"{sc['machine_calib_speedup']:.2f}x)")
+    # the contention counters the obs layer exists for must have fired
+    assert counters.get("serving.seqlock_retries", 0) > 0, \
+        "no seqlock retries recorded under contention"
+    assert counters.get("swap.ring_dropped", 0) > 0, \
+        "no ring drops recorded (oversized-push probe)"
+    assert counters.get("lifecycle.repair_bursts", 0) > 0, \
+        "no repair bursts recorded"
+    tel.flush()
+    obs.configure(enabled=False)   # don't tax later benchmarks
     write_result("serving_concurrency", out)
     return out
 

@@ -10,11 +10,19 @@ anywhere.  The published index must retain >= 0.8x of exact-KNN
 Recall@100 (the CI gate threshold), checked via ``core/evaluation``.
 
     PYTHONPATH=src python examples/lifecycle_e2e.py
+
+Every stage emits telemetry (spans + counters + latency histograms) to
+``$OBS_JSONL`` (default ``/tmp/rankgraph2_obs/lifecycle_e2e.jsonl``);
+render the per-stage latency breakdown afterwards with
+
+    PYTHONPATH=src python -m repro.obs.report \
+        /tmp/rankgraph2_obs/lifecycle_e2e.jsonl
 """
-import time
+import os
 
 import numpy as np
 
+from repro import obs
 from repro.configs.base import RankGraph2Config, RQConfig
 from repro.core.graph_builder import EngagementLog, build_graph
 from repro.data.edge_dataset import build_neighbor_tables
@@ -23,6 +31,12 @@ from repro.lifecycle import LifecycleConfig, LifecycleRuntime
 
 
 def main(snapshot_dir="/tmp/rankgraph2_snapshots"):
+    trace_path = os.environ.get(
+        "OBS_JSONL", "/tmp/rankgraph2_obs/lifecycle_e2e.jsonl")
+    os.makedirs(os.path.dirname(trace_path), exist_ok=True)
+    if os.path.exists(trace_path):
+        os.remove(trace_path)            # one run per trace file
+    tel = obs.configure(path=trace_path)
     world = make_world(n_users=500, n_items=800, events_per_user=20.0,
                        seed=1)
     cfg = RankGraph2Config(
@@ -39,12 +53,12 @@ def main(snapshot_dir="/tmp/rankgraph2_snapshots"):
     m = log.timestamp <= 82800.0
     old = EngagementLog(log.user_id[m], log.item_id[m], log.event_type[m],
                         log.timestamp[m], log.n_users, log.n_items)
-    t0 = time.perf_counter()
-    g = build_graph(old, k_cap=16, hub_cap=24, keep_state=True)
-    tables = build_neighbor_tables(g, k_imp=10, n_walks=16, walk_len=3,
-                                   backend="jax", keep_state=True)
-    print(f"construction: {g.n_edges} edges in "
-          f"{time.perf_counter() - t0:.2f}s")
+    with tel.span("e2e.construct") as sp:
+        g = build_graph(old, k_cap=16, hub_cap=24, keep_state=True)
+        tables = build_neighbor_tables(g, k_imp=10, n_walks=16,
+                                       walk_len=3, backend="jax",
+                                       keep_state=True)
+    print(f"construction: {g.n_edges} edges in {sp.elapsed():.2f}s")
 
     # --- cycle 0: train -> publish v1 -> bring serving up -------------------
     rt = LifecycleRuntime(cfg, lcfg, g, tables, world.user_feat,
@@ -59,10 +73,12 @@ def main(snapshot_dir="/tmp/rankgraph2_snapshots"):
 
     # --- live traffic against v1 --------------------------------------------
     d1 = world.day1
-    rt.server.ingest(d1.user_id, d1.item_id, d1.timestamp)
-    now = float(d1.timestamp.max())
-    users = np.random.default_rng(0).integers(0, world.n_users, 512)
-    seeds, union, ver = rt.server.serve_batch(users, now, n_recent=8, k=32)
+    with tel.span("e2e.serve", n_requests=512):
+        rt.server.ingest(d1.user_id, d1.item_id, d1.timestamp)
+        now = float(d1.timestamp.max())
+        users = np.random.default_rng(0).integers(0, world.n_users, 512)
+        seeds, union, ver = rt.server.serve_batch(users, now,
+                                                  n_recent=8, k=32)
     print(f"serving v{ver}: {int((union >= 0).sum())} U2I2I candidates "
           f"for {len(users)} requests")
 
@@ -104,6 +120,12 @@ def main(snapshot_dir="/tmp/rankgraph2_snapshots"):
     assert p["recall_ratio"] >= 0.8, \
         f"published index lost too much recall: {p['recall_ratio']:.3f}"
     assert ver == p["version"]
+
+    # --- telemetry out -------------------------------------------------------
+    tel.flush()
+    pct = tel.percentiles("serving.retrieve_latency_s")
+    print(f"telemetry: {trace_path}  retrieve p50={pct['p50']*1e3:.2f}ms "
+          f"p95={pct['p95']*1e3:.2f}ms")
     print("lifecycle e2e OK")
 
 

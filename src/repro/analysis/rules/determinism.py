@@ -9,7 +9,7 @@ host effects inside a trace either fail under jit or silently run once
 at trace time, which is worse.
 
 Three checks, scoped to library code
-(``src/repro/{core,lifecycle,kernels,data,models}/``):
+(``src/repro/{core,lifecycle,kernels,data,models,obs}/``):
 
 * **unkeyed RNG** — any ``np.random.<fn>()`` module-level call (global
   mutable RNG state), and any ``default_rng()`` whose seed is missing,
@@ -18,7 +18,11 @@ Three checks, scoped to library code
 * **wall clock** — calls to ``time.time``/``perf_counter``/
   ``monotonic``/``datetime.now`` and friends.  Passing a clock
   *function* as a default (injectable clock) is fine — only calls are
-  flagged.
+  flagged.  ``src/repro/obs/`` is the single sanctioned clock module
+  (``repro.obs.clock.SystemClock`` wraps the raw clocks behind the
+  injectable ``Clock``); everything else must go through a telemetry
+  span / injected clock, and a *new* raw clock call anywhere outside
+  ``obs`` fails analysis.
 * **trace purity** — ``print``, ``.item()``, ``np.asarray``/
   ``np.array`` and ``jax.device_get`` inside functions that are
   jit-wrapped (decorator or ``jax.jit(fn)`` call), handed to
@@ -32,7 +36,11 @@ from typing import Dict, List, Set
 
 from repro.analysis.base import Finding, ModuleContext, Rule, dotted_name
 
-SCOPE_DIRS = ("core", "lifecycle", "kernels", "data", "models")
+SCOPE_DIRS = ("core", "lifecycle", "kernels", "data", "models", "obs")
+
+#: the one module tree allowed to read the raw wall clock — everything
+#: else injects ``repro.obs.clock.Clock`` (usually via a telemetry span)
+CLOCK_ALLOWED_DIR = "obs"
 
 #: np.random attributes that are keyed constructors, not global-state draws
 ALLOWED_NP_RANDOM = ("default_rng", "Generator", "SeedSequence",
@@ -52,6 +60,13 @@ HOST_EFFECT_CALLS = ("np.asarray", "numpy.asarray", "np.array",
 def _is_module_path(path: str) -> bool:
     parts = path.replace("\\", "/").split("/")
     return "repro" in parts and any(d in parts for d in SCOPE_DIRS)
+
+
+def _clock_sanctioned(path: str) -> bool:
+    """True for ``.../repro/obs/...`` — the injectable-clock module."""
+    parts = path.replace("\\", "/").split("/")
+    return ("repro" in parts
+            and CLOCK_ALLOWED_DIR in parts[parts.index("repro"):])
 
 
 def _bad_seed(call: ast.Call) -> str:
@@ -108,12 +123,14 @@ class DeterminismRule(Rule):
                     findings.append(Finding(
                         self.name, ctx.path, node.lineno,
                         node.col_offset, f"`{name}(...)`: {msg}"))
-            elif name in WALL_CLOCK_CALLS:
+            elif name in WALL_CLOCK_CALLS \
+                    and not _clock_sanctioned(ctx.path):
                 findings.append(Finding(
                     self.name, ctx.path, node.lineno, node.col_offset,
                     f"`{name}()` reads the wall clock in library code — "
-                    f"inject a clock (or suppress if the value never "
-                    f"reaches retained state)"))
+                    f"route timing through `repro.obs` (spans / the "
+                    f"injectable Clock); only `src/repro/obs/` may call "
+                    f"the raw clock"))
 
     # -- traced-function discovery ------------------------------------------
 

@@ -16,10 +16,11 @@ paper's <=1h claim.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.obs import get_telemetry
 
 # engagement type -> business-value weight (paper: "predefined values
 # that reflect business value")
@@ -367,7 +368,7 @@ def filter_edges(edges: EdgeSet, keep_src: np.ndarray,
 def _finalize_graph(n_users: int, n_items: int, ui_full: EdgeSet,
                     uu_raw: EdgeSet, ii_raw: EdgeSet, *, alpha_pop: float,
                     k_cap: int, state_params: Dict, keep_state: bool,
-                    t0: float,
+                    started,
                     hub_draws: Optional[Dict[str, HubDraws]] = None
                     ) -> HeteroGraph:
     """Shared tail of full build and incremental refresh: Eq.3 correction,
@@ -393,8 +394,8 @@ def _finalize_graph(n_users: int, n_items: int, ui_full: EdgeSet,
              if keep_state else None)
     return HeteroGraph(n_users, n_items, ui_s, uu_s, ii_s,
                        group1_users=g1u, group1_items=g1i,
-                       # repro: disable=determinism — benign build-duration instrumentation; never keyed into graph state
-                       build_seconds=time.perf_counter() - t0,
+                       # duration of the enclosing construction span
+                       build_seconds=started.elapsed(),
                        refresh=state)
 
 
@@ -413,31 +414,32 @@ def build_graph(log: EngagementLog, *,
     graph so ``refresh_graph`` can splice in an hour-level delta later
     (opt-in: the raw co-pair sets can dwarf the subsampled graph).
     """
-    # repro: disable=determinism — benign build-duration instrumentation; never keyed into graph state
-    t0 = time.perf_counter()
-    ui = build_ui_edges(log, event_weights)
+    with get_telemetry().span("construction.build_graph",
+                              n_events=int(len(log.user_id))) as sp:
+        ui = build_ui_edges(log, event_weights)
 
-    # (1) user retention by business value for the U-U side
-    keep_u = retain_users_by_value(ui, log.n_users,
-                                   user_budget or log.n_users)
-    ui_for_uu = filter_edges(ui, keep_u, np.ones(log.n_items, bool))
+        # (1) user retention by business value for the U-U side
+        keep_u = retain_users_by_value(ui, log.n_users,
+                                       user_budget or log.n_users)
+        ui_for_uu = filter_edges(ui, keep_u, np.ones(log.n_items, bool))
 
-    lo, hi, w, uu_draws = _co_engagement(ui_for_uu.dst, ui_for_uu.src,
-                                         ui_for_uu.weight, log.n_users,
-                                         c_u, hub_cap, seed, "uu")
-    uu_raw = EdgeSet(lo, hi, w)
-    lo, hi, w, ii_draws = _co_engagement(ui.src, ui.dst, ui.weight,
-                                         log.n_items, c_i, hub_cap,
-                                         seed, "ii")
-    ii_raw = EdgeSet(lo, hi, w)
-    params = dict(alpha_pop=alpha_pop, c_u=c_u, c_i=c_i, k_cap=k_cap,
-                  hub_cap=hub_cap, user_budget=user_budget,
-                  event_weights=event_weights, seed=seed)
-    return _finalize_graph(log.n_users, log.n_items, ui, uu_raw, ii_raw,
-                           alpha_pop=alpha_pop, k_cap=k_cap,
-                           state_params=params, keep_state=keep_state,
-                           t0=t0,
-                           hub_draws={"uu": uu_draws, "ii": ii_draws})
+        lo, hi, w, uu_draws = _co_engagement(ui_for_uu.dst, ui_for_uu.src,
+                                             ui_for_uu.weight, log.n_users,
+                                             c_u, hub_cap, seed, "uu")
+        uu_raw = EdgeSet(lo, hi, w)
+        lo, hi, w, ii_draws = _co_engagement(ui.src, ui.dst, ui.weight,
+                                             log.n_items, c_i, hub_cap,
+                                             seed, "ii")
+        ii_raw = EdgeSet(lo, hi, w)
+        params = dict(alpha_pop=alpha_pop, c_u=c_u, c_i=c_i, k_cap=k_cap,
+                      hub_cap=hub_cap, user_budget=user_budget,
+                      event_weights=event_weights, seed=seed)
+        return _finalize_graph(log.n_users, log.n_items, ui, uu_raw,
+                               ii_raw, alpha_pop=alpha_pop, k_cap=k_cap,
+                               state_params=params,
+                               keep_state=keep_state, started=sp,
+                               hub_draws={"uu": uu_draws,
+                                          "ii": ii_draws})
 
 
 # ---------------------------------------------------------------------------
@@ -591,58 +593,64 @@ def refresh_graph(g: HeteroGraph, delta_log: EngagementLog
         raise ValueError("user space may only grow")
     if delta_log.n_items < g.n_items:
         raise ValueError("item space may only grow")
-    # repro: disable=determinism — benign refresh-duration instrumentation; never keyed into graph state
-    t0 = time.perf_counter()
-    nu, ni = delta_log.n_users, delta_log.n_items
-    seed = p.get("seed", 0)
-    cap = p["hub_cap"]
-    draws = st.hub_draws or {}
+    with get_telemetry().span(
+            "construction.refresh_graph",
+            delta_events=int(len(delta_log.user_id))) as sp:
+        nu, ni = delta_log.n_users, delta_log.n_items
+        seed = p.get("seed", 0)
+        cap = p["hub_cap"]
+        draws = st.hub_draws or {}
 
-    # 1) merge the delta's aggregated U-I engagements
-    d_ui = build_ui_edges(delta_log, p.get("event_weights"))
-    ui_full = merge_edge_aggregates(st.ui_full, d_ui, ni)
-    touched_u = np.unique(delta_log.user_id)
-    touched_i = np.unique(delta_log.item_id)
-    if nu > g.n_users:       # grown tail = brand-new users
-        touched_u = np.union1d(touched_u, np.arange(g.n_users, nu))
-    if ni > g.n_items:       # grown tail = brand-new items
-        touched_i = np.union1d(touched_i, np.arange(g.n_items, ni))
-    # degree-changed hub anchors redraw their subsample: their members'
-    # co-pairs must be recomputed even if the delta never touched them
-    touched_u = np.union1d(touched_u, _hub_resample_members(
-        st.ui_full, ui_full, lambda e: e.dst, lambda e: e.src, ni, cap))
-    touched_i = np.union1d(touched_i, _hub_resample_members(
-        st.ui_full, ui_full, lambda e: e.src, lambda e: e.dst, nu, cap))
-    um = np.zeros(nu, bool)
-    um[touched_u] = True
-    im = np.zeros(ni, bool)
-    im[touched_i] = True
+        # 1) merge the delta's aggregated U-I engagements
+        d_ui = build_ui_edges(delta_log, p.get("event_weights"))
+        ui_full = merge_edge_aggregates(st.ui_full, d_ui, ni)
+        touched_u = np.unique(delta_log.user_id)
+        touched_i = np.unique(delta_log.item_id)
+        if nu > g.n_users:       # grown tail = brand-new users
+            touched_u = np.union1d(touched_u, np.arange(g.n_users, nu))
+        if ni > g.n_items:       # grown tail = brand-new items
+            touched_i = np.union1d(touched_i, np.arange(g.n_items, ni))
+        # degree-changed hub anchors redraw their subsample: their
+        # members' co-pairs must be recomputed even if the delta never
+        # touched them
+        touched_u = np.union1d(touched_u, _hub_resample_members(
+            st.ui_full, ui_full, lambda e: e.dst, lambda e: e.src, ni,
+            cap))
+        touched_i = np.union1d(touched_i, _hub_resample_members(
+            st.ui_full, ui_full, lambda e: e.src, lambda e: e.dst, nu,
+            cap))
+        um = np.zeros(nu, bool)
+        um[touched_u] = True
+        im = np.zeros(ni, bool)
+        im[touched_i] = True
 
-    # 2) re-derive co-engagement pairs touching the delta
-    lo, hi, w, uu_new, uu_rec = _recompute_touching_pairs(
-        ui_full.dst, ui_full.src, ui_full.weight, um, nu,
-        p["c_u"], cap, seed, "uu", draws.get("uu"))
-    keep = ~(um[st.uu_raw.src] | um[st.uu_raw.dst])
-    uu_raw = _canonical_pair_order(
-        EdgeSet(np.r_[st.uu_raw.src[keep], lo],
-                np.r_[st.uu_raw.dst[keep], hi],
-                np.r_[st.uu_raw.weight[keep], w]), nu)
-    uu_draws = _merge_hub_draws(draws.get("uu"), uu_new, uu_rec, cap)
+        # 2) re-derive co-engagement pairs touching the delta
+        lo, hi, w, uu_new, uu_rec = _recompute_touching_pairs(
+            ui_full.dst, ui_full.src, ui_full.weight, um, nu,
+            p["c_u"], cap, seed, "uu", draws.get("uu"))
+        keep = ~(um[st.uu_raw.src] | um[st.uu_raw.dst])
+        uu_raw = _canonical_pair_order(
+            EdgeSet(np.r_[st.uu_raw.src[keep], lo],
+                    np.r_[st.uu_raw.dst[keep], hi],
+                    np.r_[st.uu_raw.weight[keep], w]), nu)
+        uu_draws = _merge_hub_draws(draws.get("uu"), uu_new, uu_rec, cap)
 
-    lo, hi, w, ii_new, ii_rec = _recompute_touching_pairs(
-        ui_full.src, ui_full.dst, ui_full.weight, im, ni,
-        p["c_i"], cap, seed, "ii", draws.get("ii"))
-    keep = ~(im[st.ii_raw.src] | im[st.ii_raw.dst])
-    ii_raw = _canonical_pair_order(
-        EdgeSet(np.r_[st.ii_raw.src[keep], lo],
-                np.r_[st.ii_raw.dst[keep], hi],
-                np.r_[st.ii_raw.weight[keep], w]), ni)
-    ii_draws = _merge_hub_draws(draws.get("ii"), ii_new, ii_rec, cap)
+        lo, hi, w, ii_new, ii_rec = _recompute_touching_pairs(
+            ui_full.src, ui_full.dst, ui_full.weight, im, ni,
+            p["c_i"], cap, seed, "ii", draws.get("ii"))
+        keep = ~(im[st.ii_raw.src] | im[st.ii_raw.dst])
+        ii_raw = _canonical_pair_order(
+            EdgeSet(np.r_[st.ii_raw.src[keep], lo],
+                    np.r_[st.ii_raw.dst[keep], hi],
+                    np.r_[st.ii_raw.weight[keep], w]), ni)
+        ii_draws = _merge_hub_draws(draws.get("ii"), ii_new, ii_rec, cap)
 
-    # 3) cheap O(E) tails in full (Eq. 3, top-K, groups)
-    g_new = _finalize_graph(nu, ni, ui_full, uu_raw, ii_raw,
-                            alpha_pop=p["alpha_pop"], k_cap=p["k_cap"],
-                            state_params=p, keep_state=True, t0=t0,
-                            hub_draws={"uu": uu_draws, "ii": ii_draws})
+        # 3) cheap O(E) tails in full (Eq. 3, top-K, groups)
+        g_new = _finalize_graph(nu, ni, ui_full, uu_raw, ii_raw,
+                                alpha_pop=p["alpha_pop"],
+                                k_cap=p["k_cap"], state_params=p,
+                                keep_state=True, started=sp,
+                                hub_draws={"uu": uu_draws,
+                                           "ii": ii_draws})
     report = dict(touched_users=touched_u, touched_items=touched_i)
     return g_new, report

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -26,19 +25,16 @@ from repro.core import rq_index as RQ
 from repro.data.edge_dataset import (EdgeDataset, NeighborTables,
                                      build_neighbor_tables)
 from repro.data.synthetic import SyntheticWorld
+from repro.obs import get_telemetry
 
 
 @contextlib.contextmanager
 def _timed(times: Dict[str, float], name: str):
-    """Record a stage's duration in the run report — the single place
-    the pipeline reads the wall clock."""
-    # repro: disable=determinism — benign stage timing for the run report; never feeds model or index state
-    t0 = time.perf_counter()
-    try:
+    """Record a stage's duration in the run report via an obs span
+    (``pipeline.<stage>``) — the pipeline never reads the clock raw."""
+    with get_telemetry().span(f"pipeline.{name}") as sp:
         yield
-    finally:
-        # repro: disable=determinism — benign stage timing for the run report; never feeds model or index state
-        times[name] = time.perf_counter() - t0
+    times[name] = sp.duration_s
 
 
 @dataclasses.dataclass

@@ -38,6 +38,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import get_telemetry
+
+_OBS = get_telemetry()   # process singleton; configure() mutates in place
+
 
 # ---------------------------------------------------------------------------
 # batched row utilities (shared by U2U2I and U2I2I paths)
@@ -61,6 +65,8 @@ class BufPool:
         if buf is None or buf.shape != shape or buf.dtype != dtype:
             buf = np.empty(shape, dtype)
             self._bufs[name] = buf
+            if _OBS.enabled:   # steady state should stop allocating
+                _OBS.counter("serving.pool_allocs")
         return buf
 
 
@@ -165,7 +171,9 @@ class ClusterQueueStore:
     _SEQLOCK_SPINS = 32
 
     def __init__(self, user_clusters: np.ndarray, *, queue_len: int = 256,
-                 recency_s: float = 900.0, n_clusters: Optional[int] = None):
+                 recency_s: float = 900.0, n_clusters: Optional[int] = None,
+                 telemetry=None):
+        self.tel = telemetry if telemetry is not None else get_telemetry()
         self.user_clusters = np.asarray(user_clusters, np.int64)
         self.queue_len = int(queue_len)
         self.recency_s = float(recency_s)
@@ -258,6 +266,12 @@ class ClusterQueueStore:
             self.times[cl[last], slot[last]] = ts[last]
             self.cursor[uniq] += counts
             self.gen[uniq] += 1                # exit: even -> consistent
+        tel = self.tel
+        if tel.enabled:
+            tel.counter("serving.ingest_events", float(cl.size))
+            fill = np.minimum(self.cursor[uniq], self.queue_len)
+            tel.gauge("serving.queue_depth_max", float(fill.max()))
+            tel.gauge("serving.queue_depth_mean", float(fill.mean()))
 
     # -- retrieval ----------------------------------------------------------
 
@@ -272,14 +286,28 @@ class ClusterQueueStore:
         from, and retry on mismatch (a writer scattered into one of our
         clusters mid-read).  Lock-free on the happy path; after
         ``_SEQLOCK_SPINS`` collisions, one run under ``write_lock``
-        guarantees progress."""
+        guarantees progress.
+
+        Every collision (odd generation seen, or generation moved under
+        the read) counts as a ``serving.seqlock_retries`` tick; taking
+        the locked path counts as ``serving.seqlock_fallbacks``."""
+        tel = self.tel
+        retries = 0
         for _ in range(self._SEQLOCK_SPINS):
             g0 = self.gen[cl]            # fancy index -> private copy
             if (g0 & 1).any():           # a write is mid-flight: respin
+                retries += 1
                 continue
             out = fn()
             if np.array_equal(self.gen[cl], g0):
+                if retries and tel.enabled:
+                    tel.counter("serving.seqlock_retries", float(retries))
                 return out
+            retries += 1
+        if tel.enabled:
+            if retries:
+                tel.counter("serving.seqlock_retries", float(retries))
+            tel.counter("serving.seqlock_fallbacks")
         with self.write_lock:            # bounded fallback: quiesced read
             return fn()
 
@@ -305,6 +333,8 @@ class ClusterQueueStore:
         vectorized pass over the whole request batch.  Safe to call from
         many threads at once (per-thread scratch, seqlock-guarded
         gather)."""
+        tel = self.tel
+        t0 = tel.clock.perf() if tel.enabled else 0.0
         user_ids = np.asarray(user_ids, np.int64).ravel()
         Q = self.queue_len
         B = user_ids.shape[0]
@@ -328,7 +358,12 @@ class ClusterQueueStore:
         valid &= mask
         if not known.all():
             valid &= known[:, None]          # unknown users: empty rows
-        return dedup_topk_rows(rows, age, valid, k, Q, pool)
+        out = dedup_topk_rows(rows, age, valid, k, Q, pool)
+        if tel.enabled:
+            tel.observe("serving.retrieve_latency_s",
+                        tel.clock.perf() - t0)
+            tel.counter("serving.retrieve_requests")
+        return out
 
     def retrieve(self, user_id: int, now: float, k: int) -> List[int]:
         """Legacy single-request U2U2I — a batch of one."""

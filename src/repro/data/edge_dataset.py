@@ -17,13 +17,13 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-import time
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
 from repro.core.graph_builder import HeteroGraph
 from repro.core import ppr as ppr_mod
+from repro.obs import get_telemetry
 
 
 @dataclasses.dataclass
@@ -73,9 +73,13 @@ def build_neighbor_tables(g: HeteroGraph, *, k_imp: int = 50,
     ``incremental_refresh`` (opt-in: (n_nodes, n_walks*walk_len) int64
     plus an adjacency snapshot).
     """
-    user_nbrs, item_nbrs, state = ppr_mod.precompute_ppr_neighbors(
-        g, k_imp=k_imp, n_walks=n_walks, walk_len=walk_len,
-        restart=restart, seed=seed, backend=backend, return_state=True)
+    with get_telemetry().span("construction.ppr_walk", backend=backend,
+                              n_walks=int(n_walks),
+                              walk_len=int(walk_len)):
+        user_nbrs, item_nbrs, state = ppr_mod.precompute_ppr_neighbors(
+            g, k_imp=k_imp, n_walks=n_walks, walk_len=walk_len,
+            restart=restart, seed=seed, backend=backend,
+            return_state=True)
     # Group-2 fallback: same-type neighbors via previous-run KNN; item
     # neighbors from top-weight U-I edges (already what PPR finds for
     # 1-hop starts, but fill explicitly where PPR returned nothing).
@@ -113,18 +117,18 @@ def incremental_refresh(g: HeteroGraph, tables: NeighborTables,
     if tables.ppr is None:
         raise ValueError("tables were built without keep_state=True; "
                          "no refresh state retained")
-    # repro: disable=determinism — benign refresh-duration instrumentation reported to the caller
-    t0 = time.perf_counter()
-    g_new, report = refresh_graph(g, new_log_window)
-    user_nbrs, item_nbrs, state, affected = ppr_mod.refresh_ppr_neighbors(
-        g_new, tables.user_nbrs, tables.item_nbrs, tables.ppr,
-        backend=backend)
-    if prev_emb is not None and len(affected):
-        _fill_group2(g_new, user_nbrs, item_nbrs, prev_emb,
-                     tables.ppr.k_imp, only=affected)
-    report["affected_nodes"] = affected
-    # repro: disable=determinism — benign refresh-duration instrumentation reported to the caller
-    report["refresh_seconds"] = time.perf_counter() - t0
+    with get_telemetry().span("construction.refresh") as sp:
+        g_new, report = refresh_graph(g, new_log_window)
+        with get_telemetry().span("construction.ppr_refresh"):
+            user_nbrs, item_nbrs, state, affected = \
+                ppr_mod.refresh_ppr_neighbors(
+                    g_new, tables.user_nbrs, tables.item_nbrs,
+                    tables.ppr, backend=backend)
+        if prev_emb is not None and len(affected):
+            _fill_group2(g_new, user_nbrs, item_nbrs, prev_emb,
+                         tables.ppr.k_imp, only=affected)
+        report["affected_nodes"] = affected
+        report["refresh_seconds"] = sp.elapsed()
     return (g_new,
             NeighborTables(user_nbrs, item_nbrs, g_new.n_users,
                            g_new.n_items, ppr=state),

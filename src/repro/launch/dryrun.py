@@ -19,7 +19,6 @@ import argparse
 import json
 import re
 import sys
-import time
 import traceback
 from typing import Any, Dict, Optional
 
@@ -27,6 +26,7 @@ import jax
 
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell, all_cells
+from repro.obs import get_telemetry
 
 RESULTS_DIR = os.environ.get(
     "REPRO_DRYRUN_DIR",
@@ -97,20 +97,24 @@ def _mem_analysis(compiled) -> Dict[str, Any]:
 
 def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
              verbose: bool = True) -> Dict[str, Any]:
+    tel = get_telemetry()
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     n_chips = int(mesh.devices.size)
-    t0 = time.perf_counter()
-    cell = build_cell(arch_id, shape_name, mesh)
-    t_build = time.perf_counter() - t0
+    with tel.span("dryrun.build", arch=arch_id, shape=shape_name,
+                  mesh=mesh_kind) as sp:
+        cell = build_cell(arch_id, shape_name, mesh)
+    t_build = sp.duration_s
 
     with mesh:
-        t0 = time.perf_counter()
-        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
-        lowered = jitted.lower(*cell.args)
-        t_lower = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0
+        with tel.span("dryrun.lower", arch=arch_id,
+                      shape=shape_name) as sp:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+            lowered = jitted.lower(*cell.args)
+        t_lower = sp.duration_s
+        with tel.span("dryrun.compile", arch=arch_id,
+                      shape=shape_name) as sp:
+            compiled = lowered.compile()
+        t_compile = sp.duration_s
 
     cost = compiled.cost_analysis() or {}
     mem = _mem_analysis(compiled)
@@ -131,20 +135,21 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
                      method="exact (no loops)")
     t_probe = 0.0
     if cell.probe is not None:
-        t0 = time.perf_counter()
-        samples = {}
-        for L in (1, 2):
-            pcell = cell.probe(L)
-            with mesh:
-                pc = jax.jit(pcell.fn,
-                             in_shardings=pcell.in_shardings
-                             ).lower(*pcell.args).compile()
-            pcost = pc.cost_analysis() or {}
-            pcoll = collective_bytes(pc.as_text())
-            samples[L] = (float(pcost.get("flops", 0.0)),
-                          float(pcost.get("bytes accessed", 0.0)),
-                          float(pcoll["total"]))
-        t_probe = time.perf_counter() - t0
+        with tel.span("dryrun.probe", arch=arch_id,
+                      shape=shape_name) as sp:
+            samples = {}
+            for L in (1, 2):
+                pcell = cell.probe(L)
+                with mesh:
+                    pc = jax.jit(pcell.fn,
+                                 in_shardings=pcell.in_shardings
+                                 ).lower(*pcell.args).compile()
+                pcost = pc.cost_analysis() or {}
+                pcoll = collective_bytes(pc.as_text())
+                samples[L] = (float(pcost.get("flops", 0.0)),
+                              float(pcost.get("bytes accessed", 0.0)),
+                              float(pcoll["total"]))
+        t_probe = sp.duration_s
         from repro.configs.base import get_arch
         n_layers = get_arch(arch_id).config.n_layers
         f1, f2 = samples[1], samples[2]

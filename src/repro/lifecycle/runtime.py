@@ -38,6 +38,7 @@ from repro.lifecycle.publish import (build_snapshot, encode_corpus,
                                      evaluate_snapshot, snapshot_health)
 from repro.lifecycle.snapshot import IndexSnapshot, SnapshotStore
 from repro.lifecycle.swap import SwapServer
+from repro.obs import get_telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,7 +115,8 @@ class LifecycleRuntime:
                  g: HeteroGraph, tables: NeighborTables,
                  user_feat: np.ndarray, item_feat: np.ndarray, *,
                  world: Any = None, snapshot_dir: Optional[str] = None,
-                 seed: int = 0):
+                 seed: int = 0, telemetry=None):
+        self.tel = telemetry if telemetry is not None else get_telemetry()
         self.cfg = cfg
         self.lcfg = lcfg
         self.world = world
@@ -183,10 +185,12 @@ class LifecycleRuntime:
         if prev_emb is not None and len(prev_emb) != (
                 delta_log.n_users + delta_log.n_items):
             prev_emb = None            # id space grew past the last embed
-        self.g, self.tables, report = incremental_refresh(
-            self.g, self.tables, delta_log, prev_emb=prev_emb,
-            backend=backend)
-        self._rebuild_dataset()
+        with self.tel.span("lifecycle.refresh",
+                           delta_events=int(len(delta_log.user_id))):
+            self.g, self.tables, report = incremental_refresh(
+                self.g, self.tables, delta_log, prev_emb=prev_emb,
+                backend=backend)
+            self._rebuild_dataset()
         return report
 
     def train_burst(self, steps: Optional[int] = None) -> Dict[str, float]:
@@ -209,16 +213,27 @@ class LifecycleRuntime:
         base = int(self.state.step)
         every = self.cfg.rq.reset_every
         resets = 0
-        for t in range(steps):
-            batch = jax.tree.map(jnp.asarray, self.dataset.sample_batch(
-                base + t, self.seed, per_type))
-            self.state, m = self._step_fn(self.state, batch,
-                                          jax.random.key(1000 + base + t))
-            if every > 0 and ((t + 1) % every == 0 or t + 1 == steps):
-                self.state, rep = T.reset_dead_codes(
-                    self.state, self._probe_embeddings(base + t + 1),
-                    self.cfg, seed=self.seed, step=base + t + 1)
-                resets += sum(rep.values())
+        tel = self.tel
+        with tel.span("lifecycle.train", steps=int(steps)):
+            for t in range(steps):
+                t_step = tel.clock.perf() if tel.enabled else 0.0
+                batch = jax.tree.map(
+                    jnp.asarray, self.dataset.sample_batch(
+                        base + t, self.seed, per_type))
+                self.state, m = self._step_fn(
+                    self.state, batch, jax.random.key(1000 + base + t))
+                if every > 0 and ((t + 1) % every == 0 or t + 1 == steps):
+                    self.state, rep = T.reset_dead_codes(
+                        self.state, self._probe_embeddings(base + t + 1),
+                        self.cfg, seed=self.seed, step=base + t + 1)
+                    resets += sum(rep.values())
+                if tel.enabled:
+                    tel.observe("train.step_latency_s",
+                                tel.clock.perf() - t_step)
+            if tel.enabled:
+                tel.counter("train.steps", float(steps))
+                if resets:
+                    tel.counter("train.dead_code_resets", float(resets))
         out = {k: float(v) for k, v in m.items()}
         if every > 0:
             out["dead_code_resets"] = float(resets)
@@ -273,6 +288,25 @@ class LifecycleRuntime:
                 return False
         return True
 
+    def _failing_gates(self, snap: IndexSnapshot) -> list:
+        """The gate keys currently below their floors (repair triggers).
+
+        Mirrors ``gate_passes`` (kept self-contained: tests call it
+        unbound against a bare-``lcfg`` namespace)."""
+        m = snap.metrics
+        failing = []
+        for gate, key in ((self.lcfg.min_recall_ratio, "recall_ratio"),
+                          (self.lcfg.min_item_recall_ratio,
+                           "item_recall_ratio"),
+                          (self.lcfg.min_codebook_util,
+                           "codebook_util_min"),
+                          (self.lcfg.min_hitrate_recon,
+                           "hitrate10_recon")):
+            val = m.get(key)
+            if gate > 0 and val is not None and val < gate:
+                failing.append(key)
+        return failing
+
     def repair_burst(self, snap: IndexSnapshot) -> Dict[str, Any]:
         """Self-healing: one bounded repair pass after a tripped gate.
 
@@ -284,6 +318,7 @@ class LifecycleRuntime:
         (``lcfg.repair_steps``) settles the revived codes before the
         caller re-publishes."""
         from repro.core.rq_index import per_code_counts
+        self.tel.counter("lifecycle.repair_bursts")
         all_codes = np.concatenate([snap.user_codes, snap.item_codes],
                                    axis=0)
         usage = per_code_counts(all_codes, snap.codebook_sizes)
@@ -306,30 +341,43 @@ class LifecycleRuntime:
         only ever name a snapshot that passed, and retention must never
         evict a known-good version in favor of rejected ones.
         """
-        self.embed_corpus()
-        self.version += 1
-        snap, recon = build_snapshot(
-            self.version, self._last_user_emb, self._last_item_emb,
-            self.state.params["rq"], self.cfg, i2i_k=self.lcfg.i2i_k,
-            chunk=self.lcfg.encode_chunk,
-            use_kernel=self.lcfg.use_kernel, want_user_recon=True)
-        if self.world is not None:
-            metrics = evaluate_snapshot(
-                snap, self._last_user_emb, recon, self.world,
-                recall_k=self.lcfg.recall_k,
-                n_queries=self.lcfg.recall_queries, seed=self.seed,
-                n_probe_factor=self.lcfg.n_probe_factor,
-                hitrate_pairs=self._hitrate_pairs(),
-                item_emb=self._last_item_emb)
-        else:
-            # ungated publication still carries first-class index-health
-            # metrics (utilization + list balance need no eval world)
-            metrics = snapshot_health(snap)
-        snap = dataclasses.replace(
-            snap, gate_metrics=tuple(sorted(
-                (k, float(v)) for k, v in metrics.items())))
-        if self.store is not None and self.gate_passes(snap):
-            self.store.publish(snap)
+        tel = self.tel
+        with tel.span("lifecycle.publish",
+                      version=int(self.version + 1)) as sp:
+            self.embed_corpus()
+            self.version += 1
+            snap, recon = build_snapshot(
+                self.version, self._last_user_emb, self._last_item_emb,
+                self.state.params["rq"], self.cfg,
+                i2i_k=self.lcfg.i2i_k, chunk=self.lcfg.encode_chunk,
+                use_kernel=self.lcfg.use_kernel, want_user_recon=True)
+            if self.world is not None:
+                metrics = evaluate_snapshot(
+                    snap, self._last_user_emb, recon, self.world,
+                    recall_k=self.lcfg.recall_k,
+                    n_queries=self.lcfg.recall_queries, seed=self.seed,
+                    n_probe_factor=self.lcfg.n_probe_factor,
+                    hitrate_pairs=self._hitrate_pairs(),
+                    item_emb=self._last_item_emb)
+            else:
+                # ungated publication still carries first-class
+                # index-health metrics (utilization + list balance need
+                # no eval world)
+                metrics = snapshot_health(snap)
+            snap = dataclasses.replace(
+                snap, gate_metrics=tuple(sorted(
+                    (k, float(v)) for k, v in metrics.items())))
+            passed = self.gate_passes(snap)
+            if tel.enabled:
+                for k, v in metrics.items():
+                    if isinstance(v, (int, float)):
+                        tel.gauge(f"publish.{k}", float(v))
+                tel.counter("publish.snapshots")
+                if not passed:
+                    tel.counter("publish.gate_failures")
+            sp.set("gate_passed", bool(passed))
+            if self.store is not None and passed:
+                self.store.publish(snap)
         return snap
 
     def _hitrate_pairs(self, n: int = 512) -> np.ndarray:
@@ -344,14 +392,18 @@ class LifecycleRuntime:
     def swap(self, snap: IndexSnapshot, now: float) -> Dict[str, float]:
         """Stage 4: flip serving to ``snap`` (or bring serving up)."""
         if self.server is None:
-            self.server = SwapServer(
-                snap, queue_len=self.lcfg.queue_len,
-                recency_s=self.lcfg.recency_s,
-                ring_capacity=self.lcfg.ring_capacity)
+            with self.tel.span("lifecycle.swap", bring_up=True,
+                               to_version=int(snap.version)) as sp:
+                self.server = SwapServer(
+                    snap, queue_len=self.lcfg.queue_len,
+                    recency_s=self.lcfg.recency_s,
+                    ring_capacity=self.lcfg.ring_capacity,
+                    telemetry=self.tel)
             return dict(from_version=0.0,
                         to_version=float(snap.version),
                         build_ms=0.0, stall_ms=0.0, replayed_events=0.0,
-                        dropped_stale=0.0, ring_dropped=0.0)
+                        dropped_stale=0.0, ring_dropped=0.0,
+                        span_id=float(sp.span_id))
         return self.server.swap_to(snap, now)
 
     # -- the loop -----------------------------------------------------------
@@ -362,45 +414,63 @@ class LifecycleRuntime:
                   item_feat: Optional[np.ndarray] = None,
                   backend: Optional[str] = None) -> Dict[str, Any]:
         """One full lifecycle cycle; returns a stage-by-stage report."""
+        tel = self.tel
         report: Dict[str, Any] = dict(cycle=self.cycle)
-        if delta_log is not None:
-            r = self.refresh(delta_log, user_feat=user_feat,
-                             item_feat=item_feat, backend=backend)
-            report["refresh"] = dict(
-                touched_users=len(r["touched_users"]),
-                touched_items=len(r["touched_items"]),
-                affected_nodes=len(r["affected_nodes"]),
-                refresh_seconds=r["refresh_seconds"])
-        report["train"] = self.train_burst()
-        if self.cycle % max(self.lcfg.publish_every, 1) == 0:
-            snap = self.publish()
-            # self-healing: a tripped gate triggers bounded repair
-            # bursts (reset + short re-train + re-publish) so the cycle
-            # converges to a publishable index instead of wedging
-            attempts = 0
-            repairs = []
-            while (not self.gate_passes(snap)
-                   and attempts < self.lcfg.repair_attempts):
-                attempts += 1
-                repairs.append(self.repair_burst(snap))
+        with tel.span("lifecycle.cycle", cycle=int(self.cycle)):
+            if delta_log is not None:
+                r = self.refresh(delta_log, user_feat=user_feat,
+                                 item_feat=item_feat, backend=backend)
+                report["refresh"] = dict(
+                    touched_users=len(r["touched_users"]),
+                    touched_items=len(r["touched_items"]),
+                    affected_nodes=len(r["affected_nodes"]),
+                    refresh_seconds=r["refresh_seconds"])
+            report["train"] = self.train_burst()
+            if self.cycle % max(self.lcfg.publish_every, 1) == 0:
                 snap = self.publish()
-            if attempts:
-                report["repair"] = dict(
-                    attempts=attempts,
-                    healed=self.gate_passes(snap),
-                    resets=[r["resets"] for r in repairs])
-            report["publish"] = dict(version=snap.version,
-                                     **snap.metrics)
-            if self.gate_passes(snap):
-                report["swap"] = self.swap(snap, now)
-            else:
-                report["swap"] = dict(
-                    skipped=True,
-                    recall_ratio=snap.metrics.get("recall_ratio"),
-                    item_recall_ratio=snap.metrics.get(
-                        "item_recall_ratio"),
-                    codebook_util_min=snap.metrics.get(
-                        "codebook_util_min"),
-                    hitrate10_recon=snap.metrics.get("hitrate10_recon"))
+                # self-healing: a tripped gate triggers bounded repair
+                # bursts (reset + short re-train + re-publish) so the
+                # cycle converges to a publishable index instead of
+                # wedging
+                attempts = 0
+                repairs = []
+                while (not self.gate_passes(snap)
+                       and attempts < self.lcfg.repair_attempts):
+                    attempts += 1
+                    trigger = ",".join(self._failing_gates(snap))
+                    with tel.span("lifecycle.repair",
+                                  attempt=attempts,
+                                  trigger=trigger) as rsp:
+                        rep = self.repair_burst(snap)
+                        snap = self.publish()
+                        healed = self.gate_passes(snap)
+                        n_reset = int(sum(rep["resets"].values()))
+                        rsp.set("resets", n_reset)
+                        rsp.set("healed", healed)
+                        if tel.enabled:
+                            tel.counter("lifecycle.repair_resets",
+                                        float(n_reset))
+                            if healed:
+                                tel.counter("lifecycle.repair_healed")
+                    repairs.append(rep)
+                if attempts:
+                    report["repair"] = dict(
+                        attempts=attempts,
+                        healed=self.gate_passes(snap),
+                        resets=[r["resets"] for r in repairs])
+                report["publish"] = dict(version=snap.version,
+                                         **snap.metrics)
+                if self.gate_passes(snap):
+                    report["swap"] = self.swap(snap, now)
+                else:
+                    report["swap"] = dict(
+                        skipped=True,
+                        recall_ratio=snap.metrics.get("recall_ratio"),
+                        item_recall_ratio=snap.metrics.get(
+                            "item_recall_ratio"),
+                        codebook_util_min=snap.metrics.get(
+                            "codebook_util_min"),
+                        hitrate10_recon=snap.metrics.get(
+                            "hitrate10_recon"))
         self.cycle += 1
         return report

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core.serving import ClusterQueueStore
 from repro.lifecycle.snapshot import IndexSnapshot
+from repro.obs import get_telemetry
 
 
 class EventRing:
@@ -221,12 +222,14 @@ class SwapServer:
 
     def __init__(self, snapshot: IndexSnapshot, *, queue_len: int = 256,
                  recency_s: float = 3600.0, ring_capacity: int = 1 << 16,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Optional[Callable[[], float]] = None,
+                 telemetry=None):
         self.queue_len = int(queue_len)
         self.recency_s = float(recency_s)
+        self.tel = telemetry if telemetry is not None else get_telemetry()
         # injectable so swap-report timings are replayable in tests —
         # the only clock-derived state this class retains
-        self._clock = clock
+        self._clock = clock if clock is not None else self.tel.clock.perf
         self.ring = EventRing(ring_capacity)
         self.handle = SnapshotHandle(self._bundle(snapshot))
         self.swap_reports: list = []
@@ -240,7 +243,8 @@ class SwapServer:
         store = ClusterQueueStore(snapshot.user_clusters,
                                   queue_len=self.queue_len,
                                   recency_s=self.recency_s,
-                                  n_clusters=snapshot.n_clusters)
+                                  n_clusters=snapshot.n_clusters,
+                                  telemetry=self.tel)
         return ServingBundle(version=snapshot.version, snapshot=snapshot,
                              store=store, i2i=snapshot.i2i)
 
@@ -282,6 +286,7 @@ class SwapServer:
         if dropped:
             with self._stats_lock:
                 self.ring_dropped += dropped
+            self.tel.counter("swap.ring_dropped", float(dropped))
         self._drain_into(self.handle.acquire())
 
     def retrieve_batch(self, user_ids, now: float, k: int
@@ -319,24 +324,37 @@ class SwapServer:
         request could observe the engine mid-transition — is only the
         catch-up + flip + post-flip drain; the bulk replay is off-path.
         """
-        t0 = self._clock()
-        bundle = self._bundle(snapshot)
-        cutoff = now - self.recency_s
-        applied, stale = self._drain_into(bundle, min_ts=cutoff)
-        t_flip = self._clock()
-        a2, s2 = self._drain_into(bundle, min_ts=cutoff)  # pre-flip catch-up
-        if self._pre_flip_hook is not None:
-            self._pre_flip_hook()
-        old = self.handle.flip(bundle)
-        a3, _ = self._drain_into(bundle)                  # post-flip: race
-        t1 = self._clock()
-        report = dict(
-            from_version=float(old.version),
-            to_version=float(bundle.version),
-            replayed_events=float(applied + a2 + a3),
-            dropped_stale=float(stale + s2),
-            ring_dropped=float(self.ring_dropped),
-            build_ms=(t_flip - t0) * 1e3,
-            stall_ms=(t1 - t_flip) * 1e3)
+        tel = self.tel
+        with tel.span("lifecycle.swap",
+                      to_version=int(snapshot.version)) as sp:
+            t0 = self._clock()
+            with tel.span("swap.build"):
+                bundle = self._bundle(snapshot)
+            cutoff = now - self.recency_s
+            with tel.span("swap.replay"):        # off-path bulk replay
+                applied, stale = self._drain_into(bundle, min_ts=cutoff)
+            t_flip = self._clock()
+            # -- stall window: catch-up + flip + post-flip drain --------
+            with tel.span("swap.catchup"):
+                a2, s2 = self._drain_into(bundle, min_ts=cutoff)
+            if self._pre_flip_hook is not None:
+                self._pre_flip_hook()
+            with tel.span("swap.flip"):
+                old = self.handle.flip(bundle)
+            with tel.span("swap.post_drain"):
+                a3, _ = self._drain_into(bundle)
+            t1 = self._clock()
+            tel.counter("swap.replayed_events", float(applied + a2 + a3))
+            tel.counter("swap.postflip_events", float(a3))
+            tel.counter("swap.dropped_stale", float(stale + s2))
+            report = dict(
+                from_version=float(old.version),
+                to_version=float(bundle.version),
+                replayed_events=float(applied + a2 + a3),
+                dropped_stale=float(stale + s2),
+                ring_dropped=float(self.ring_dropped),
+                build_ms=(t_flip - t0) * 1e3,
+                stall_ms=(t1 - t_flip) * 1e3,
+                span_id=float(sp.span_id))   # join key into the trace
         self.swap_reports.append(report)
         return report

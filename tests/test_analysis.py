@@ -248,6 +248,39 @@ def test_determinism_flags_wall_clock(tmp_path):
     found = _findings(path, DeterminismRule())
     assert len(found) == 1
     assert found[0].line == _line_of(path, "time.time()")
+    assert "repro.obs" in found[0].message
+
+
+def test_determinism_sanctions_clock_in_obs_module(tmp_path):
+    """``src/repro/obs/`` is the single sanctioned raw-clock site (the
+    injectable ``SystemClock`` lives there) — in scope for every other
+    determinism check, but exempt from the wall-clock one."""
+    src = """\
+        import time
+
+        def stamp():
+            return time.perf_counter()
+    """
+    obs_path = _write(tmp_path, "repro/obs/clock2.py", src)
+    rule = DeterminismRule()
+    assert rule.applies(obs_path)              # still a scoped module
+    assert not _findings(obs_path, rule)       # ...but the clock is allowed
+    core_path = _write(tmp_path, "repro/core/clock2.py", src)
+    assert len(_findings(core_path, rule)) == 1
+
+
+def test_determinism_obs_module_still_checked_for_rng(tmp_path):
+    """The obs exemption covers *only* the clock — unkeyed RNG in an
+    obs module still fails."""
+    path = _write(tmp_path, "repro/obs/sample.py", """\
+        import numpy as np
+
+        def jitter(n):
+            return np.random.rand(n)
+    """)
+    found = _findings(path, DeterminismRule())
+    assert len(found) == 1
+    assert found[0].line == _line_of(path, "np.random.rand(n)")
 
 
 def test_determinism_flags_host_effect_in_jit(tmp_path):

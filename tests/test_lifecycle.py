@@ -559,6 +559,99 @@ def test_collapse_injection_one_repair_burst_recovers(tiny_world):
     assert m["recall_ratio"] >= 0.8 * min(base["recall_ratio"], 1.0)
 
 
+def _runtime_with_telemetry(tiny_world, tiny_cfg, tmp_path=None, **lkw):
+    from repro.data.edge_dataset import build_neighbor_tables
+    from repro.lifecycle.runtime import LifecycleConfig, LifecycleRuntime
+    from repro.obs import FixedClock, MemorySink, Telemetry
+    import repro.core.graph_builder as GB
+    sink = MemorySink()
+    tel = Telemetry(sink=sink, clock=FixedClock())
+    g = GB.build_graph(tiny_world.day0, k_cap=16, hub_cap=12,
+                       keep_state=True)
+    tables = build_neighbor_tables(g, k_imp=10, n_walks=12, walk_len=3,
+                                   keep_state=True)
+    lcfg = LifecycleConfig(steps_per_cycle=1, batch_per_type=8,
+                           recall_queries=40, recall_k=20, **lkw)
+    rt = LifecycleRuntime(tiny_cfg, lcfg, g, tables,
+                          tiny_world.user_feat, tiny_world.item_feat,
+                          world=tiny_world,
+                          snapshot_dir=(str(tmp_path) if tmp_path
+                                        else None),
+                          seed=0, telemetry=tel)
+    return rt, tel, sink
+
+
+def _trace(sink):
+    import json
+    return [json.loads(ln) for ln in sink.lines]
+
+
+def test_run_cycle_emits_lifecycle_spans_and_counters(tiny_world,
+                                                      tiny_cfg):
+    """One successful cycle under a private telemetry instance: the
+    stage spans (cycle -> train/publish/swap) land in the trace with
+    correct parentage, the stage counters move, and the swap report's
+    ``span_id`` joins back to the trace."""
+    rt, tel, sink = _runtime_with_telemetry(tiny_world, tiny_cfg)
+    rep = rt.run_cycle(now=86400.0)
+    assert not rep["swap"].get("skipped")
+
+    spans = {r["name"]: r for r in _trace(sink) if r["type"] == "span"}
+    for name in ("lifecycle.cycle", "lifecycle.train",
+                 "lifecycle.publish", "lifecycle.swap"):
+        assert name in spans, name
+    cyc = spans["lifecycle.cycle"]
+    assert cyc["parent_id"] is None
+    for name in ("lifecycle.train", "lifecycle.publish",
+                 "lifecycle.swap"):
+        assert spans[name]["parent_id"] == cyc["span_id"]
+    assert spans["lifecycle.publish"]["attrs"]["gate_passed"] is True
+    assert spans["lifecycle.swap"]["attrs"]["bring_up"] is True
+    assert rep["swap"]["span_id"] == float(
+        spans["lifecycle.swap"]["span_id"])
+
+    snap = tel.snapshot()
+    assert snap["counters"]["train.steps"] == 1.0
+    assert snap["counters"]["publish.snapshots"] == 1.0
+    assert "publish.gate_failures" not in snap["counters"]
+    assert snap["hists"]["train.step_latency_s"]["n"] == 1
+    # every numeric publish metric surfaces as a publish.* gauge
+    for key in ("recall_ratio", "codebook_util_min"):
+        assert f"publish.{key}" in snap["gauges"]
+
+
+def test_repair_burst_outcome_surfaces_as_span_and_counters(tiny_world,
+                                                            tiny_cfg):
+    """A tripped gate with repair enabled: the repair attempt appears
+    as a ``lifecycle.repair`` span naming its trigger gate and outcome,
+    and the burst/reset counters move (the unsatisfiable floor keeps
+    the outcome deterministic: not healed, swap skipped)."""
+    rt, tel, sink = _runtime_with_telemetry(
+        tiny_world, tiny_cfg, min_recall_ratio=2.0,  # unsatisfiable
+        repair_attempts=1, repair_steps=1)
+    rep = rt.run_cycle(now=86400.0)
+    assert rep["swap"].get("skipped") is True
+    assert rep["repair"]["attempts"] == 1
+    assert rep["repair"]["healed"] is False
+
+    spans = [r for r in _trace(sink) if r["type"] == "span"]
+    repair = [s for s in spans if s["name"] == "lifecycle.repair"]
+    assert len(repair) == 1
+    assert "recall_ratio" in repair[0]["attrs"]["trigger"]
+    assert repair[0]["attrs"]["healed"] is False
+    assert repair[0]["attrs"]["attempt"] == 1
+    # the repair re-publish nests under the repair span
+    publishes = [s for s in spans if s["name"] == "lifecycle.publish"]
+    assert len(publishes) == 2
+    assert publishes[1]["parent_id"] == repair[0]["span_id"]
+
+    counters = tel.snapshot()["counters"]
+    assert counters["lifecycle.repair_bursts"] == 1.0
+    assert counters["publish.gate_failures"] == 2.0
+    assert counters["publish.snapshots"] == 2.0
+    assert "lifecycle.repair_healed" not in counters
+
+
 @pytest.mark.slow
 def test_run_cycle_repairs_gate_failure_end_to_end(tiny_world):
     """``run_cycle`` with an injected collapse converges to a published,

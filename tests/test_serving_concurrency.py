@@ -7,12 +7,14 @@ The heavyweight R-reader/W-writer storm with throughput gating lives in
 contracts at test-tier sizes.
 """
 import threading
+import time
 
 import numpy as np
 
 from repro.core.serving import BufPool, ClusterQueueStore, ThreadLocalPools
 from repro.lifecycle.swap import EventRing, SwapServer
 from repro.lifecycle.snapshot import IndexSnapshot, derive_members
+from repro.obs import FixedClock, MemorySink, Telemetry
 
 from tests._hypothesis_fallback import given, settings, st
 
@@ -387,3 +389,153 @@ def test_swap_report_true_replay_count_and_stale_drop():
     assert server.ring_dropped == big - server.ring.capacity
     rep2 = server.swap_to(snap_a, now=100.0)
     assert rep2["ring_dropped"] == float(big - server.ring.capacity)
+
+
+# ---------------------------------------------------------------------------
+# seqlock telemetry: retry / fallback counters
+# ---------------------------------------------------------------------------
+
+def test_seqlock_retry_counter_counts_gen_moves():
+    """White-box determinism: a read whose generations move underneath
+    it retries exactly once and ticks ``serving.seqlock_retries``, and
+    the returned value comes from the consistent re-read."""
+    tel = Telemetry()                         # NullSink: metrics only
+    store = ClusterQueueStore(np.array([0]), queue_len=8,
+                              recency_s=1e9, telemetry=tel)
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            store.gen[0] += 2    # still even, but *moved*: torn read
+        return calls["n"]
+
+    assert store._seqlock_read(np.array([0]), fn) == 2
+    counters = tel.snapshot()["counters"]
+    assert counters["serving.seqlock_retries"] == 1.0
+    assert "serving.seqlock_fallbacks" not in counters
+
+
+def test_seqlock_odd_gen_exhausts_spins_then_falls_back():
+    """A generation stuck odd (writer mid-flight forever) burns the
+    whole spin budget — every collision counted — then takes exactly
+    one locked fallback."""
+    tel = Telemetry()
+    store = ClusterQueueStore(np.array([0]), queue_len=8,
+                              recency_s=1e9, telemetry=tel)
+    store.gen[0] = 1                          # permanently mid-flight
+    assert store._seqlock_read(np.array([0]), lambda: 9) == 9
+    counters = tel.snapshot()["counters"]
+    assert counters["serving.seqlock_retries"] == float(
+        store._SEQLOCK_SPINS)
+    assert counters["serving.seqlock_fallbacks"] == 1.0
+
+
+def test_seqlock_fallback_counter_and_retrieve_metrics():
+    """The forced-fallback path (zero spin budget) ticks the fallback
+    counter but no retries; the retrieve wrapper records the request
+    count and a latency observation either way."""
+    tel = Telemetry()
+    store = ClusterQueueStore(np.array([0, 1]), queue_len=8,
+                              recency_s=1e9, telemetry=tel)
+    store.ingest(np.array([0, 1]), np.array([5, 6]),
+                 np.array([1.0, 2.0]))
+    store._SEQLOCK_SPINS = 0
+    assert store.retrieve(0, 10.0, 4) == [5]
+    snap = tel.snapshot()
+    assert snap["counters"]["serving.seqlock_fallbacks"] == 1.0
+    assert snap["counters"]["serving.retrieve_requests"] == 1.0
+    assert "serving.seqlock_retries" not in snap["counters"]
+    assert snap["counters"]["serving.ingest_events"] == 2.0
+    assert snap["hists"]["serving.retrieve_latency_s"]["n"] == 1
+    assert snap["gauges"]["serving.queue_depth_max"] == 1.0
+
+
+def test_seqlock_counters_move_under_writer_racing_readers():
+    """The satellite contract: under a writer-racing-readers workload
+    the retry counter actually moves.  The writer holds every cluster's
+    generation odd for a beat per iteration (the mid-flight window a
+    real scatter would occupy), so overlapping readers must observe the
+    collision and retry or fall back — and every request still
+    completes and is counted."""
+    tel = Telemetry()
+    n_users, C = 64, 8
+    store = ClusterQueueStore(np.arange(n_users) % C, queue_len=16,
+                              recency_s=1e9, telemetry=tel)
+    store.ingest(np.arange(n_users), np.arange(n_users),
+                 np.arange(n_users, dtype=float))
+    stop = threading.Event()
+    errs = []
+
+    def writer():
+        try:
+            while not stop.is_set():
+                with store.write_lock:
+                    store.gen += 1            # enter: odd, readers spin
+                    time.sleep(2e-4)
+                    store.gen += 1            # exit: even again
+                time.sleep(0)                 # let readers through
+        except Exception as e:                # pragma: no cover
+            errs.append(e)
+
+    def reader():
+        try:
+            users = np.arange(n_users)
+            for _ in range(150):
+                out = store.retrieve_batch(users, 1e6, 8)
+                assert out.shape == (n_users, 8)
+        except Exception as e:                # pragma: no cover
+            errs.append(e)
+
+    wt = threading.Thread(target=writer)
+    rts = [threading.Thread(target=reader) for _ in range(2)]
+    wt.start()
+    for t in rts:
+        t.start()
+    for t in rts:
+        t.join()
+    stop.set()
+    wt.join()
+    assert not errs, errs
+    counters = tel.snapshot()["counters"]
+    assert counters["serving.retrieve_requests"] == 300.0
+    assert counters.get("serving.seqlock_retries", 0.0) > 0.0
+    hist = tel.snapshot()["hists"]["serving.retrieve_latency_s"]
+    assert hist["n"] == 300
+
+
+def test_swap_telemetry_counters_and_span_join_key():
+    """``swap_to`` under an enabled telemetry instance: the stall spans
+    land in the trace, the replay/drop counters match the swap report,
+    and the report's ``span_id`` joins to the ``lifecycle.swap`` span
+    record."""
+    import json
+
+    sink = MemorySink()
+    tel = Telemetry(sink=sink, clock=FixedClock())
+    rng = np.random.default_rng(11)
+    n_users, n_items = 30, 20
+    snap_a = _mk_snapshot(rng, 1, n_users, n_items, flip=0)
+    snap_b = _mk_snapshot(rng, 2, n_users, n_items, flip=1)
+    server = SwapServer(snap_a, queue_len=8, recency_s=1e9,
+                        telemetry=tel)
+    server.ingest(rng.integers(0, n_users, 50),
+                  rng.integers(0, n_items, 50),
+                  np.sort(rng.random(50) * 40.0))
+    rep = server.swap_to(snap_b, now=100.0)
+
+    counters = tel.snapshot()["counters"]
+    assert counters["swap.replayed_events"] == rep["replayed_events"]
+    assert counters["swap.dropped_stale"] == rep["dropped_stale"]
+    assert "swap.ring_dropped" not in counters    # nothing overflowed
+
+    recs = [json.loads(ln) for ln in sink.lines]
+    spans = {r["name"]: r for r in recs if r["type"] == "span"}
+    for name in ("swap.build", "swap.replay", "swap.catchup",
+                 "swap.flip", "swap.post_drain", "lifecycle.swap"):
+        assert name in spans, name
+    root = spans["lifecycle.swap"]
+    assert rep["span_id"] == float(root["span_id"])
+    for name in ("swap.catchup", "swap.flip", "swap.post_drain"):
+        assert spans[name]["parent_id"] == root["span_id"]
+    assert root["attrs"]["to_version"] == 2
