@@ -1,0 +1,107 @@
+"""Fault-recovery benchmark: how fast the lifecycle returns to a
+healthy swap after injected failures — and that it never serves garbage
+on the way.
+
+Drives :func:`repro.faults.chaos.run_chaos` (the full-coverage seeded
+schedule: transient train/gate/refresh faults, a torn leaf, a crash at
+the atomic-rename point, bit-rot on recovery load, ring overload, a
+flip failure, and a post-swap health regression) and gates on:
+
+  * ``corrupt_serves == 0`` — no probe was ever answered by a version
+    that did not pass its publication gate (torn/corrupt snapshots are
+    quarantined, gate failures never persist);
+  * every chaos invariant (recall floor, exactly-once events, every
+    injection traced) holds;
+  * ``max_recovery_cycles <= FAULT_MAX_RECOVERY_CYCLES`` (default 2) —
+    after *any* disruption (crash, degraded cycle, rollback) the
+    runtime is back to a clean, non-degraded swap within that many
+    cycles.
+
+Results land in ``benchmarks/results/lifecycle_faults.json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+from benchmarks.common import write_result
+
+
+def _recovery_spans(cycle_log: List[Dict]) -> List[int]:
+    """Cycles from each disruption to the next clean forward swap."""
+
+    def clean(c: Dict) -> bool:
+        swap = c.get("swap", {})
+        return (not c.get("crashed") and not c.get("degraded")
+                and not swap.get("skipped") and not swap.get("rolled_back")
+                and "to_version" in swap)
+
+    spans = []
+    for i, c in enumerate(cycle_log):
+        if clean(c):
+            continue
+        healthy = [j for j in range(i + 1, len(cycle_log))
+                   if clean(cycle_log[j])]
+        spans.append((healthy[0] - i) if healthy
+                     else len(cycle_log) - i)  # never recovered: worst
+    return spans
+
+
+def run(full: bool = False) -> Dict:
+    from repro.faults.chaos import REQUIRED_SITES, run_chaos
+
+    max_recovery = int(os.environ.get("FAULT_MAX_RECOVERY_CYCLES", "2"))
+    seeds = (0, 1, 2) if full else (0,)
+    out: Dict = dict(seeds=list(seeds), gates={})
+    worst_recovery = 0
+    corrupt_serves = 0
+
+    for seed in seeds:
+        with tempfile.TemporaryDirectory() as d:
+            t0 = time.perf_counter()
+            rep = run_chaos(seed, snapshot_dir=os.path.join(d, "snaps"))
+            wall = time.perf_counter() - t0
+        spans = _recovery_spans(rep["cycle_log"])
+        bad = [v for v in rep["served_versions"]
+               if v not in rep["good_versions"]]
+        corrupt_serves += len(bad)
+        worst_recovery = max([worst_recovery] + spans)
+        out[f"seed{seed}"] = dict(
+            wall_s=wall,
+            injected=len(rep["injected"]),
+            sites=rep["sites_injected"],
+            crashes=rep["crashes"],
+            recoveries=rep["recoveries"],
+            recovery_spans=spans,
+            served_versions=rep["served_versions"],
+            corrupt_serves=len(bad),
+            duplicates=rep["duplicates"],
+            invariants=rep["invariants"],
+            counters=rep["counters"],
+        )
+        assert set(rep["sites_injected"]) >= set(REQUIRED_SITES), \
+            f"seed {seed}: schedule missed required fault sites"
+        assert all(rep["invariants"].values()), \
+            f"seed {seed}: invariant violated: {rep['invariants']}"
+
+    out["max_recovery_cycles"] = worst_recovery
+    out["corrupt_serves"] = corrupt_serves
+    out["gates"] = dict(fault_max_recovery_cycles=max_recovery,
+                        corrupt_serves_allowed=0)
+    print(f"  recovery spans (cycles to healthy swap): worst="
+          f"{worst_recovery} (gate <= {max_recovery})")
+    print(f"  corrupt serves: {corrupt_serves} (gate == 0)")
+    assert corrupt_serves == 0, \
+        f"{corrupt_serves} probe(s) answered by a non-gated version"
+    assert worst_recovery <= max_recovery, \
+        (f"recovery took {worst_recovery} cycles "
+         f"(FAULT_MAX_RECOVERY_CYCLES={max_recovery})")
+    write_result("lifecycle_faults", out)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

@@ -24,6 +24,7 @@ def main(argv=None) -> int:
 
     from benchmarks import paper_tables as PT
     from benchmarks import graph_build_scaling as GBS
+    from benchmarks import lifecycle_faults as LF
     from benchmarks import lifecycle_swap as LS
     from benchmarks import obs_overhead as OO
     from benchmarks import roofline as RL
@@ -44,6 +45,7 @@ def main(argv=None) -> int:
         ("serving_kernels", SK.run),
         ("train_throughput", TT.run),
         ("lifecycle_swap", LS.run),
+        ("lifecycle_faults", LF.run),
         ("serving_concurrency", SC.run),
         ("obs_overhead", OO.run),
         ("roofline", RL.run),
@@ -77,6 +79,10 @@ def main(argv=None) -> int:
                 elif "modeled_cost_reduction" in out:
                     derived = (f"cost_reduction="
                                f"{out['modeled_cost_reduction']*100:.0f}%")
+                elif "max_recovery_cycles" in out:
+                    derived = (f"recovery_cycles="
+                               f"{out['max_recovery_cycles']};"
+                               f"corrupt_serves={out['corrupt_serves']}")
                 elif "n_over_budget" in out:
                     derived = (f"kernels={out['n_kernels']};over_budget="
                                f"{out['n_over_budget']}")

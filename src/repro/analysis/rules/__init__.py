@@ -6,18 +6,19 @@ from typing import Dict, List
 from repro.analysis.base import Rule
 from repro.analysis.rules.determinism import DeterminismRule
 from repro.analysis.rules.donation import DonationSafetyRule
+from repro.analysis.rules.error_handling import ErrorHandlingRule
 from repro.analysis.rules.lock_discipline import LockDisciplineRule
 from repro.analysis.rules.vmem_budget import VmemBudgetRule
 
 ALL_RULE_CLASSES = (LockDisciplineRule, DonationSafetyRule,
-                    DeterminismRule, VmemBudgetRule)
+                    DeterminismRule, ErrorHandlingRule, VmemBudgetRule)
 
 
 def default_rules(**vmem_kwargs) -> List[Rule]:
     """One fresh instance of every registered rule.  ``vmem_kwargs``
     (``budget_bytes``, ``report_path``) parameterize the VMEM pass."""
     return [LockDisciplineRule(), DonationSafetyRule(), DeterminismRule(),
-            VmemBudgetRule(**vmem_kwargs)]
+            ErrorHandlingRule(), VmemBudgetRule(**vmem_kwargs)]
 
 
 def rules_by_name() -> Dict[str, type]:

@@ -9,7 +9,7 @@ host effects inside a trace either fail under jit or silently run once
 at trace time, which is worse.
 
 Three checks, scoped to library code
-(``src/repro/{core,lifecycle,kernels,data,models,obs}/``):
+(``src/repro/{core,lifecycle,kernels,data,models,obs,faults}/``):
 
 * **unkeyed RNG** — any ``np.random.<fn>()`` module-level call (global
   mutable RNG state), and any ``default_rng()`` whose seed is missing,
@@ -36,7 +36,8 @@ from typing import Dict, List, Set
 
 from repro.analysis.base import Finding, ModuleContext, Rule, dotted_name
 
-SCOPE_DIRS = ("core", "lifecycle", "kernels", "data", "models", "obs")
+SCOPE_DIRS = ("core", "lifecycle", "kernels", "data", "models", "obs",
+              "faults")
 
 #: the one module tree allowed to read the raw wall clock — everything
 #: else injects ``repro.obs.clock.Clock`` (usually via a telemetry span)

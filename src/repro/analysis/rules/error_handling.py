@@ -1,0 +1,95 @@
+"""Rule ``error-handling`` — no silent exception swallows in library code.
+
+The fault-tolerance contract (PR 9) is that every failure is *visible*:
+a stage either retries, degrades with a counter, or propagates.  A bare
+``except:`` (which also eats ``KeyboardInterrupt``/``SystemExit`` — and
+here, the chaos layer's ``InjectedCrash``) or an
+``except Exception: pass`` swallow hides exactly the failures the
+degradation machinery and the chaos tier exist to surface.
+
+Two checks, scoped to library code
+(``src/repro/{core,lifecycle,data,kernels}/``):
+
+* **bare except** — ``except:`` with no exception type, flagged
+  unconditionally: it cannot distinguish a recoverable failure from
+  process-control exceptions.
+* **broad swallow** — ``except Exception`` / ``except BaseException``
+  (alone or inside a tuple) whose handler body does *nothing* (only
+  ``pass``, ``...`` or a docstring).  Broad handlers that do real work
+  — count, shed, quarantine, return a fallback — are legitimate
+  degradation and are not flagged.
+
+Escape hatch: the standard pragma,
+``# repro: disable=error-handling — reason``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.base import Finding, ModuleContext, Rule, dotted_name
+
+SCOPE_DIRS = ("core", "lifecycle", "data", "kernels")
+
+BROAD_NAMES = ("Exception", "BaseException",
+               "builtins.Exception", "builtins.BaseException")
+
+
+def _in_scope(path: str) -> bool:
+    parts = path.replace("\\", "/").split("/")
+    return "repro" in parts and any(d in parts for d in SCOPE_DIRS)
+
+
+def _is_broad(expr: ast.expr) -> bool:
+    """True when the except clause catches Exception/BaseException,
+    directly or as a member of a tuple clause."""
+    if isinstance(expr, ast.Tuple):
+        return any(_is_broad(e) for e in expr.elts)
+    return dotted_name(expr) in BROAD_NAMES
+
+
+def _body_is_swallow(body: List[ast.stmt]) -> bool:
+    """A handler body that does nothing: only pass / ``...`` / a bare
+    string (docstring-style comment)."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and (stmt.value.value is Ellipsis
+                     or isinstance(stmt.value.value, str))):
+            continue
+        return False
+    return True
+
+
+class ErrorHandlingRule(Rule):
+    name = "error-handling"
+    description = ("bare `except:` and do-nothing `except Exception:` "
+                   "swallows in library code hide failures the "
+                   "degradation/chaos machinery must see")
+
+    def applies(self, path: str) -> bool:
+        return _in_scope(path)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(Finding(
+                    self.name, ctx.path, node.lineno, node.col_offset,
+                    "bare `except:` also catches KeyboardInterrupt/"
+                    "SystemExit (and InjectedCrash) — name the "
+                    "exceptions, or `except Exception` with real "
+                    "handling"))
+            elif _is_broad(node.type) and _body_is_swallow(node.body):
+                caught = (dotted_name(node.type)
+                          if not isinstance(node.type, ast.Tuple)
+                          else "Exception")
+                out.append(Finding(
+                    self.name, ctx.path, node.lineno, node.col_offset,
+                    f"`except {caught}` swallows the failure silently — "
+                    f"count it, degrade explicitly, or re-raise"))
+        return out

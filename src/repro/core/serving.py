@@ -229,6 +229,12 @@ class ClusterQueueStore:
         ts64 = np.asarray(timestamps, np.float64).ravel()
         cl_all, known = self.clusters_of(user_ids)
         if not known.all():
+            # graceful degradation: post-snapshot users are shed, not
+            # errored — the drop is surfaced as a counter so staleness
+            # between publications is observable
+            if self.tel.enabled:
+                self.tel.counter("serving.unknown_user_events",
+                                 float((~known).sum()))
             cl_all = cl_all[known]
             item_ids = item_ids[known]
             ts64 = ts64[known]
@@ -358,6 +364,9 @@ class ClusterQueueStore:
         valid &= mask
         if not known.all():
             valid &= known[:, None]          # unknown users: empty rows
+            if tel.enabled:
+                tel.counter("serving.unknown_user_requests",
+                            float((~known).sum()))
         out = dedup_topk_rows(rows, age, valid, k, Q, pool)
         if tel.enabled:
             tel.observe("serving.retrieve_latency_s",
@@ -396,6 +405,9 @@ class ClusterQueueStore:
             if not known.all():
                 seeds[~known] = -1           # unknown users: empty rows
                 union[~known] = -1
+                if self.tel.enabled:
+                    self.tel.counter("serving.unknown_user_requests",
+                                     float((~known).sum()))
             return seeds, union
         seeds = self.retrieve_batch(user_ids, now, n_recent)
         if i2i is None:

@@ -1,0 +1,31 @@
+"""repro.faults — deterministic, seeded fault injection for the lifecycle.
+
+See :mod:`repro.faults.plan` for the schedule semantics and
+:mod:`repro.faults.chaos` for the full-lifecycle chaos harness used by
+the ``pytest -m chaos`` tier and ``benchmarks/lifecycle_faults.py``.
+"""
+from repro.faults.plan import (
+    ACTIONS,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedCrash,
+    InjectedFault,
+    clear_plan,
+    corrupt_file,
+    get_faults,
+    install_plan,
+)
+
+__all__ = [
+    "ACTIONS",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedCrash",
+    "InjectedFault",
+    "clear_plan",
+    "corrupt_file",
+    "get_faults",
+    "install_plan",
+]

@@ -15,13 +15,15 @@ here for the first time:
   * ``runtime``   the hour-level orchestrator chaining incremental
                   graph refresh -> training burst -> publish -> swap.
 """
-from repro.lifecycle.snapshot import IndexSnapshot, SnapshotStore
+from repro.lifecycle.snapshot import (IndexSnapshot, SnapshotCorruptError,
+                                      SnapshotStore)
 from repro.lifecycle.publish import build_snapshot, evaluate_snapshot
 from repro.lifecycle.swap import SnapshotHandle, SwapServer
-from repro.lifecycle.runtime import LifecycleConfig, LifecycleRuntime
+from repro.lifecycle.runtime import (LifecycleConfig, LifecycleRuntime,
+                                     StageFailed)
 
 __all__ = [
-    "IndexSnapshot", "SnapshotStore", "build_snapshot",
-    "evaluate_snapshot", "SnapshotHandle", "SwapServer",
-    "LifecycleConfig", "LifecycleRuntime",
+    "IndexSnapshot", "SnapshotCorruptError", "SnapshotStore",
+    "build_snapshot", "evaluate_snapshot", "SnapshotHandle", "SwapServer",
+    "LifecycleConfig", "LifecycleRuntime", "StageFailed",
 ]

@@ -22,7 +22,9 @@ reports one dict per cycle.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+import time
+import zlib
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +36,26 @@ from repro.core import trainer as T
 from repro.core.graph_builder import EngagementLog, HeteroGraph
 from repro.data.edge_dataset import (EdgeDataset, NeighborTables,
                                      incremental_refresh)
+from repro.faults import InjectedCrash, get_faults
 from repro.lifecycle.publish import (build_snapshot, encode_corpus,
                                      evaluate_snapshot, snapshot_health)
-from repro.lifecycle.snapshot import IndexSnapshot, SnapshotStore
+from repro.lifecycle.snapshot import (IndexSnapshot, SnapshotCorruptError,
+                                      SnapshotStore)
 from repro.lifecycle.swap import SwapServer
 from repro.obs import get_telemetry
+
+
+class StageFailed(RuntimeError):
+    """A lifecycle stage exhausted its retry budget.  ``run_cycle``
+    absorbs this into degraded serving when a live server exists;
+    without one (bring-up) it propagates to the caller."""
+
+    def __init__(self, stage: str, attempts: int, cause: BaseException):
+        super().__init__(f"stage {stage!r} failed after {attempts} "
+                         f"attempt(s): {cause}")
+        self.stage = stage
+        self.attempts = attempts
+        self.cause = cause
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +98,25 @@ class LifecycleConfig:
                           Pallas ``rq_assign`` kernel (TPU) instead of
                           the jitted reference (CPU);
     ``snapshot_keep``     on-disk snapshot retention (when a
-                          ``SnapshotStore`` directory is attached).
+                          ``SnapshotStore`` directory is attached);
+    ``stage_retries``     fault tolerance: how many times a failed
+                          refresh/train/publish/swap stage is retried
+                          before the cycle degrades (0 = fail fast);
+    ``retry_backoff_s``   base of the exponential retry backoff; the
+                          jitter is a tuple-keyed RNG draw, so a seeded
+                          run's sleep schedule is bit-reproducible
+                          (0 disables sleeping between retries);
+    ``stage_deadline_s``  per-stage deadline: an overrun is *detected*
+                          (counter + degraded mark) but the result is
+                          kept — re-running a completed refresh would
+                          merge its delta twice (0 disables);
+    ``rollback_on_regression``
+                          post-swap health probe: after every flip a
+                          small live retrieve must answer from the new
+                          version; on regression the server is rolled
+                          back to the previous good snapshot;
+    ``post_swap_probe``   how many users the post-swap probe retrieves
+                          (0 disables the probe).
     """
     steps_per_cycle: int = 50
     batch_per_type: int = 64
@@ -103,6 +138,11 @@ class LifecycleConfig:
     encode_chunk: int = 8192
     use_kernel: bool = False
     snapshot_keep: int = 3
+    stage_retries: int = 0
+    retry_backoff_s: float = 0.0
+    stage_deadline_s: float = 0.0
+    rollback_on_regression: bool = True
+    post_swap_probe: int = 8
 
 
 class LifecycleRuntime:
@@ -115,8 +155,11 @@ class LifecycleRuntime:
                  g: HeteroGraph, tables: NeighborTables,
                  user_feat: np.ndarray, item_feat: np.ndarray, *,
                  world: Any = None, snapshot_dir: Optional[str] = None,
-                 seed: int = 0, telemetry=None):
+                 seed: int = 0, telemetry=None, faults=None,
+                 sleep: Optional[Callable[[float], None]] = None):
         self.tel = telemetry if telemetry is not None else get_telemetry()
+        self.faults = faults if faults is not None else get_faults()
+        self._sleep = sleep if sleep is not None else time.sleep
         self.cfg = cfg
         self.lcfg = lcfg
         self.world = world
@@ -130,14 +173,92 @@ class LifecycleRuntime:
         self._step_fn = None         # built by _rebuild_dataset below
         self._features_stale = True
         self.store = (SnapshotStore(snapshot_dir,
-                                    keep=lcfg.snapshot_keep)
+                                    keep=lcfg.snapshot_keep,
+                                    faults=self.faults,
+                                    telemetry=self.tel)
                       if snapshot_dir else None)
         self.server: Optional[SwapServer] = None
         self.cycle = 0
         self.version = 0
         self._last_user_emb: Optional[np.ndarray] = None
         self._last_item_emb: Optional[np.ndarray] = None
+        # degradation bookkeeping: serving pinned on _last_good while
+        # degraded; stale_cycles counts publish-eligible cycles served
+        # from an old version
+        self.degraded = False
+        self.stale_cycles = 0
+        self._last_good: Optional[IndexSnapshot] = None
         self._rebuild_dataset()
+
+    # -- stage isolation ----------------------------------------------------
+
+    def _backoff_s(self, stage: str, attempt: int) -> float:
+        """Exponential backoff with *deterministic* jitter: the jitter
+        factor is a tuple-keyed RNG draw (seed, stage, attempt), so a
+        seeded run's retry schedule replays bit-identically."""
+        base = self.lcfg.retry_backoff_s
+        if base <= 0:
+            return 0.0
+        j = np.random.default_rng(
+            (self.seed, zlib.crc32(stage.encode()), attempt)).random()
+        return base * (2.0 ** attempt) * (1.0 + 0.5 * j)
+
+    def _run_stage(self, stage: str, fn: Callable[[], Any]) -> Any:
+        """Run one lifecycle stage under the fault-tolerance contract:
+        up to ``stage_retries`` keyed-backoff retries on failure, then
+        :class:`StageFailed`; a deadline overrun is counted and marks
+        the runtime degraded but the completed result is KEPT (re-running
+        a refresh that finished late would merge its delta twice).
+        :class:`InjectedCrash` (simulated process death) is never
+        retried or absorbed."""
+        retries = max(self.lcfg.stage_retries, 0)
+        deadline = self.lcfg.stage_deadline_s
+        tel = self.tel
+        for attempt in range(retries + 1):
+            t0 = tel.clock.perf() if deadline > 0 else 0.0
+            try:
+                out = fn()
+            except InjectedCrash:
+                raise
+            except Exception as e:
+                tel.counter("lifecycle.stage_failures")
+                with tel.span("lifecycle.stage_failure", stage=stage,
+                              attempt=attempt, error=str(e)):
+                    pass
+                if attempt >= retries:
+                    raise StageFailed(stage, attempt + 1, e) from e
+                wait = self._backoff_s(stage, attempt)
+                tel.counter("lifecycle.stage_retries")
+                if wait > 0:
+                    self._sleep(wait)
+                continue
+            if deadline > 0 and tel.clock.perf() - t0 > deadline:
+                tel.counter("lifecycle.deadline_overruns")
+                self._mark_degraded(f"{stage}_deadline")
+            return out
+
+    def _mark_degraded(self, reason: str) -> None:
+        self.degraded = True
+        self.tel.gauge("lifecycle.degraded", 1.0)
+        self.tel.counter("lifecycle.degraded_events")
+        with self.tel.span("lifecycle.degraded", reason=reason):
+            pass
+
+    def _mark_healthy(self) -> None:
+        if self.degraded:
+            self.tel.counter("lifecycle.recoveries")
+        self.degraded = False
+        self.stale_cycles = 0
+        self.tel.gauge("lifecycle.degraded", 0.0)
+        self.tel.gauge("lifecycle.stale_cycles", 0.0)
+
+    def _count_stale_cycle(self) -> None:
+        """A publish-eligible cycle ended still serving an old version."""
+        if self.server is None:
+            return
+        self.stale_cycles += 1
+        self.tel.counter("lifecycle.stale_cycles")
+        self.tel.gauge("lifecycle.stale_cycles", float(self.stale_cycles))
 
     # -- stage plumbing -----------------------------------------------------
 
@@ -164,6 +285,9 @@ class LifecycleRuntime:
                 backend: Optional[str] = None) -> Dict:
         """Stage 1: splice the trailing window in.  Grown id spaces must
         come with grown feature tables."""
+        # models an upstream log-fetch failure: fires before any state
+        # mutates, so a retried refresh replays the same delta cleanly
+        self.faults.fire("stage.refresh", cycle=self.cycle)
         prev_emb = (np.concatenate([self._last_user_emb,
                                     self._last_item_emb], axis=0)
                     if self._last_user_emb is not None else None)
@@ -217,6 +341,7 @@ class LifecycleRuntime:
         with tel.span("lifecycle.train", steps=int(steps)):
             for t in range(steps):
                 t_step = tel.clock.perf() if tel.enabled else 0.0
+                self.faults.fire("train.step", step=base + t)
                 batch = jax.tree.map(
                     jnp.asarray, self.dataset.sample_batch(
                         base + t, self.seed, per_type))
@@ -367,6 +492,7 @@ class LifecycleRuntime:
             snap = dataclasses.replace(
                 snap, gate_metrics=tuple(sorted(
                     (k, float(v)) for k, v in metrics.items())))
+            self.faults.fire("gate.eval", version=int(self.version))
             passed = self.gate_passes(snap)
             if tel.enabled:
                 for k, v in metrics.items():
@@ -398,13 +524,76 @@ class LifecycleRuntime:
                     snap, queue_len=self.lcfg.queue_len,
                     recency_s=self.lcfg.recency_s,
                     ring_capacity=self.lcfg.ring_capacity,
-                    telemetry=self.tel)
+                    telemetry=self.tel, faults=self.faults)
             return dict(from_version=0.0,
                         to_version=float(snap.version),
                         build_ms=0.0, stall_ms=0.0, replayed_events=0.0,
                         dropped_stale=0.0, ring_dropped=0.0,
                         span_id=float(sp.span_id))
         return self.server.swap_to(snap, now)
+
+    def _post_swap_health(self, snap: IndexSnapshot, now: float) -> bool:
+        """Post-flip smoke probe: a small live retrieve must answer from
+        the freshly flipped version.  Catches regressions that only
+        manifest in the *serving* copy of the snapshot (store build,
+        replay, id-space wiring) — the publication gate cannot see
+        those.  Returns ``False`` on any probe failure."""
+        n = min(self.lcfg.post_swap_probe, snap.n_users)
+        if n <= 0 or self.server is None:
+            return True
+        try:
+            self.faults.fire("health.post_swap",
+                             version=int(snap.version))
+            res, ver = self.server.retrieve_batch(
+                np.arange(n), now, min(self.lcfg.recall_k, 8))
+            ok = (ver == snap.version and res.shape[0] == n)
+        except InjectedCrash:
+            raise
+        except Exception as e:
+            with self.tel.span("lifecycle.post_swap_probe_error",
+                               error=str(e)):
+                pass
+            ok = False
+        if not ok:
+            self.tel.counter("lifecycle.post_swap_regressions")
+        return ok
+
+    def _rollback(self, now: float) -> Optional[Dict[str, float]]:
+        """Roll serving back to the previous good snapshot after a
+        post-swap health regression.  Returns the rollback swap report
+        (``None`` when there is no previous good version to return to —
+        serving stays on the regressed snapshot, degraded)."""
+        prev = self._last_good
+        if prev is None or self.server is None:
+            return None
+        with self.tel.span("lifecycle.rollback",
+                           to_version=int(prev.version)):
+            rep = self.server.swap_to(prev, now)
+        self.tel.counter("lifecycle.rollbacks")
+        return rep
+
+    def recover_serving(self, now: float = 0.0) -> Optional[int]:
+        """Crash recovery: bring serving up from the newest retained
+        snapshot that verifies (corrupt versions are quarantined by the
+        store walk).  Returns the recovered version, or ``None`` when
+        the store is absent or holds no loadable snapshot."""
+        if self.store is None:
+            return None
+        try:
+            snap = self.store.load_latest_good()
+        except (FileNotFoundError, SnapshotCorruptError):
+            return None
+        with self.tel.span("lifecycle.recover",
+                           version=int(snap.version)):
+            self.server = SwapServer(
+                snap, queue_len=self.lcfg.queue_len,
+                recency_s=self.lcfg.recency_s,
+                ring_capacity=self.lcfg.ring_capacity,
+                telemetry=self.tel, faults=self.faults)
+        self.version = max(self.version, snap.version)
+        self._last_good = snap
+        self.tel.counter("lifecycle.serving_recovered")
+        return int(snap.version)
 
     # -- the loop -----------------------------------------------------------
 
@@ -413,64 +602,142 @@ class LifecycleRuntime:
                   user_feat: Optional[np.ndarray] = None,
                   item_feat: Optional[np.ndarray] = None,
                   backend: Optional[str] = None) -> Dict[str, Any]:
-        """One full lifecycle cycle; returns a stage-by-stage report."""
+        """One full lifecycle cycle; returns a stage-by-stage report.
+
+        Stage isolation (PR 9): each stage runs under ``_run_stage``
+        (keyed-backoff retries + deadlines).  Once serving is live, a
+        stage that exhausts its retries *degrades* the cycle — serving
+        stays pinned on the last good snapshot, the failure lands in
+        the report and the ``lifecycle.degraded`` gauge — instead of
+        propagating.  Before serving exists (bring-up) there is nothing
+        to degrade to, so :class:`StageFailed` raises to the caller.
+        ``InjectedCrash`` always propagates (simulated process death).
+        """
         tel = self.tel
         report: Dict[str, Any] = dict(cycle=self.cycle)
         with tel.span("lifecycle.cycle", cycle=int(self.cycle)):
+            failed: Optional[StageFailed] = None
             if delta_log is not None:
-                r = self.refresh(delta_log, user_feat=user_feat,
-                                 item_feat=item_feat, backend=backend)
-                report["refresh"] = dict(
-                    touched_users=len(r["touched_users"]),
-                    touched_items=len(r["touched_items"]),
-                    affected_nodes=len(r["affected_nodes"]),
-                    refresh_seconds=r["refresh_seconds"])
-            report["train"] = self.train_burst()
+                try:
+                    r = self._run_stage("refresh", lambda: self.refresh(
+                        delta_log, user_feat=user_feat,
+                        item_feat=item_feat, backend=backend))
+                    report["refresh"] = dict(
+                        touched_users=len(r["touched_users"]),
+                        touched_items=len(r["touched_items"]),
+                        affected_nodes=len(r["affected_nodes"]),
+                        refresh_seconds=r["refresh_seconds"])
+                except StageFailed as e:
+                    if self.server is None:
+                        raise
+                    failed = e
+                    report["refresh"] = dict(failed=True, error=str(e))
+            if failed is None:
+                try:
+                    report["train"] = self._run_stage(
+                        "train", self.train_burst)
+                except StageFailed as e:
+                    if self.server is None:
+                        raise
+                    failed = e
+                    report["train"] = dict(failed=True, error=str(e))
             if self.cycle % max(self.lcfg.publish_every, 1) == 0:
-                snap = self.publish()
-                # self-healing: a tripped gate triggers bounded repair
-                # bursts (reset + short re-train + re-publish) so the
-                # cycle converges to a publishable index instead of
-                # wedging
-                attempts = 0
-                repairs = []
-                while (not self.gate_passes(snap)
-                       and attempts < self.lcfg.repair_attempts):
-                    attempts += 1
-                    trigger = ",".join(self._failing_gates(snap))
-                    with tel.span("lifecycle.repair",
-                                  attempt=attempts,
-                                  trigger=trigger) as rsp:
-                        rep = self.repair_burst(snap)
-                        snap = self.publish()
-                        healed = self.gate_passes(snap)
-                        n_reset = int(sum(rep["resets"].values()))
-                        rsp.set("resets", n_reset)
-                        rsp.set("healed", healed)
-                        if tel.enabled:
-                            tel.counter("lifecycle.repair_resets",
-                                        float(n_reset))
-                            if healed:
-                                tel.counter("lifecycle.repair_healed")
-                    repairs.append(rep)
-                if attempts:
-                    report["repair"] = dict(
-                        attempts=attempts,
-                        healed=self.gate_passes(snap),
-                        resets=[r["resets"] for r in repairs])
-                report["publish"] = dict(version=snap.version,
-                                         **snap.metrics)
-                if self.gate_passes(snap):
-                    report["swap"] = self.swap(snap, now)
+                if failed is not None:
+                    # an upstream stage already failed: stay pinned on
+                    # the last good snapshot, publish nothing
+                    self._mark_degraded(failed.stage)
+                    self._count_stale_cycle()
+                    report["swap"] = dict(skipped=True, degraded=True,
+                                          failed_stage=failed.stage)
                 else:
-                    report["swap"] = dict(
-                        skipped=True,
-                        recall_ratio=snap.metrics.get("recall_ratio"),
-                        item_recall_ratio=snap.metrics.get(
-                            "item_recall_ratio"),
-                        codebook_util_min=snap.metrics.get(
-                            "codebook_util_min"),
-                        hitrate10_recon=snap.metrics.get(
-                            "hitrate10_recon"))
+                    report.update(self._publish_and_swap(now))
         self.cycle += 1
+        report["degraded"] = self.degraded
+        report["stale_cycles"] = self.stale_cycles
         return report
+
+    def _publish_and_swap(self, now: float) -> Dict[str, Any]:
+        """The publish-eligible tail of a cycle: publish (+ bounded
+        self-healing repair), gate, swap, post-swap health probe with
+        rollback.  Every failure path leaves serving pinned on the last
+        good snapshot and says so in the returned report."""
+        tel = self.tel
+        out: Dict[str, Any] = {}
+        try:
+            snap = self._run_stage("publish", self.publish)
+        except StageFailed as e:
+            if self.server is None:
+                raise
+            self._mark_degraded("publish")
+            self._count_stale_cycle()
+            out["publish"] = dict(failed=True, error=str(e))
+            out["swap"] = dict(skipped=True, degraded=True,
+                               failed_stage="publish")
+            return out
+        # self-healing: a tripped gate triggers bounded repair bursts
+        # (reset + short re-train + re-publish) so the cycle converges
+        # to a publishable index instead of wedging.  The re-publish is
+        # a direct call — its span parents under lifecycle.repair.
+        attempts = 0
+        repairs = []
+        while (not self.gate_passes(snap)
+               and attempts < self.lcfg.repair_attempts):
+            attempts += 1
+            trigger = ",".join(self._failing_gates(snap))
+            with tel.span("lifecycle.repair",
+                          attempt=attempts,
+                          trigger=trigger) as rsp:
+                rep = self.repair_burst(snap)
+                snap = self.publish()
+                healed = self.gate_passes(snap)
+                n_reset = int(sum(rep["resets"].values()))
+                rsp.set("resets", n_reset)
+                rsp.set("healed", healed)
+                if tel.enabled:
+                    tel.counter("lifecycle.repair_resets",
+                                float(n_reset))
+                    if healed:
+                        tel.counter("lifecycle.repair_healed")
+            repairs.append(rep)
+        if attempts:
+            out["repair"] = dict(
+                attempts=attempts,
+                healed=self.gate_passes(snap),
+                resets=[r["resets"] for r in repairs])
+        out["publish"] = dict(version=snap.version, **snap.metrics)
+        if not self.gate_passes(snap):
+            # gate-blocked publish: the stale snapshot keeps serving
+            self._count_stale_cycle()
+            out["swap"] = dict(
+                skipped=True,
+                recall_ratio=snap.metrics.get("recall_ratio"),
+                item_recall_ratio=snap.metrics.get(
+                    "item_recall_ratio"),
+                codebook_util_min=snap.metrics.get(
+                    "codebook_util_min"),
+                hitrate10_recon=snap.metrics.get(
+                    "hitrate10_recon"))
+            return out
+        try:
+            out["swap"] = self._run_stage(
+                "swap", lambda: self.swap(snap, now))
+        except StageFailed as e:
+            if self.server is None:
+                raise
+            self._mark_degraded("swap")
+            self._count_stale_cycle()
+            out["swap"] = dict(skipped=True, degraded=True,
+                               failed_stage="swap", error=str(e))
+            return out
+        if (self.lcfg.rollback_on_regression
+                and not self._post_swap_health(snap, now)):
+            rb = self._rollback(now)
+            self._mark_degraded("post_swap_health")
+            self._count_stale_cycle()
+            out["swap"] = dict(out["swap"], rolled_back=True)
+            if rb is not None:
+                out["rollback"] = rb
+            return out
+        self._last_good = snap
+        self._mark_healthy()
+        return out

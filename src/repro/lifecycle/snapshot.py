@@ -24,7 +24,14 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import (CheckpointCorruptError,
+                                           Checkpointer)
+from repro.faults import get_faults
+from repro.obs import get_telemetry
+
+
+class SnapshotCorruptError(RuntimeError):
+    """A snapshot failed verification and no retained version is good."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,9 +110,13 @@ class SnapshotStore:
     directly — no template tree needed, shapes come from the ``.npy``
     headers."""
 
-    def __init__(self, directory: str, *, keep: int = 3):
+    def __init__(self, directory: str, *, keep: int = 3, faults=None,
+                 telemetry=None):
         self.dir = directory
-        self._ck = Checkpointer(directory, keep=keep)
+        self.faults = faults if faults is not None else get_faults()
+        self.tel = telemetry if telemetry is not None else get_telemetry()
+        # Checkpointer.__init__ sweeps step_*.tmp partials from crashes
+        self._ck = Checkpointer(directory, keep=keep, faults=self.faults)
 
     # -- publish ------------------------------------------------------------
 
@@ -132,12 +143,23 @@ class SnapshotStore:
     def latest_version(self) -> Optional[int]:
         return self._ck.latest_step()
 
-    def load(self, version: Optional[int] = None) -> IndexSnapshot:
+    def load(self, version: Optional[int] = None, *,
+             verify: bool = True) -> IndexSnapshot:
+        """Load one version, verifying every leaf against the checksums
+        recorded at publish time (``verify=False`` skips the re-hash).
+        Raises :class:`CheckpointCorruptError` on a torn or bit-rotted
+        snapshot — callers wanting automatic fallback through retained
+        versions use :meth:`load_latest_good`."""
         version = (version if version is not None
                    else self.latest_version())
         if version is None:
             raise FileNotFoundError(f"no snapshots under {self.dir}")
         d = os.path.join(self.dir, f"step_{version}")
+        # corrupt-at-load models on-disk rot discovered at read time
+        self.faults.fire("snapshot.load", version=version,
+                         path=os.path.join(d, "000000.npy"))
+        if verify:
+            self._ck.verify_step(version)
         with open(os.path.join(d, "manifest.json")) as f:
             meta = json.load(f)
         if meta.get("kind") != "index_snapshot":
@@ -161,3 +183,42 @@ class SnapshotStore:
                 (str(k), float(v))
                 for k, v in meta.get("metrics", {}).items())),
             **leaves)
+
+    # -- corruption fallback ------------------------------------------------
+
+    def quarantine(self, version: int) -> str:
+        """Move a corrupt version out of the loadable set by renaming
+        ``step_N`` -> ``step_N.corrupt`` (``all_steps`` skips it: the
+        suffix fails int parsing) — evidence is kept for forensics
+        instead of deleted.  Returns the quarantine dir name."""
+        src = os.path.join(self.dir, f"step_{version}")
+        dst = src + ".corrupt"
+        k = 0
+        while os.path.exists(dst):
+            k += 1
+            dst = f"{src}.corrupt{k}"
+        os.rename(src, dst)
+        self.tel.counter("snapshot.quarantined")
+        return os.path.basename(dst)
+
+    def load_latest_good(self) -> IndexSnapshot:
+        """Walk retained versions newest-first, verifying each; corrupt
+        ones are quarantined (and counted) and the walk continues.
+        Raises :class:`SnapshotCorruptError` only when *no* retained
+        version verifies — the fallback half of crash-safe publication."""
+        last_err: Optional[Exception] = None
+        for v in sorted(self.versions(), reverse=True):
+            try:
+                snap = self.load(v)
+            except CheckpointCorruptError as e:
+                # detected torn/rotted version: quarantine + keep walking
+                last_err = e
+                self.tel.counter("snapshot.corrupt_detected")
+                with self.tel.span("snapshot.fallback", version=v,
+                                   reason=str(e)):
+                    self.quarantine(v)
+                continue
+            return snap
+        raise SnapshotCorruptError(
+            f"no loadable snapshot under {self.dir} "
+            f"(last error: {last_err})")

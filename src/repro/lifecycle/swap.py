@@ -51,6 +51,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.serving import ClusterQueueStore
+from repro.faults import InjectedCrash, get_faults
 from repro.lifecycle.snapshot import IndexSnapshot
 from repro.obs import get_telemetry
 
@@ -223,10 +224,11 @@ class SwapServer:
     def __init__(self, snapshot: IndexSnapshot, *, queue_len: int = 256,
                  recency_s: float = 3600.0, ring_capacity: int = 1 << 16,
                  clock: Optional[Callable[[], float]] = None,
-                 telemetry=None):
+                 telemetry=None, faults=None):
         self.queue_len = int(queue_len)
         self.recency_s = float(recency_s)
         self.tel = telemetry if telemetry is not None else get_telemetry()
+        self.faults = faults if faults is not None else get_faults()
         # injectable so swap-report timings are replayable in tests —
         # the only clock-derived state this class retains
         self._clock = clock if clock is not None else self.tel.clock.perf
@@ -281,8 +283,27 @@ class SwapServer:
         truth), then drained into the live bundle.  Any concurrent swap
         that misses this batch in its catch-up pass will pick it up from
         the ring post-flip; any event another writer already drained is
-        skipped by the watermark."""
-        dropped = self.ring.push(user_ids, item_ids, timestamps)
+        skipped by the watermark.
+
+        Degradation contract: a failed ring push (the ``ring.push``
+        fault site models reservation overload) **sheds the batch**
+        instead of erroring the caller — serving stays up, the loss is
+        surfaced through the ring-drop counters (``swap.ring_dropped``
+        plus ``swap.ingest_shed_batches``), and the already-committed
+        ring prefix stays intact for exactly-once replay."""
+        n = np.asarray(user_ids).size
+        try:
+            self.faults.fire("ring.push", n=n)
+            dropped = self.ring.push(user_ids, item_ids, timestamps)
+        except InjectedCrash:
+            raise                       # simulated process death
+        except Exception:
+            # overload shed: count the whole batch as dropped, keep serving
+            with self._stats_lock:
+                self.ring_dropped += n
+            self.tel.counter("swap.ring_dropped", float(n))
+            self.tel.counter("swap.ingest_shed_batches")
+            return
         if dropped:
             with self._stats_lock:
                 self.ring_dropped += dropped
@@ -339,6 +360,10 @@ class SwapServer:
                 a2, s2 = self._drain_into(bundle, min_ts=cutoff)
             if self._pre_flip_hook is not None:
                 self._pre_flip_hook()
+            # a fault here aborts BEFORE the reference assignment: the
+            # old bundle keeps serving in full, nothing is half-flipped
+            self.faults.fire("swap.flip",
+                             to_version=int(snapshot.version))
             with tel.span("swap.flip"):
                 old = self.handle.flip(bundle)
             with tel.span("swap.post_drain"):

@@ -448,7 +448,7 @@ def test_json_output_schema(tmp_path):
 def test_rule_registry_names():
     names = set(rules_by_name())
     assert names == {"lock-discipline", "donation-safety",
-                     "determinism", "vmem-budget"}
+                     "determinism", "error-handling", "vmem-budget"}
 
 
 def test_parse_error_is_reported(tmp_path):
@@ -500,3 +500,81 @@ def test_sampler_default_rng_is_tuple_keyed():
     d = sample_two_hop(g, seeds, 4, 3,
                        rng=np.random.default_rng((7, 0x2B0)))
     assert np.array_equal(a.node_ids, d.node_ids)
+
+
+# ------------------------------------------------------ error handling
+
+
+def test_error_handling_flags_bare_except(tmp_path):
+    from repro.analysis.rules.error_handling import ErrorHandlingRule
+    path = _write(tmp_path, "repro/lifecycle/mod.py", """\
+        def f(x):
+            try:
+                return 1 / x
+            except:
+                return 0.0
+    """)
+    found = _findings(path, ErrorHandlingRule())
+    assert len(found) == 1
+    assert found[0].line == _line_of(path, "except:")
+    assert "KeyboardInterrupt" in found[0].message
+
+
+def test_error_handling_flags_silent_broad_swallow(tmp_path):
+    from repro.analysis.rules.error_handling import ErrorHandlingRule
+    path = _write(tmp_path, "repro/core/mod.py", """\
+        def f(x):
+            try:
+                work(x)
+            except Exception:
+                pass
+            try:
+                work(x)
+            except (ValueError, BaseException):
+                '''tolerated'''
+    """)
+    found = _findings(path, ErrorHandlingRule())
+    assert len(found) == 2
+    assert found[0].line == _line_of(path, "except Exception:")
+    assert "swallows" in found[0].message
+
+
+def test_error_handling_allows_broad_catch_that_degrades(tmp_path):
+    """Broad handlers that do real work — count, shed, re-raise — are
+    the degradation contract, not a violation."""
+    from repro.analysis.rules.error_handling import ErrorHandlingRule
+    path = _write(tmp_path, "repro/lifecycle/mod.py", """\
+        def f(tel, x):
+            try:
+                work(x)
+            except Exception:
+                tel.counter("shed")
+            try:
+                work(x)
+            except ValueError:
+                pass
+    """)
+    assert not _findings(path, ErrorHandlingRule())
+
+
+def test_error_handling_scoped_and_suppressible(tmp_path):
+    from repro.analysis.rules.error_handling import ErrorHandlingRule
+    src = """\
+        def f(x):
+            try:
+                work(x)
+            except Exception:  # repro: disable=error-handling — probe teardown is best-effort
+                pass
+    """
+    rule = ErrorHandlingRule()
+    out_path = _write(tmp_path, "repro/launch/mod.py", src)
+    assert not rule.applies(out_path)          # launch/ is out of scope
+    in_path = _write(tmp_path, "repro/data/mod.py", src)
+    found = analyze_file(in_path, [rule])
+    assert len(found) == 1 and found[0].suppressed
+    assert not active(found)
+
+
+def test_error_handling_rule_is_registered():
+    assert "error-handling" in rules_by_name()
+    assert any(r.name == "error-handling" for r in default_rules())

@@ -1,0 +1,129 @@
+"""Real process-death tests (satellite 3): SIGKILL a child mid-publish
+and mid-swap, then prove the snapshot store reopens clean and serving
+resumes from the last good version.
+
+The child holds itself inside the dangerous window with a ``delay``
+fault whose ``on_inject`` hook drops a sentinel file; the parent waits
+for the sentinel and sends SIGKILL — an un-catchable, un-flushable
+death, unlike the in-process ``InjectedCrash`` simulation."""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.lifecycle.snapshot import SnapshotStore
+from repro.lifecycle.swap import SwapServer
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# shared child-side helper: a tiny valid IndexSnapshot, no jax needed
+SNAP_HELPER = textwrap.dedent("""
+    import os, sys
+    import numpy as np
+    from repro.faults import FaultInjector, FaultPlan, FaultSpec
+    from repro.lifecycle.snapshot import (IndexSnapshot, SnapshotStore,
+                                          derive_members)
+
+    def snap(version, seed=0):
+        rng = np.random.default_rng(seed)
+        sizes, n_users, n_items, d, k = (4, 2), 40, 30, 8, 5
+        flat = rng.integers(0, 8, n_users).astype(np.int64)
+        ptr, ids = derive_members(flat, 8)
+        codes = np.stack([flat // 2, flat % 2], axis=1).astype(np.int32)
+        return IndexSnapshot(
+            user_codes=codes,
+            item_codes=rng.integers(0, 4, (n_items, 2)).astype(np.int32),
+            user_clusters=flat, member_ptr=ptr, member_ids=ids,
+            coarse_codebook=rng.normal(size=(4, d)).astype(np.float32),
+            i2i=rng.integers(-1, n_items, (n_items, k)).astype(np.int64),
+            version=version, n_users=n_users, n_items=n_items,
+            codebook_sizes=sizes, gate_metrics=(("recall_ratio", 0.9),))
+
+    def hold(site, occurrence, sentinel):
+        return FaultInjector(FaultPlan(
+            0, [FaultSpec(site, "delay", occurrences=(occurrence,),
+                          delay_s=300.0)],
+            on_inject=lambda rec: open(sentinel, "w").write("hit")))
+""")
+
+MID_PUBLISH = SNAP_HELPER + textwrap.dedent("""
+    d, sentinel = sys.argv[1], sys.argv[2]
+    inj = FaultInjector()
+    store = SnapshotStore(d, faults=inj)
+    store.publish(snap(1))                    # good version on disk
+    # stall the *second* publish between manifest write and rename
+    inj.install(hold("snapshot.finalize", 0, sentinel).plan)
+    store.publish(snap(2))                    # parent kills us in here
+    print("UNREACHABLE", flush=True)
+""")
+
+MID_SWAP = SNAP_HELPER + textwrap.dedent("""
+    d, sentinel = sys.argv[1], sys.argv[2]
+    store = SnapshotStore(d)
+    store.publish(snap(1))
+    store.publish(snap(2))
+    from repro.lifecycle.swap import SwapServer
+    server = SwapServer(store.load(1), faults=hold("swap.flip", 0,
+                                                   sentinel))
+    server.swap_to(store.load(2), 0.0)        # parent kills us mid-flip
+    print("UNREACHABLE", flush=True)
+""")
+
+
+def _kill_in_window(script, tmp_path, timeout=120.0):
+    sentinel = str(tmp_path / "in_window")
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", script, str(tmp_path / "store"), sentinel],
+        env=env, cwd=_REPO, stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE, text=True)
+    deadline = time.monotonic() + timeout
+    try:
+        while not os.path.exists(sentinel):
+            if proc.poll() is not None:
+                raise AssertionError(
+                    "child exited before the fault window:\n"
+                    + proc.communicate()[1][-2000:])
+            if time.monotonic() > deadline:
+                raise AssertionError("child never reached the window")
+            time.sleep(0.02)
+    finally:
+        proc.kill()                           # SIGKILL, not terminate
+    proc.wait()
+    out, _ = proc.communicate()
+    assert "UNREACHABLE" not in out           # died inside the window
+    assert proc.returncode == -9
+    return str(tmp_path / "store")
+
+
+def test_sigkill_mid_publish_store_reopens_clean(tmp_path):
+    d = _kill_in_window(MID_PUBLISH, tmp_path)
+    # the torn v2 is a .tmp partial: invisible, then swept on reopen
+    assert "step_2.tmp" in os.listdir(d)
+    store = SnapshotStore(d)
+    assert "step_2.tmp" not in os.listdir(d)
+    assert store.versions() == [1]
+    snap = store.load_latest_good()
+    assert snap.version == 1
+    # serving resumes from the last good version
+    server = SwapServer(snap)
+    res, ver = server.retrieve_batch(np.arange(8), 0.0, 4)
+    assert ver == 1 and res.shape == (8, 4)
+
+
+def test_sigkill_mid_swap_serving_resumes_from_last_good(tmp_path):
+    d = _kill_in_window(MID_SWAP, tmp_path)
+    # both publishes completed before the swap: disk is fully intact
+    store = SnapshotStore(d)
+    assert store.versions() == [1, 2]
+    snap = store.load_latest_good()
+    assert snap.version == 2
+    server = SwapServer(snap)
+    res, ver = server.retrieve_batch(np.arange(8), 0.0, 4)
+    assert ver == 2 and res.shape == (8, 4)
+    # and the store kept no partials from the dead process
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))

@@ -1,0 +1,198 @@
+"""Unit tests for the deterministic fault-injection layer
+(``repro.faults``): schedule determinism, the four actions, the injector
+facade, checksum-detectable corruption, and obs-trace visibility."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.faults import (FaultInjector, FaultPlan, FaultSpec,
+                          InjectedCrash, InjectedFault, clear_plan,
+                          corrupt_file, get_faults, install_plan)
+from repro.obs import FixedClock, MemorySink, Telemetry
+
+
+def _tel():
+    return Telemetry(sink=MemorySink(), clock=FixedClock())
+
+
+# ------------------------------------------------------------- schedule
+
+
+def test_explicit_occurrence_targeting():
+    plan = FaultPlan(0, [FaultSpec("s", "raise", occurrences=(1, 3))],
+                     telemetry=_tel())
+    hits = []
+    for i in range(5):
+        try:
+            plan.fire("s")
+            hits.append(False)
+        except InjectedFault:
+            hits.append(True)
+    assert hits == [False, True, False, True, False]
+    assert [(r["site"], r["occurrence"]) for r in plan.log] == \
+        [("s", 1), ("s", 3)]
+
+
+def test_occurrence_counters_are_per_site():
+    plan = FaultPlan(0, [FaultSpec("b", "raise", occurrences=(0,))],
+                     telemetry=_tel())
+    plan.fire("a")          # does not advance site b
+    plan.fire("a")
+    with pytest.raises(InjectedFault):
+        plan.fire("b")
+    assert plan.occurrence("a") == 2
+    assert plan.occurrence("b") == 1
+
+
+def test_probabilistic_schedule_is_seed_deterministic():
+    def run(seed):
+        plan = FaultPlan(seed, [FaultSpec("s", "raise", prob=0.3,
+                                          max_injections=1 << 30)],
+                         telemetry=_tel())
+        out = []
+        for _ in range(64):
+            try:
+                plan.fire("s")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a, b = run(7), run(7)
+    assert a == b                      # bit-reproducible schedule
+    assert run(8) != a                 # and seed-sensitive
+    assert 1 <= sum(a) <= 40           # Bernoulli(0.3) actually fires
+
+
+def test_max_injections_caps_a_spec():
+    plan = FaultPlan(0, [FaultSpec("s", "raise", prob=1.0,
+                                   max_injections=2)], telemetry=_tel())
+    n = 0
+    for _ in range(6):
+        try:
+            plan.fire("s")
+        except InjectedFault:
+            n += 1
+    assert n == 2
+
+
+def test_crash_action_raises_injected_crash():
+    plan = FaultPlan(0, [FaultSpec("s", "crash", occurrences=(0,))],
+                     telemetry=_tel())
+    with pytest.raises(InjectedCrash):
+        plan.fire("s")
+    # InjectedCrash is an InjectedFault — but retry machinery must
+    # single it out by the subclass
+    assert issubclass(InjectedCrash, InjectedFault)
+
+
+def test_delay_action_uses_injected_sleeper():
+    slept = []
+    plan = FaultPlan(0, [FaultSpec("s", "delay", occurrences=(0,),
+                                   delay_s=2.5)],
+                     telemetry=_tel(), sleep=slept.append)
+    spec = plan.fire("s")
+    assert spec is not None and slept == [2.5]
+
+
+def test_unknown_action_rejected():
+    with pytest.raises(ValueError, match="unknown fault action"):
+        FaultSpec("s", "explode")
+
+
+# ---------------------------------------------------------- corruption
+
+
+def test_corrupt_file_flips_bytes_deterministically(tmp_path):
+    p = tmp_path / "leaf.npy"
+    payload = bytes(range(256)) * 8
+    p.write_bytes(payload)
+    n = corrupt_file(str(p), (0, 1, 2))
+    assert n > 0
+    mutated = p.read_bytes()
+    assert mutated != payload and len(mutated) == len(payload)
+    # deterministic in the key: same key -> same offsets -> XOR back
+    corrupt_file(str(p), (0, 1, 2))
+    assert p.read_bytes() == payload
+    # header region is spared on large files
+    assert mutated[:128] == payload[:128]
+
+
+def test_corrupt_action_targets_the_passed_path(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"\x00" * 512)
+    plan = FaultPlan(3, [FaultSpec("s", "corrupt", occurrences=(0,))],
+                     telemetry=_tel())
+    plan.fire("s", path=str(p))
+    assert p.read_bytes() != b"\x00" * 512
+    # missing path: injection is recorded but nothing explodes
+    plan2 = FaultPlan(3, [FaultSpec("s", "corrupt", occurrences=(0,))],
+                      telemetry=_tel())
+    plan2.fire("s", path=str(tmp_path / "nope.bin"))
+    assert len(plan2.log) == 1
+
+
+# ------------------------------------------------------------ injector
+
+
+def test_injector_disabled_is_noop_and_install_is_visible_in_place():
+    inj = FaultInjector()
+    assert not inj.active
+    assert inj.fire("anything") is None      # no plan: free pass
+    plan = FaultPlan(0, [FaultSpec("s", "raise", occurrences=(0,))],
+                     telemetry=_tel())
+    inj.install(plan)                        # mutates in place
+    assert inj.active
+    with pytest.raises(InjectedFault):
+        inj.fire("s")
+    inj.clear()
+    assert inj.fire("s") is None
+
+
+def test_global_injector_install_and_clear():
+    try:
+        assert not get_faults().active
+        plan = install_plan(FaultPlan(
+            0, [FaultSpec("s", "raise", occurrences=(0,))],
+            telemetry=_tel()))
+        assert get_faults().plan is plan
+        with pytest.raises(InjectedFault):
+            get_faults().fire("s")
+    finally:
+        clear_plan()
+    assert not get_faults().active
+
+
+# ------------------------------------------------------- obs visibility
+
+
+def test_every_injection_emits_span_and_counters():
+    tel = _tel()
+    sink = tel._sink
+    plan = FaultPlan(0, [FaultSpec("s", "raise", occurrences=(0, 1))],
+                     telemetry=tel)
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            plan.fire("s")
+    spans = [json.loads(l) for l in sink.lines]
+    fi = [s for s in spans
+          if s["type"] == "span" and s["name"] == "fault.injected"]
+    assert [(f["attrs"]["site"], f["attrs"]["occurrence"],
+             f["attrs"]["action"]) for f in fi] == \
+        [("s", 0, "raise"), ("s", 1, "raise")]
+    c = tel.snapshot()["counters"]
+    assert c["faults.injected"] == 2.0
+    assert c["faults.raise"] == 2.0
+
+
+def test_on_inject_seam_sees_the_record(tmp_path):
+    sentinel = tmp_path / "fired"
+    plan = FaultPlan(
+        0, [FaultSpec("s", "delay", occurrences=(0,), delay_s=0.0)],
+        telemetry=_tel(), sleep=lambda s: None,
+        on_inject=lambda rec: sentinel.write_text(json.dumps(rec)))
+    plan.fire("s")
+    rec = json.loads(sentinel.read_text())
+    assert rec == dict(site="s", occurrence=0, action="delay", seed=0)

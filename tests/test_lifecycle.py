@@ -667,3 +667,171 @@ def test_run_cycle_repairs_gate_failure_end_to_end(tiny_world):
     assert not rep["swap"].get("skipped"), rep["publish"]
     assert rep["publish"]["codebook_util_min"] >= 0.5
     assert rt.server is not None
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: stage retries, pinned serving, rollback, recovery
+# ---------------------------------------------------------------------------
+
+def _faulted_runtime(tiny_world, tiny_cfg, specs, tmp_path=None, **lkw):
+    """A runtime wired to a private FaultPlan + FixedClock telemetry;
+    backoff sleeps advance the fixed clock instead of blocking."""
+    from repro.data.edge_dataset import build_neighbor_tables
+    from repro.faults import FaultInjector, FaultPlan
+    from repro.lifecycle.runtime import LifecycleConfig, LifecycleRuntime
+    from repro.obs import FixedClock, MemorySink, Telemetry
+    import repro.core.graph_builder as GB
+    sink = MemorySink()
+    clock = FixedClock()
+    tel = Telemetry(sink=sink, clock=clock)
+    faults = FaultInjector(FaultPlan(0, list(specs), telemetry=tel,
+                                     sleep=clock.advance))
+    g = GB.build_graph(tiny_world.day0, k_cap=16, hub_cap=12,
+                       keep_state=True)
+    tables = build_neighbor_tables(g, k_imp=10, n_walks=12, walk_len=3,
+                                   keep_state=True)
+    lcfg = LifecycleConfig(steps_per_cycle=1, batch_per_type=8,
+                           recall_queries=40, recall_k=20,
+                           retry_backoff_s=0.01, **lkw)
+    rt = LifecycleRuntime(tiny_cfg, lcfg, g, tables,
+                          tiny_world.user_feat, tiny_world.item_feat,
+                          world=tiny_world,
+                          snapshot_dir=(str(tmp_path) if tmp_path
+                                        else None),
+                          seed=0, telemetry=tel, faults=faults,
+                          sleep=clock.advance)
+    return rt, tel, sink
+
+
+def test_transient_swap_fault_is_retried(tiny_world, tiny_cfg):
+    from repro.faults import FaultSpec
+    rt, tel, sink = _faulted_runtime(
+        tiny_world, tiny_cfg,
+        [FaultSpec("swap.flip", "raise", occurrences=(0,))],
+        stage_retries=1)
+    rt.run_cycle(now=86400.0)                 # bring-up: no flip
+    rep = rt.run_cycle(now=90000.0)           # flip attempt 1 faulted
+    assert not rep["swap"].get("skipped") and not rep["degraded"]
+    assert rt.server.version == 2
+    c = tel.snapshot()["counters"]
+    assert c["lifecycle.stage_failures"] == 1.0
+    assert c["lifecycle.stage_retries"] == 1.0
+    # the failure is visible as a stage_failure span naming the stage
+    fails = [r for r in _trace(sink) if r["type"] == "span"
+             and r["name"] == "lifecycle.stage_failure"]
+    assert fails and fails[0]["attrs"]["stage"] == "swap"
+
+
+def test_exhausted_retries_pin_serving_and_recover_later(tiny_world,
+                                                         tiny_cfg):
+    """Both swap attempts of cycle 2 fail: serving stays pinned on v1,
+    the cycle reports degraded + stale, and the next clean cycle flips
+    forward and clears the degradation."""
+    from repro.faults import FaultSpec
+    rt, tel, sink = _faulted_runtime(
+        tiny_world, tiny_cfg,
+        [FaultSpec("swap.flip", "raise", occurrences=(0, 1),
+                   max_injections=2)],
+        stage_retries=1)
+    rt.run_cycle(now=86400.0)
+    rep = rt.run_cycle(now=90000.0)
+    assert rep["swap"]["skipped"] is True
+    assert rep["swap"]["degraded"] is True
+    assert rep["swap"]["failed_stage"] == "swap"
+    assert "swap.flip#1" in rep["swap"]["error"]
+    assert rep["degraded"] is True and rep["stale_cycles"] == 1
+    assert rt.server.version == 1             # pinned on last good
+    snap = tel.snapshot()
+    assert snap["gauges"]["lifecycle.degraded"] == 1.0
+    assert snap["counters"]["lifecycle.stale_cycles"] == 1.0
+    # clean cycle 3: forward progress + health restored
+    rep = rt.run_cycle(now=93600.0)
+    assert not rep["swap"].get("skipped")
+    assert rt.server.version == 3 and rep["degraded"] is False
+    snap = tel.snapshot()
+    assert snap["gauges"]["lifecycle.degraded"] == 0.0
+    assert snap["counters"]["lifecycle.recoveries"] == 1.0
+
+
+def test_post_swap_regression_rolls_back(tiny_world, tiny_cfg):
+    from repro.faults import FaultSpec
+    rt, tel, sink = _faulted_runtime(
+        tiny_world, tiny_cfg,
+        [FaultSpec("health.post_swap", "raise", occurrences=(1,))])
+    rt.run_cycle(now=86400.0)                 # v1: healthy
+    rep = rt.run_cycle(now=90000.0)           # v2 regresses post-swap
+    assert rep["swap"]["rolled_back"] is True
+    assert rep["degraded"] is True
+    assert rt.server.version == 1             # back on last good
+    c = tel.snapshot()["counters"]
+    assert c["lifecycle.rollbacks"] == 1.0
+    assert c["lifecycle.post_swap_regressions"] == 1.0
+    rb = [r for r in _trace(sink) if r["type"] == "span"
+          and r["name"] == "lifecycle.rollback"]
+    assert rb and rb[0]["attrs"]["to_version"] == 1
+
+
+def test_rollback_can_be_disabled(tiny_world, tiny_cfg):
+    from repro.faults import FaultSpec
+    rt, tel, _ = _faulted_runtime(
+        tiny_world, tiny_cfg,
+        [FaultSpec("health.post_swap", "raise", occurrences=(1,))],
+        rollback_on_regression=False)
+    rt.run_cycle(now=86400.0)
+    rep = rt.run_cycle(now=90000.0)
+    assert "rolled_back" not in rep["swap"]
+    assert rt.server.version == 2
+    assert "lifecycle.rollbacks" not in tel.snapshot()["counters"]
+
+
+def test_injected_crash_is_never_retried(tiny_world, tiny_cfg):
+    from repro.faults import FaultSpec, InjectedCrash
+    rt, tel, _ = _faulted_runtime(
+        tiny_world, tiny_cfg,
+        [FaultSpec("train.step", "crash", occurrences=(0,))],
+        stage_retries=3)
+    with pytest.raises(InjectedCrash):
+        rt.run_cycle(now=86400.0)
+    assert "lifecycle.stage_retries" not in tel.snapshot()["counters"]
+
+
+def test_recover_serving_falls_back_through_corruption(tiny_world,
+                                                       tiny_cfg,
+                                                       tmp_path):
+    """Crash-restart with bit-rot on the newest on-disk version: the
+    corrupt snapshot is quarantined and serving resumes one version
+    back."""
+    import os
+    from repro.faults import corrupt_file
+    rt, tel, _ = _faulted_runtime(tiny_world, tiny_cfg, [],
+                                  tmp_path=tmp_path)
+    rt.run_cycle(now=86400.0)
+    rt.run_cycle(now=90000.0)
+    assert rt.store.versions() == [1, 2]
+    corrupt_file(str(tmp_path / "step_2" / "000000.npy"), (0,))
+
+    rt2, tel2, sink2 = _faulted_runtime(tiny_world, tiny_cfg, [],
+                                        tmp_path=tmp_path)
+    v = rt2.recover_serving(now=93600.0)
+    assert v == 1 and rt2.server is not None
+    assert rt2.server.version == 1
+    res, ver = rt2.server.retrieve_batch(np.arange(8), 93600.0, 4)
+    assert ver == 1 and res.shape == (8, 4)
+    assert "step_2.corrupt" in os.listdir(tmp_path)
+    c = tel2.snapshot()["counters"]
+    assert c["snapshot.corrupt_detected"] == 1.0
+    assert c["snapshot.quarantined"] == 1.0
+    assert c["lifecycle.serving_recovered"] == 1.0
+    # the fallback walk is visible in the trace
+    fb = [r for r in _trace(sink2) if r["type"] == "span"
+          and r["name"] == "snapshot.fallback"]
+    assert fb and fb[0]["attrs"]["version"] == 2
+
+
+def test_recover_serving_with_empty_store_returns_none(tiny_world,
+                                                       tiny_cfg,
+                                                       tmp_path):
+    rt, _, _ = _faulted_runtime(tiny_world, tiny_cfg, [],
+                                tmp_path=tmp_path)
+    assert rt.recover_serving(now=0.0) is None
+    assert rt.server is None
