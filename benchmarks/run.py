@@ -30,6 +30,7 @@ def main(argv=None) -> int:
     from benchmarks import roofline as RL
     from benchmarks import serving_concurrency as SC
     from benchmarks import serving_kernels as SK
+    from benchmarks import serving_scaleout as SSC
     from benchmarks import train_throughput as TT
     from benchmarks import vmem_report as VMR
 
@@ -47,6 +48,7 @@ def main(argv=None) -> int:
         ("lifecycle_swap", LS.run),
         ("lifecycle_faults", LF.run),
         ("serving_concurrency", SC.run),
+        ("serving_scaleout", SSC.run),
         ("obs_overhead", OO.run),
         ("roofline", RL.run),
         ("vmem_report", VMR.run),
@@ -68,6 +70,12 @@ def main(argv=None) -> int:
                 if "thread_speedup" in out:
                     derived = (f"thread_speedup="
                                f"{out['thread_speedup']:.2f}x")
+                elif "device_speedup_4t" in out:
+                    derived = (f"device_speedup="
+                               f"{out['device_speedup_4t']:.2f}x;"
+                               f"shard_scaling="
+                               + "/".join(f"{x:.2f}"
+                                          for x in out["shard_scaling"]))
                 elif "overhead_pct" in out:
                     derived = (f"obs_overhead="
                                f"{out['overhead_pct']:+.2f}%")

@@ -1,0 +1,232 @@
+"""Device-engine scale-out gates: threads and shards.
+
+Two properties of the device-resident serving engine are measured and
+CI-gated here (the host engine's own thread-scaling floor lives in
+``benchmarks/serving_concurrency.py``):
+
+  * **Gate A — thread fan-out**: 4 reader threads hammering one store
+    (with a background writer ingesting ~50k events/s) must sustain at
+    least ``SCALEOUT_MIN_SPEEDUP`` x (default 3x) the *host engine's*
+    aggregate 4-thread ``retrieve_batch`` throughput.  Unlike the host
+    gate, there is **no machine-calibration cap**: the device path does
+    not depend on the box having parallel numpy headroom — each request
+    is one fused XLA dispatch that releases the GIL for its whole
+    duration, so the floor must hold even on a throttled single-core
+    container (where it is expected to hold by the *widest* margin,
+    since the host path is GIL-bound precisely there).
+  * **Gate B — shard scale-out**: mixed ingest+retrieve cycles against
+    a ``ShardedQueueStore`` in delta (LSM) write mode must get
+    monotonically faster from 1 -> 2 -> 4 shards (each step within
+    ``SCALEOUT_SHARD_TOL`` of monotone, default 0.95, absorbing
+    scheduler noise).  Sharding cuts each ingest's scatter and each
+    fold to 1/S of the cluster space; this gate is what keeps the
+    router's scatter/gather overhead from eating that win.
+
+Results land in ``benchmarks/results/serving_scaleout.json``.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import write_result
+from repro.core.serving import (ClusterQueueStore, HostQueueStore,
+                                ShardedQueueStore)
+
+N_THREADS = 4
+
+
+def _agg_throughput(fn, n_iter: int, nthreads: int) -> float:
+    """Aggregate calls/s of ``nthreads`` threads each running ``fn``
+    ``n_iter`` times, released together off a barrier."""
+    barrier = threading.Barrier(nthreads + 1)
+    errs = []
+
+    def loop():
+        try:
+            barrier.wait()
+            for _ in range(n_iter):
+                fn()
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    ths = [threading.Thread(target=loop) for _ in range(nthreads)]
+    for t in ths:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in ths:
+        t.join()
+    dt = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return nthreads * n_iter / dt
+
+
+# ---------------------------------------------------------------------------
+# gate A: 4-thread retrieve throughput, device vs host, live writer
+# ---------------------------------------------------------------------------
+
+def _thread_gate(full: bool) -> Dict:
+    rng = np.random.default_rng(0)
+    n_users, n_items, C, Q = 50_000, 20_000, 512, 256
+    uc = rng.integers(0, C, n_users)
+    dev = ClusterQueueStore(uc, queue_len=Q, recency_s=1e15)
+    host = HostQueueStore(uc, queue_len=Q, recency_s=1e15)
+    for _ in range(4):
+        u = rng.integers(0, n_users, 100_000)
+        it = rng.integers(0, n_items, 100_000)
+        ts = np.sort(rng.uniform(0, 10_000, 100_000))
+        dev.ingest(u, it, ts)
+        host.ingest(u, it, ts)
+    B, k, now = 4096, 32, 1e6
+    users = rng.integers(0, n_users, B)
+    n_iter = 12 if full else 6
+    out: Dict = {"threads": N_THREADS, "batch": B}
+
+    for name, store in (("host", host), ("device", dev)):
+        def fn(store=store):
+            store.retrieve_batch(users, now, k)
+
+        for _ in range(3):
+            fn()                               # warm traces + pools
+        t0 = time.perf_counter()
+        for _ in range(2 * n_iter):
+            fn()
+        thr1 = 2 * n_iter * B / (time.perf_counter() - t0)
+
+        # background writer: ~50k events/s into the store under test,
+        # so the measured read path includes real writer interference
+        stop = threading.Event()
+
+        def writer(store=store):
+            r = np.random.default_rng(99)
+            tb = 2e4
+            while not stop.is_set():
+                e = 5000
+                store.ingest(r.integers(0, n_users, e),
+                             r.integers(0, n_items, e),
+                             np.sort(r.uniform(0, 1.0, e)) + tb)
+                tb += 1.0
+                time.sleep(0.1)
+
+        wt = threading.Thread(target=writer)
+        wt.start()
+        try:
+            thr4 = _agg_throughput(fn, n_iter, N_THREADS) * B
+        finally:
+            stop.set()
+            wt.join()
+        out[name] = dict(thr_1thread_req_s=float(thr1),
+                         thr_4thread_req_s=float(thr4))
+    out["speedup_1thread"] = float(out["device"]["thr_1thread_req_s"]
+                                   / out["host"]["thr_1thread_req_s"])
+    out["speedup_4thread"] = float(out["device"]["thr_4thread_req_s"]
+                                   / out["host"]["thr_4thread_req_s"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# gate B: shard-count scaling of mixed ingest+retrieve cycles
+# ---------------------------------------------------------------------------
+
+def _shard_gate(full: bool) -> Dict:
+    rng = np.random.default_rng(1)
+    n_users, n_items = 200_000, 1_000_000
+    C, Q, D, k, now = 4096, 256, 512, 32, 1e6
+    E = 12_000                                 # events per mixed cycle
+    uc = rng.integers(0, C, n_users)
+    stores = {s: ShardedQueueStore(uc, n_shards=s, queue_len=Q,
+                                   recency_s=1e15, n_clusters=C,
+                                   delta_cap=D)
+              for s in (1, 2, 4)}
+    for _ in range(4):
+        u = rng.integers(0, n_users, 100_000)
+        it = rng.integers(0, n_items, 100_000)
+        ts = np.sort(rng.uniform(0, 10_000, 100_000))
+        for st in stores.values():
+            st.ingest(u, it, ts)
+    users = rng.integers(0, n_users, 2048)
+    n_iter = 18 if full else 12
+
+    tb = [3e6]
+
+    def mixed_cycle(st):
+        u = rng.integers(0, n_users, E)
+        it = rng.integers(0, n_items, E)
+        ts = np.sort(rng.uniform(0, 1.0, E)) + tb[0]
+        tb[0] += 1.0
+        t0 = time.perf_counter()
+        st.ingest(u, it, ts)
+        t1 = time.perf_counter()
+        st.retrieve_batch(users, now, k)
+        return t1 - t0, time.perf_counter() - t1
+
+    for _ in range(4):                         # warm: traces incl. folds
+        for st in stores.values():
+            mixed_cycle(st)
+    # rounds are interleaved across the three stores and scored
+    # best-of: the container this runs in drifts by integer factors on
+    # a scale of seconds, which sequential per-store means would alias
+    # straight into the scaling ratios (external noise only ever adds
+    # time, so per-store minima are comparable)
+    samples = {s: [] for s in stores}
+    for _ in range(n_iter):
+        for s, st in stores.items():
+            samples[s].append(mixed_cycle(st))
+    rows: Dict = {}
+    for s in stores:
+        ti = min(a for a, _ in samples[s])
+        tr = min(b for _, b in samples[s])
+        best = min(a + b for a, b in samples[s])
+        rows[s] = dict(ingest_ms=float(ti * 1e3),
+                       retrieve_ms=float(tr * 1e3),
+                       cycles_per_s=float(1.0 / best))
+    base = rows[1]["cycles_per_s"]
+    return dict(n_clusters=C, delta_cap=D, events_per_cycle=E,
+                shards={str(s): r for s, r in rows.items()},
+                scaling={str(s): float(rows[s]["cycles_per_s"] / base)
+                         for s in rows})
+
+
+def run(full: bool = False) -> Dict:
+    out: Dict = {}
+    out["threads"] = _thread_gate(full)
+    out["shards"] = _shard_gate(full)
+
+    t, s = out["threads"], out["shards"]
+    out["device_speedup_4t"] = t["speedup_4thread"]
+    out["shard_scaling"] = [s["scaling"][x] for x in ("1", "2", "4")]
+    print("\nServing scale-out:")
+    print(f"  threads: device {t['device']['thr_4thread_req_s']:.0f} "
+          f"req/s x{N_THREADS} vs host "
+          f"{t['host']['thr_4thread_req_s']:.0f} -> "
+          f"{t['speedup_4thread']:.2f}x (1-thread "
+          f"{t['speedup_1thread']:.2f}x)")
+    for x in ("1", "2", "4"):
+        r = s["shards"][x]
+        print(f"  shards S={x}: ingest {r['ingest_ms']:6.1f}ms  "
+              f"retrieve {r['retrieve_ms']:6.1f}ms  "
+              f"-> {s['scaling'][x]:.2f}x vs S=1")
+
+    # gate A: no calibration cap — see module docstring
+    gate = float(os.environ.get("SCALEOUT_MIN_SPEEDUP", "3.0"))
+    assert out["device_speedup_4t"] >= gate, \
+        (f"device 4-thread retrieve throughput only "
+         f"{out['device_speedup_4t']:.2f}x the host engine "
+         f"(floor {gate}x)")
+    # gate B: monotone shard scaling within tolerance
+    tol = float(os.environ.get("SCALEOUT_SHARD_TOL", "0.95"))
+    sc = out["shard_scaling"]
+    assert sc[1] >= tol * sc[0] and sc[2] >= tol * sc[1], \
+        f"shard scaling not monotone 1->2->4: {sc} (tol {tol})"
+    write_result("serving_scaleout", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(full=os.environ.get("BENCH_FULL", "") == "1")

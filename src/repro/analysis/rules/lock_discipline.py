@@ -1,9 +1,18 @@
-"""Rule ``lock-discipline`` — the serving tier's seqlock/ring contract.
+"""Rule ``lock-discipline`` — the serving tier's locking contracts.
 
-PR 5 made the serving tier concurrent with two hand-enforced
-disciplines:
+The serving tier is concurrent under three hand-enforced disciplines:
 
-* **Seqlock stores** (``ClusterQueueStore``-shaped classes: they own a
+* **Device (MVCC) stores** (the device-resident ``ClusterQueueStore``
+  shape: they own a ``write_lock`` *and* an ``_state`` snapshot dict).
+  Readers take one GIL-atomic ``self._state`` reference and never lock;
+  the safety argument is that *every writer-side mutation* — the
+  ``_state`` rebind itself plus the host mirrors that must stay in sync
+  with it (``epoch``, ``ring_seen``, ``d_count``, ``_cursor_host``) —
+  happens lexically inside a ``with self.write_lock:`` block.  An
+  unlocked write to any of these can publish a snapshot whose mirrors
+  disagree with it (ingest prep would then compute wrong slots).
+
+* **Seqlock stores** (the host ``HostQueueStore`` shape: they own a
   ``write_lock`` *and* a ``gen`` generation array).  Every write to the
   store's protected arrays (``items``/``times``/``buf``/``ts`` data,
   ``cursor``/``heads``/``gen`` metadata) must happen lexically inside a
@@ -40,6 +49,9 @@ from repro.analysis.base import Finding, ModuleContext, Rule, dotted_name
 SEQLOCK_DATA = ("items", "times", "buf", "ts")
 SEQLOCK_META = ("cursor", "heads", "gen")
 RING_STATE = ("cursor", "committed")
+# device store: the snapshot rebind + the host mirrors that must stay
+# consistent with it
+DEVICE_STATE = ("_state", "epoch", "ring_seen", "d_count", "_cursor_host")
 
 # calls that take a store's write lock internally: invoking them while
 # holding a ring lock inverts the canonical order
@@ -87,9 +99,10 @@ def _acquired_locks(node: ast.With) -> Set[str]:
 
 class LockDisciplineRule(Rule):
     name = "lock-discipline"
-    description = ("seqlock-store / event-ring writes must hold their "
-                   "lock, scatters must be gen-bracketed, and lock "
-                   "acquisition order must not invert")
+    description = ("device-store / seqlock-store / event-ring writes "
+                   "must hold their lock, seqlock scatters must be "
+                   "gen-bracketed, and lock acquisition order must not "
+                   "invert")
 
     def check(self, ctx: ModuleContext) -> List[Finding]:
         findings: List[Finding] = []
@@ -97,12 +110,17 @@ class LockDisciplineRule(Rule):
                     if isinstance(n, ast.ClassDef)]:
             attrs = _self_attrs_assigned(cls)
             is_store = {"write_lock", "gen"} <= attrs
+            is_device = {"write_lock", "_state"} <= attrs
             is_ring = {"_lock", "committed"} <= attrs
-            if not (is_store or is_ring):
+            if not (is_store or is_device or is_ring):
                 continue
             protected: Dict[str, str] = {}
             if is_store:
                 for a in SEQLOCK_DATA + SEQLOCK_META:
+                    if a in attrs:
+                        protected[a] = _WRITE_LOCK
+            if is_device:
+                for a in DEVICE_STATE:
                     if a in attrs:
                         protected[a] = _WRITE_LOCK
             if is_ring:

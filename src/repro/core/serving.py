@@ -1,4 +1,4 @@
-"""KNN-free serving (paper §4.4) — batched, array-backed engine.
+"""KNN-free serving (paper §4.4) — device-resident, single-dispatch engine.
 
 U2U2I: each user carries a hierarchical cluster code (k1, k2) from the
 co-learned RQ index; each cluster keeps a recency-filtered queue of items
@@ -9,25 +9,51 @@ user pool.
 U2I2I: item embeddings change slowly, so I2I KNN is pre-computed offline;
 serving unions the similar-item lists of the user's recent items.
 
-The store is a flat ring buffer: preallocated ``(n_clusters, queue_len)``
-item/timestamp arrays plus a per-cluster write cursor.  ``ingest`` and
-``retrieve_batch`` are fully vectorized over events/requests — the
-per-request ``retrieve`` of the seed implementation survives as a thin
-wrapper over a batch of one.  The fused cluster-gather + I2I-union pass
-also exists as a Pallas kernel (``repro.kernels.queue_gather``) driven
-by ``serve_batch(..., use_kernel=True)``.
+``ClusterQueueStore`` keeps its ring buffers as **jax device arrays** and
+collapses the whole retrieve pass — recency cutoff, validity masking,
+top-k selection, and (in ``serve_batch``) the U2I2I union — into a
+single jitted dispatch.  The jit releases the GIL while XLA runs, so N
+serving threads scale past the interpreter wall that bounded the old
+host-array engine (preserved as ``HostQueueStore`` in
+``repro.core.serving_host``; it remains the bitwise oracle and the
+scale-out baseline).
 
-Threading contract: one store serves N reader threads concurrently.
-Request scratch comes from a per-thread ``BufPool`` registry (readers
-never alias each other's buffers), and the retrieve path is lock-free —
-a per-cluster seqlock (generation counter, odd while a write is in
-flight) lets readers run against a concurrently-ingesting store and
-retry the gather on the rare torn read.  Writers (``ingest``) serialize
-on the store's write lock.
+Design notes:
+
+* **MVCC, not seqlocks.**  ``_state`` is a dict of immutable device
+  arrays.  ``ingest`` rebinds it functionally under ``write_lock``;
+  a reader grabs one GIL-atomic reference and dispatches against that
+  consistent snapshot.  No generation counters, no retries, no torn
+  reads — and no donation, so an in-flight reader's snapshot stays
+  alive until its dispatch returns.
+* **Sort-free kernels.**  Candidates are materialised newest-first by
+  construction (ring order), validity is a mask, and the j-th valid
+  entry is found with a cumsum prefix + unrolled binary search —
+  XLA CPU sorts are an order of magnitude slower than the equivalent
+  numpy sort, so the traced graph contains none.
+* **Dedup at ingest.**  The ring is kept duplicate-free per
+  ``(cluster, item)``: ingest tombstones the prior ring occurrence of
+  each incoming item, so retrieve needs no dedup stage.  Cursor
+  arithmetic still advances for *every* event, which keeps slot ages
+  bitwise-identical to the host engine.
+* **Two write modes.** ``delta_cap=0`` (default) scatters every ingest
+  batch straight into the ring.  ``delta_cap=D`` appends to a small
+  delta buffer and folds into the ring only when full (an LSM level of
+  exactly one run) — retrieve scans delta-then-ring.  Delta mode makes
+  per-shard ingest work scale as 1/S in ``ShardedQueueStore``.
+* **Stable traces.**  Batch dims are padded to power-of-two buckets and
+  ``k``/``Q``/``C``/``D`` are static, so steady state replays a handful
+  of compiled traces.
+
+``ShardedQueueStore`` partitions the cluster space into N contiguous
+ranges behind the same API: ingest is split once by shard and scattered,
+retrieve routes each request to its owning shard and merges.  With a
+``jax.sharding.Mesh`` available, shard states are placed round-robin
+across mesh devices (see ``repro.distributed.sharding``).
 
 ``ServingCostModel`` quantifies the paper's 83% claim: FLOPs + bytes per
 request for online-KNN vs cluster-lookup serving at a given active-pool
-size, traffic, and request batch size.
+size, traffic, request batch size, and shard count.
 """
 from __future__ import annotations
 
@@ -37,161 +63,288 @@ import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.obs import get_telemetry
-
-_OBS = get_telemetry()   # process singleton; configure() mutates in place
-
-
-# ---------------------------------------------------------------------------
-# batched row utilities (shared by U2U2I and U2I2I paths)
-# ---------------------------------------------------------------------------
-
-class BufPool:
-    """Named scratch-buffer cache so the steady-state serving path runs
-    allocation-free (fresh multi-MB temporaries each request batch cost
-    more in page faults than the actual compute).
-
-    Single-threaded by design — the buffers are reused in place, so one
-    pool must never be shared across concurrent requests.  Concurrent
-    callers go through ``ThreadLocalPools`` (one pool per thread) rather
-    than holding a pool directly."""
-
-    def __init__(self):
-        self._bufs: Dict[str, np.ndarray] = {}
-
-    def get(self, name: str, shape: Tuple[int, ...], dtype) -> np.ndarray:
-        buf = self._bufs.get(name)
-        if buf is None or buf.shape != shape or buf.dtype != dtype:
-            buf = np.empty(shape, dtype)
-            self._bufs[name] = buf
-            if _OBS.enabled:   # steady state should stop allocating
-                _OBS.counter("serving.pool_allocs")
-        return buf
+from repro.core.serving_host import (   # noqa: F401  (compat re-exports)
+    BufPool,
+    HostQueueStore,
+    ThreadLocalPools,
+    _POOLS,
+    dedup_topk_rows,
+)
 
 
-class ThreadLocalPools:
-    """Per-thread ``BufPool`` registry: ``get()`` hands each thread its
-    own pool, so N serving threads can share one immutable store without
-    aliasing each other's ``rows``/``ts``/``key`` scratch.  Buffers die
-    with their thread (``threading.local`` storage)."""
-
-    def __init__(self):
-        self._tls = threading.local()
-
-    def get(self) -> BufPool:
-        pool = getattr(self._tls, "pool", None)
-        if pool is None:
-            pool = self._tls.pool = BufPool()
-        return pool
-
-
-_POOLS = ThreadLocalPools()   # default pools for module-level entry points
-
-
-def dedup_topk_rows(cand: np.ndarray, prio: np.ndarray, valid: np.ndarray,
-                    k: int, prio_bound: int,
-                    pool: Optional[BufPool] = None) -> np.ndarray:
-    """Per row: among ``valid`` entries, dedup items keeping the
-    lowest-priority occurrence, then emit the ``k`` lowest-priority
-    survivors in priority order as ``(B, k)`` int64, ``-1``-padded.
-
-    ``prio`` must be unique per row and ``< prio_bound`` wherever valid.
-    One unstable composite-key sort (item * P + priority packs both the
-    dedup grouping and the within-item winner into a single ordered
-    pass) plus an O(Q) top-k partition — no stable sorts, no scatters,
-    no allocations beyond the (B, k) result.
-    """
-    pool = pool if pool is not None else _POOLS.get()
-    B, M = cand.shape
-    pshift = max(int(prio_bound - 1).bit_length(), 1)  # P = 2^pshift
-    P = 1 << pshift
-    ishift = max(int(cand.max(initial=0)).bit_length(), 1)
-    dt = np.int32 if pshift + ishift < 31 else np.int64
-    big = np.iinfo(dt).max
-    # pass 1: sort on (item, prio) — groups duplicates, winner first.
-    # Value sorts throughout: the original column is never needed again,
-    # so no argsort/gather round-trips; key assembly is in-place.
-    key = pool.get("key", (B, M), dt)
-    scrap = pool.get("scrap", (B, M), bool)
-    np.left_shift(cand, pshift, out=key, dtype=dt)
-    np.add(key, prio, out=key)
-    np.logical_not(valid, out=scrap)
-    np.copyto(key, big, where=scrap)
-    key.sort(axis=1)
-    item = pool.get("item", (B, M), dt)
-    np.right_shift(key, pshift, out=item)
-    alive = pool.get("alive", (B, M), bool)
-    alive[:, 0] = True
-    np.not_equal(item[:, 1:], item[:, :-1], out=alive[:, 1:])  # dedup
-    # pass 2: re-pack winners as (prio, item) and select the k smallest
-    np.not_equal(key, big, out=scrap)
-    alive &= scrap
-    key2 = pool.get("key2", (B, M), dt)
-    np.bitwise_and(key, P - 1, out=key2)
-    np.left_shift(key2, ishift, out=key2)
-    np.bitwise_or(key2, item, out=key2)
-    np.logical_not(alive, out=alive)
-    np.copyto(key2, big, where=alive)
-    kk = min(k, M)
-    if kk < M:
-        key2.partition(kk - 1, axis=1)
-        key2 = key2[:, :kk]
-    key2.sort(axis=1)
-    out = np.where(key2 != big,
-                   key2 & ((1 << ishift) - 1), -1).astype(np.int64)
-    if out.shape[1] < k:
-        out = np.pad(out, ((0, 0), (0, k - out.shape[1])),
-                     constant_values=-1)
-    return out
+def _bucket(n: int, lo: int = 8) -> int:
+    """Smallest power-of-two >= n (>= lo): pads dynamic batch dims onto a
+    handful of stable jit traces."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 # ---------------------------------------------------------------------------
-# cluster-queue store (U2U2I)
+# traced building blocks (composed inside the jitted entry points below)
+# ---------------------------------------------------------------------------
+
+def _candidate_window(st, cl, cutoff, C: int, Q: int, Deff: int):
+    """Newest-first candidate window + validity mask for one row per
+    (padded) cluster id.  ``cl < 0`` rows are fully invalid.  With
+    ``Deff > 0`` the delta buffer (newest-first) is prepended to the
+    ring window so selection order equals arrival order."""
+    B = cl.shape[0]
+    known = cl >= 0
+    cl0 = jnp.where(known, cl, 0)
+    total = st["total"][cl0]
+    rtot = st["ring_total"][cl0] if Deff > 0 else total
+    a = jnp.arange(Q, dtype=jnp.int32)[None, :]
+    slot = jnp.mod(rtot[:, None] - 1 - a, Q)
+    r_item = jnp.take_along_axis(st["items"][cl0], slot, axis=1)
+    r_ts = jnp.take_along_axis(st["times"][cl0], slot, axis=1)
+    r_valid = ((a < jnp.minimum(rtot, Q)[:, None])
+               & (r_item >= 0) & (r_ts >= cutoff) & known[:, None])
+    if Deff == 0:
+        return r_item, r_valid
+    r_shadow = jnp.take_along_axis(st["shadow"][cl0], slot, axis=1)
+    r_age = a + (total - rtot)[:, None]        # age incl. pending deltas
+    r_valid = r_valid & ~r_shadow & (r_age < Q)
+    d_cl = st["d_cl"][:Deff][::-1][None, :]
+    d_item = jnp.broadcast_to(st["d_item"][:Deff][::-1][None, :], (B, Deff))
+    d_ts = st["d_ts"][:Deff][::-1][None, :]
+    d_idx = st["d_idx"][:Deff][::-1][None, :]
+    d_sh = st["d_shadow"][:Deff][::-1][None, :]
+    mine = (d_cl == cl0[:, None]) & known[:, None]
+    d_age = total[:, None] - 1 - d_idx
+    d_valid = (mine & ~d_sh & (d_item >= 0) & (d_ts >= cutoff)
+               & (d_age >= 0) & (d_age < Q))
+    return (jnp.concatenate([d_item, r_item], axis=1),
+            jnp.concatenate([d_valid, r_valid], axis=1))
+
+
+def _select_topk(cand, valid, k: int):
+    """First ``k`` valid candidates per row, in window order, ``-1``
+    padded.  Sort-free: cumsum prefix + unrolled binary search for the
+    j-th valid position."""
+    B, W = cand.shape
+    pref = jnp.cumsum(valid.astype(jnp.int32), axis=1)
+    j = jnp.arange(k, dtype=jnp.int32)[None, :]
+    lo = jnp.zeros((B, k), jnp.int32)
+    step = 1
+    while step < W:
+        step *= 2
+    step //= 2
+    while step >= 1:
+        mid = jnp.minimum(lo + step, W - 1)
+        go = jnp.take_along_axis(pref, mid, axis=1) < j + 1
+        lo = jnp.where(go, jnp.minimum(lo + step, W - 1), lo)
+        step //= 2
+    at0 = jnp.take_along_axis(pref, jnp.zeros_like(lo), axis=1) >= j + 1
+    src = jnp.where(at0, 0, jnp.minimum(lo + 1, W - 1))
+    got = jnp.take_along_axis(pref, src, axis=1) == j + 1
+    out = jnp.where(got, jnp.take_along_axis(cand, src, axis=1), -1)
+    return jnp.where(j < pref[:, -1][:, None], out, -1)
+
+
+def _union_topk(seeds, i2i, k: int):
+    """Traced U2I2I union: rank-major round-robin over the seeds'
+    neighbor lists, seed + duplicate masking, first-k select.  Bitwise
+    equal to the host ``u2i2i_retrieve_batch`` for identical seeds."""
+    B, R = seeds.shape
+    n, K = i2i.shape
+    W = R * K
+    seeded = (seeds >= 0) & (seeds < n)
+    rows = jnp.take(i2i, jnp.clip(seeds, 0, n - 1), axis=0)     # (B,R,K)
+    cand = jnp.where(seeded[:, :, None], rows, -1)
+    flat = cand.transpose(0, 2, 1).reshape(B, W)                # rank-major
+    seen = ((flat[:, :, None] == seeds[:, None, :])
+            & (seeds >= 0)[:, None, :]).any(axis=2)
+    valid = (flat >= 0) & ~seen
+    tri = jnp.tril(jnp.ones((W, W), bool), -1)
+    dup = ((flat[:, :, None] == flat[:, None, :])
+           & valid[:, None, :] & tri[None]).any(axis=2)
+    return _select_topk(flat, valid & ~dup, k)
+
+
+# ---------------------------------------------------------------------------
+# jitted entry points (one dispatch each)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("C", "Q"))
+def _direct_ingest_jit(st, w_cl, slot, w_item, raw_item, rel, t_cl,
+                       ucl, cnt, C, Q):
+    """Direct mode: tombstone prior ring occurrences of incoming items,
+    then scatter the batch's surviving writes and advance cursors.  Pad
+    rows carry cluster ``C`` and fall out via ``mode="drop"``."""
+    ring_rows = st["items"][jnp.clip(t_cl, 0, C - 1)]
+    m = ((ring_rows == raw_item[:, None])
+         & (raw_item >= 0)[:, None] & (t_cl < C)[:, None])
+    q_hit = jnp.argmax(m, axis=1).astype(jnp.int32)
+    has = m.any(axis=1)
+    items = st["items"].at[jnp.where(has, t_cl, C), q_hit].set(-1,
+                                                               mode="drop")
+    items = items.at[w_cl, slot].set(w_item, mode="drop")
+    times = st["times"].at[w_cl, slot].set(rel, mode="drop")
+    total = st["total"].at[ucl].add(cnt, mode="drop")
+    return dict(items=items, times=times, total=total)
+
+
+@functools.partial(jax.jit, static_argnames=("C", "Q", "D", "Deff"))
+def _append_jit(st, cl, w_item, raw_item, rel, d_idx, d0, n_real,
+                C, Q, D, Deff):
+    """Delta mode: append the batch to the delta buffer at ``d0``,
+    shadowing prior occurrences in both the ring (bitmap) and the delta
+    run (``d_shadow``)."""
+    Ep = cl.shape[0]
+    ar = jnp.arange(Ep, dtype=jnp.int32)
+    is_real = ar < n_real
+    dst = jnp.where(is_real, d0 + ar, D)
+    ring_rows = st["items"][jnp.clip(cl, 0, C - 1)]
+    m = ((ring_rows == raw_item[:, None])
+         & (raw_item >= 0)[:, None] & is_real[:, None])
+    q_hit = jnp.argmax(m, axis=1).astype(jnp.int32)
+    has = m.any(axis=1)
+    shadow = st["shadow"].at[jnp.where(has, cl, C), q_hit].set(True,
+                                                               mode="drop")
+    dm = ((st["d_cl"][:Deff][None, :] == cl[:, None])
+          & (st["d_item"][:Deff][None, :] == raw_item[:, None])
+          & (raw_item >= 0)[:, None] & is_real[:, None])
+    d_shadow = st["d_shadow"].at[:Deff].set(st["d_shadow"][:Deff]
+                                            | dm.any(axis=0))
+    # return ONLY the keys this pass writes: a jitted pass-through of
+    # the untouched (C, Q) ring arrays is a full device copy of them
+    # per call (no donation), which would erase the 1/S sharding win
+    return dict(
+        shadow=shadow,
+        d_shadow=d_shadow.at[dst].set(False, mode="drop"),
+        d_cl=st["d_cl"].at[dst].set(cl, mode="drop"),
+        d_item=st["d_item"].at[dst].set(w_item, mode="drop"),
+        d_ts=st["d_ts"].at[dst].set(rel, mode="drop"),
+        d_idx=st["d_idx"].at[dst].set(d_idx, mode="drop"),
+        total=st["total"].at[jnp.where(is_real, cl, C)].add(
+            1, mode="drop"))
+
+
+@functools.partial(jax.jit, static_argnames=("C", "Q", "D"))
+def _fold_jit(st, C, Q, D):
+    """Fold the delta run into the ring: apply shadow tombstones, write
+    each delta event to its slot (slot-LWW via a pairwise later-matrix),
+    drop already-evicted events, and reset the delta buffer."""
+    items = jnp.where(st["shadow"], -1, st["items"])
+    times = st["times"]
+    d_cl, d_item = st["d_cl"], st["d_item"]
+    d_ts, d_idx = st["d_ts"], st["d_idx"]
+    live = d_cl < C
+    slot = jnp.where(live, d_idx % Q, 0)
+    later = ((d_cl[None, :] == d_cl[:, None])
+             & (slot[None, :] == slot[:, None])
+             & (d_idx[None, :] > d_idx[:, None]) & live[None, :])
+    wins = live & ~later.any(axis=1)
+    age = st["total"][jnp.clip(d_cl, 0, C - 1)] - 1 - d_idx
+    dead = ~wins | (age >= Q)
+    w_item = jnp.where(st["d_shadow"], -1, d_item)
+    row = jnp.where(dead, C, d_cl)
+    # modified keys only (see _append_jit): `total` passes through
+    return dict(
+        items=items.at[row, slot].set(w_item, mode="drop"),
+        times=times.at[row, slot].set(d_ts, mode="drop"),
+        shadow=jnp.zeros_like(st["shadow"]),
+        ring_total=st["total"],
+        d_cl=jnp.full((D,), C, jnp.int32),
+        d_item=jnp.full((D,), -1, jnp.int32),
+        d_ts=jnp.full((D,), -jnp.inf, jnp.float32),
+        d_idx=jnp.zeros((D,), jnp.int32),
+        d_shadow=jnp.zeros((D,), jnp.bool_))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "C", "Q", "Deff"))
+def _retrieve_jit(st, cl, cutoff, k, C, Q, Deff):
+    cand, valid = _candidate_window(st, cl, cutoff, C, Q, Deff)
+    return _select_topk(cand, valid, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_recent", "k", "C", "Q", "Deff"))
+def _serve_jit(st, cl, i2i, cutoff, n_recent, k, C, Q, Deff):
+    cand, valid = _candidate_window(st, cl, cutoff, C, Q, Deff)
+    seeds = _select_topk(cand, valid, n_recent)
+    return seeds, _union_topk(seeds, i2i, k)
+
+
+# ---------------------------------------------------------------------------
+# cluster-queue store (U2U2I) — device-resident
 # ---------------------------------------------------------------------------
 
 class ClusterQueueStore:
-    """Real-time per-cluster item queues with recency filtering.
+    """Real-time per-cluster item queues with recency filtering, resident
+    on a jax device.
 
-    Flat ring-buffer layout: ``items``/``times`` are dense
-    ``(n_clusters, queue_len)`` arrays and ``cursor[c]`` counts total
-    writes into cluster ``c`` (write position = ``cursor % queue_len``,
-    fill level = ``min(cursor, queue_len)``) — O(1) eviction, no Python
-    containers anywhere on the serving path.
+    Layout: ``_state`` holds dense ``(n_clusters, queue_len)``
+    item/timestamp rings plus a per-cluster write counter ``total``
+    (write position = ``total % queue_len``); ``delta_cap > 0`` adds a
+    flat delta run that folds into the ring when full.  The ring is kept
+    duplicate-free per ``(cluster, item)`` by tombstoning at ingest.
 
-    Concurrency: writers serialize on ``write_lock`` (an RLock — the
-    swap engine's ring drain wraps ``ingest`` in the same lock);
-    readers are lock-free via a per-cluster seqlock, ``gen[c]``, which
-    is odd exactly while a write to cluster ``c`` is in flight.  A
-    reader gathers its rows, then re-checks the generations it started
-    from and retries on mismatch; after ``_SEQLOCK_SPINS`` failed
-    attempts it falls back to one gather under ``write_lock``.
+    Concurrency (MVCC): ``_state`` is immutable; writers rebind it under
+    ``write_lock`` (an RLock — the swap engine's ring drain wraps
+    ``ingest`` in the same lock), readers take one snapshot reference
+    and dispatch a single jit against it.  The dispatch releases the
+    GIL, so reader threads scale with cores.
+
+    ``_cursor_host`` mirrors ``total`` on the host (writer-maintained, so
+    ingest prep and telemetry never synchronise with the device).
     """
-
-    _SEQLOCK_SPINS = 32
 
     def __init__(self, user_clusters: np.ndarray, *, queue_len: int = 256,
                  recency_s: float = 900.0, n_clusters: Optional[int] = None,
-                 telemetry=None):
+                 telemetry=None, delta_cap: int = 0, shard_tag: str = "",
+                 device=None):
         self.tel = telemetry if telemetry is not None else get_telemetry()
         self.user_clusters = np.asarray(user_clusters, np.int64)
         self.queue_len = int(queue_len)
         self.recency_s = float(recency_s)
         if n_clusters is None:
-            n_clusters = int(self.user_clusters.max()) + 1 \
+            n_clusters = max(int(self.user_clusters.max()) + 1, 1) \
                 if self.user_clusters.size else 1
-        self.n_clusters = int(n_clusters)
-        self.items = np.full((self.n_clusters, self.queue_len), -1, np.int32)
-        # timestamps are stored float32 relative to the first-seen event
-        # (absolute unix-epoch seconds lose ~100s of precision in f32)
-        self.times = np.full((self.n_clusters, self.queue_len), -np.inf,
-                             np.float32)
-        self.cursor = np.zeros(self.n_clusters, np.int64)
+        self.n_clusters = max(int(n_clusters), 1)
+        self.delta_cap = int(delta_cap)
+        C, Q, D = self.n_clusters, self.queue_len, self.delta_cap
+        state = dict(
+            items=jnp.full((C, Q), -1, jnp.int32),
+            # timestamps are stored float32 relative to the first-seen
+            # event (absolute unix-epoch seconds lose ~100s of precision
+            # in f32)
+            times=jnp.full((C, Q), -np.inf, jnp.float32),
+            total=jnp.zeros((C,), jnp.int32),
+        )
+        if D > 0:
+            state.update(
+                shadow=jnp.zeros((C, Q), jnp.bool_),
+                ring_total=jnp.zeros((C,), jnp.int32),
+                d_cl=jnp.full((D,), C, jnp.int32),
+                d_item=jnp.full((D,), -1, jnp.int32),
+                d_ts=jnp.full((D,), -np.inf, jnp.float32),
+                d_idx=jnp.zeros((D,), jnp.int32),
+                d_shadow=jnp.zeros((D,), jnp.bool_),
+            )
+        if device is not None:
+            state = jax.device_put(state, device)
+        self._state = state
+        self._cursor_host = np.zeros(C, np.int64)
+        self.d_count = 0               # filled delta slots (writer-only)
         self.epoch: Optional[float] = None
-        self.pools = ThreadLocalPools()  # per-thread request scratch
-        self.gen = np.zeros(self.n_clusters, np.int64)   # seqlock, odd=busy
         self.write_lock = threading.RLock()
         self.ring_seen = 0     # EventRing watermark (maintained by swap)
+        self.shard_tag = shard_tag
+        self._m_ingest = "serving.ingest_events" + shard_tag
+        self._m_requests = "serving.retrieve_requests" + shard_tag
+        self._m_latency = "serving.retrieve_latency_s" + shard_tag
+        self._m_depth_max = "serving.queue_depth_max" + shard_tag
+        self._m_depth_mean = "serving.queue_depth_mean" + shard_tag
+        self._m_unknown_ev = "serving.unknown_user_events" + shard_tag
+        self._m_unknown_rq = "serving.unknown_user_requests" + shard_tag
+        self._i2i_cache: Optional[Tuple[int, jnp.ndarray]] = None
 
     # -- cluster assignment lookup ------------------------------------------
 
@@ -200,30 +353,30 @@ class ClusterQueueStore:
         """Cluster ids for a batch of users plus a known-user mask.
 
         Users outside the assignment table — ids minted *after* the
-        snapshot this store serves was published (the id space grows at
-        every lifecycle refresh) — map to cluster 0 with ``known=False``;
-        callers must mask their rows out rather than crash or serve
-        another user's cluster.
+        snapshot this store serves was published — and users whose table
+        entry is negative (clusters owned by a different shard) map to
+        cluster 0 with ``known=False``; callers must mask their rows out
+        rather than crash or serve another user's cluster.
         """
         user_ids = np.asarray(user_ids, np.int64).ravel()
         known = (user_ids >= 0) & (user_ids < self.user_clusters.shape[0])
         cl = self.user_clusters[np.where(known, user_ids, 0)]
-        return cl, known
+        known = known & (cl >= 0)
+        return np.where(known, cl, 0), known
 
     # -- ingestion ----------------------------------------------------------
 
     def ingest(self, user_ids: np.ndarray, item_ids: np.ndarray,
-               timestamps: np.ndarray) -> None:
+               timestamps: np.ndarray, *, _presorted: bool = False) -> None:
         """Stream a batch of engagement events into their users' cluster
-        ring buffers (vectorized; oldest-to-newest so the ring order is
-        the time order within the batch).  Events from users unknown to
-        this snapshot's assignment table are dropped (they enter queues
-        once the next publication assigns them a cluster).
+        ring buffers (oldest-to-newest so ring order is time order within
+        the batch).  Events from users unknown to this snapshot's
+        assignment table are dropped (they enter queues once the next
+        publication assigns them a cluster).
 
-        Thread-safe vs concurrent writers (``write_lock``) and vs
-        lock-free readers: all array writes happen inside the touched
-        clusters' seqlock window (``gen`` odd), so a reader overlapping
-        the scatter retries instead of returning a torn row."""
+        The device scatter happens behind ``write_lock``; readers keep
+        dispatching against the previous ``_state`` snapshot and observe
+        the batch atomically when the rebind lands."""
         user_ids = np.asarray(user_ids, np.int64).ravel()
         item_ids = np.asarray(item_ids, np.int64).ravel()
         ts64 = np.asarray(timestamps, np.float64).ravel()
@@ -233,8 +386,7 @@ class ClusterQueueStore:
             # errored — the drop is surfaced as a counter so staleness
             # between publications is observable
             if self.tel.enabled:
-                self.tel.counter("serving.unknown_user_events",
-                                 float((~known).sum()))
+                self.tel.counter(self._m_unknown_ev, float((~known).sum()))
             cl_all = cl_all[known]
             item_ids = item_ids[known]
             ts64 = ts64[known]
@@ -243,41 +395,133 @@ class ClusterQueueStore:
         with self.write_lock:
             if self.epoch is None:
                 self.epoch = float(ts64.min())
-            ts = (ts64 - self.epoch).astype(np.float32)
-            order = np.argsort(ts, kind="stable")
-            cl = cl_all[order]
-            it = item_ids[order]
-            ts = ts[order]
-
-            # per-cluster arrival rank (stable sort by cluster keeps
-            # time order)
-            by_cl = np.argsort(cl, kind="stable")
-            cl_sorted = cl[by_cl]
-            boundary = np.r_[True, cl_sorted[1:] != cl_sorted[:-1]]
-            group_start = np.maximum.accumulate(
-                np.where(boundary, np.arange(cl.size), 0))
-            rank = np.empty(cl.size, np.int64)
-            rank[by_cl] = np.arange(cl.size) - group_start
-
-            slot = (self.cursor[cl] + rank) % self.queue_len
-            # keep only the final write per (cluster, slot): with more
-            # events than queue_len for one cluster in a single batch,
-            # older events fall straight through the ring
-            key = cl * self.queue_len + slot
-            _, last = np.unique(key[::-1], return_index=True)
-            last = cl.size - 1 - last
-            uniq, counts = np.unique(cl, return_counts=True)
-            self.gen[uniq] += 1                # enter: odd -> readers spin
-            self.items[cl[last], slot[last]] = it[last]
-            self.times[cl[last], slot[last]] = ts[last]
-            self.cursor[uniq] += counts
-            self.gen[uniq] += 1                # exit: even -> consistent
+            rel = (ts64 - self.epoch).astype(np.float32)
+            cl = cl_all.astype(np.int32)
+            it = item_ids.astype(np.int32)
+            if not _presorted:
+                order = np.argsort(rel, kind="stable")
+                cl, it, rel = cl[order], it[order], rel[order]
+            if self.delta_cap:
+                n, done = cl.size, 0
+                while done < n:
+                    take = min(n - done, self.delta_cap - self.d_count)
+                    if take == 0:
+                        self._fold()
+                        continue
+                    self._append(cl[done:done + take],
+                                 it[done:done + take],
+                                 rel[done:done + take])
+                    done += take
+            else:
+                self._direct_ingest(cl, it, rel)
         tel = self.tel
         if tel.enabled:
-            tel.counter("serving.ingest_events", float(cl.size))
-            fill = np.minimum(self.cursor[uniq], self.queue_len)
-            tel.gauge("serving.queue_depth_max", float(fill.max()))
-            tel.gauge("serving.queue_depth_mean", float(fill.mean()))
+            tel.counter(self._m_ingest, float(cl.size))
+            fill = np.minimum(self._cursor_host[np.unique(cl)],
+                              self.queue_len)
+            tel.gauge(self._m_depth_max, float(fill.max()))
+            tel.gauge(self._m_depth_mean, float(fill.mean()))
+
+    def _direct_ingest(self, cl: np.ndarray, it: np.ndarray,
+                       rel: np.ndarray) -> None:
+        """Direct mode: host-side batch prep (slot assignment, in-batch
+        LWW) then one jitted scatter.  Reentrant under ``ingest``'s
+        lock."""
+        with self.write_lock:
+            E = cl.size
+            C, Q = self.n_clusters, self.queue_len
+            # per-event sequence index within its cluster (vectorized):
+            # stable sort by cluster keeps time order inside each group
+            o = np.argsort(cl, kind="stable")
+            sc = cl[o]
+            start = np.zeros(E, np.int64)
+            if E > 1:
+                idx = np.arange(1, E)
+                start[1:] = np.where(sc[1:] == sc[:-1], 0, idx)
+                np.maximum.accumulate(start, out=start)
+            rank = np.arange(E) - start
+            seq = np.empty(E, np.int64)
+            seq[o] = self._cursor_host[sc] + rank
+            slot = (seq % Q).astype(np.int32)
+            # slot LWW (in-batch ring wrap): last event per (cl, slot)
+            skey = cl.astype(np.int64) * Q + slot
+            _, li = np.unique(skey[::-1], return_index=True)
+            keep = np.zeros(E, bool)
+            keep[E - 1 - li] = True
+            # in-batch item LWW: earlier duplicate of (cl, item) becomes
+            # a tombstone so the ring stays duplicate-free
+            ikey = cl.astype(np.int64) << 32 | it.astype(np.int64)
+            _, li2 = np.unique(ikey[::-1], return_index=True)
+            w_item = np.full(E, -1, np.int32)
+            last = E - 1 - li2
+            w_item[last] = it[last]
+            ucl, cnt = np.unique(cl, return_counts=True)
+            pad = _bucket(E) - E
+            Cp = _bucket(ucl.size)
+            self._state = _direct_ingest_jit(
+                self._state,
+                jnp.asarray(np.pad(np.where(keep, cl, C), (0, pad),
+                                   constant_values=C).astype(np.int32)),
+                jnp.asarray(np.pad(slot, (0, pad))),
+                jnp.asarray(np.pad(w_item, (0, pad), constant_values=-1)),
+                jnp.asarray(np.pad(it, (0, pad), constant_values=-1)),
+                jnp.asarray(np.pad(rel, (0, pad),
+                                   constant_values=-np.inf)),
+                jnp.asarray(np.pad(cl, (0, pad), constant_values=C)),
+                jnp.asarray(np.pad(ucl, (0, Cp - ucl.size),
+                                   constant_values=C).astype(np.int32)),
+                jnp.asarray(np.pad(cnt, (0, Cp - ucl.size)
+                                   ).astype(np.int32)),
+                C, Q)
+            self._cursor_host[ucl] += cnt
+
+    def _append(self, cl: np.ndarray, it: np.ndarray,
+                rel: np.ndarray) -> None:
+        """Delta mode: append ``E <= delta_cap - d_count`` events to the
+        delta run.  Reentrant under ``ingest``'s lock."""
+        with self.write_lock:
+            E = cl.size
+            C, Q, D = self.n_clusters, self.queue_len, self.delta_cap
+            o = np.argsort(cl, kind="stable")
+            sc = cl[o]
+            start = np.zeros(E, np.int64)
+            if E > 1:
+                idx = np.arange(1, E)
+                start[1:] = np.where(sc[1:] == sc[:-1], 0, idx)
+                np.maximum.accumulate(start, out=start)
+            rank = np.arange(E) - start
+            d_idx = np.empty(E, np.int64)
+            d_idx[o] = self._cursor_host[sc] + rank
+            key = cl.astype(np.int64) << 32 | it.astype(np.int64)
+            _, li = np.unique(key[::-1], return_index=True)
+            last = E - 1 - li
+            w_item = np.full(E, -1, np.int32)
+            w_item[last] = it[last]
+            ucl, cnt = np.unique(cl, return_counts=True)
+            pad = _bucket(E) - E
+            self._state = {**self._state, **_append_jit(
+                self._state,
+                jnp.asarray(np.pad(cl, (0, pad), constant_values=C)),
+                jnp.asarray(np.pad(w_item, (0, pad), constant_values=-1)),
+                jnp.asarray(np.pad(it, (0, pad), constant_values=-1)),
+                jnp.asarray(np.pad(rel, (0, pad),
+                                   constant_values=-np.inf)),
+                jnp.asarray(np.pad(d_idx, (0, pad)).astype(np.int32)),
+                jnp.int32(self.d_count), jnp.int32(E),
+                C, Q, D, D)}
+            self.d_count += E
+            self._cursor_host[ucl] += cnt
+
+    def _fold(self) -> None:
+        """Fold the pending delta run into the ring (no-op when empty).
+        Reentrant under ``ingest``'s lock."""
+        with self.write_lock:
+            if self.d_count == 0:
+                return
+            self._state = {**self._state,
+                           **_fold_jit(self._state, self.n_clusters,
+                                       self.queue_len, self.delta_cap)}
+            self.d_count = 0
 
     # -- retrieval ----------------------------------------------------------
 
@@ -285,99 +529,82 @@ class ClusterQueueStore:
         """Recency cutoff in the store's internal (epoch-relative) time."""
         return now - self.recency_s - (self.epoch or 0.0)
 
-    def _seqlock_read(self, cl: np.ndarray, fn):
-        """Run ``fn()`` (which reads this store's arrays for clusters
-        ``cl``) under the seqlock discipline: skip while any touched
-        generation is odd, re-check the generations the read started
-        from, and retry on mismatch (a writer scattered into one of our
-        clusters mid-read).  Lock-free on the happy path; after
-        ``_SEQLOCK_SPINS`` collisions, one run under ``write_lock``
-        guarantees progress.
-
-        Every collision (odd generation seen, or generation moved under
-        the read) counts as a ``serving.seqlock_retries`` tick; taking
-        the locked path counts as ``serving.seqlock_fallbacks``."""
-        tel = self.tel
-        retries = 0
-        for _ in range(self._SEQLOCK_SPINS):
-            g0 = self.gen[cl]            # fancy index -> private copy
-            if (g0 & 1).any():           # a write is mid-flight: respin
-                retries += 1
-                continue
-            out = fn()
-            if np.array_equal(self.gen[cl], g0):
-                if retries and tel.enabled:
-                    tel.counter("serving.seqlock_retries", float(retries))
-                return out
-            retries += 1
-        if tel.enabled:
-            if retries:
-                tel.counter("serving.seqlock_retries", float(retries))
-            tel.counter("serving.seqlock_fallbacks")
-        with self.write_lock:            # bounded fallback: quiesced read
-            return fn()
-
-    def _consistent_gather(self, cl: np.ndarray, pool: BufPool
-                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Seqlock gather of ``(items, times, cursor)`` rows for
-        clusters ``cl`` into per-thread scratch."""
-        B, Q = cl.shape[0], self.queue_len
-        rows = pool.get("rows", (B, Q), np.int32)
-        ts = pool.get("ts", (B, Q), np.float32)
-
-        def gather():
-            np.take(self.items, cl, axis=0, out=rows)
-            np.take(self.times, cl, axis=0, out=ts)
-            return rows, ts, self.cursor[cl]
-
-        return self._seqlock_read(cl, gather)
+    def _padded_clusters(self, user_ids: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray, int,
+                                    np.ndarray, np.ndarray]:
+        """Dedup a request batch down to its unique cluster rows (padded
+        to a power-of-two bucket) — most of a production batch shares
+        clusters, and broadcasting rows back via the inverse is exact."""
+        cl, known = self.clusters_of(user_ids)
+        cl = np.where(known, cl, -1)
+        ucl, inv = np.unique(cl, return_inverse=True)
+        Bu = ucl.size
+        cl_p = np.pad(ucl, (0, _bucket(Bu) - Bu),
+                      constant_values=-1).astype(np.int32)
+        return cl_p, inv, Bu, cl, known
 
     def retrieve_batch(self, user_ids: np.ndarray, now: float,
                        k: int) -> np.ndarray:
         """Batched U2U2I: ``(B,)`` user ids -> ``(B, k)`` item ids,
         newest-first, recency-filtered, deduped, ``-1``-padded.  One
-        vectorized pass over the whole request batch.  Safe to call from
-        many threads at once (per-thread scratch, seqlock-guarded
-        gather)."""
+        snapshot read + one jitted dispatch; safe to call from many
+        threads at once (MVCC — no locks on this path)."""
         tel = self.tel
         t0 = tel.clock.perf() if tel.enabled else 0.0
         user_ids = np.asarray(user_ids, np.int64).ravel()
-        Q = self.queue_len
-        B = user_ids.shape[0]
-        pool = self.pools.get()
-        cl, known = self.clusters_of(user_ids)
-        rows, ts, total = self._consistent_gather(cl, pool)
-        head = (total % Q).astype(np.int32)
-        slot = np.arange(Q, dtype=np.int32)[None, :]
-        age = pool.get("age", (B, Q), np.int32)
-        np.subtract(head[:, None], slot + 1, out=age)
-        if Q & (Q - 1) == 0:                                 # pow2 fast path
-            np.bitwise_and(age, Q - 1, out=age)              # newest = 0
-        else:
-            np.mod(age, Q, out=age)
-        valid = pool.get("valid", (B, Q), bool)
-        mask = pool.get("mask", (B, Q), bool)
-        np.greater_equal(ts, np.float32(self.rel_cutoff(now)), out=valid)
-        np.less(age, np.minimum(total, Q)[:, None], out=mask)
-        valid &= mask
-        np.greater_equal(rows, 0, out=mask)
-        valid &= mask
-        if not known.all():
-            valid &= known[:, None]          # unknown users: empty rows
-            if tel.enabled:
-                tel.counter("serving.unknown_user_requests",
-                            float((~known).sum()))
-        out = dedup_topk_rows(rows, age, valid, k, Q, pool)
+        cl_p, inv, Bu, _, known = self._padded_clusters(user_ids)
+        st = self._state                 # one GIL-atomic snapshot read
+        out = _retrieve_jit(st, jnp.asarray(cl_p),
+                            jnp.float32(self.rel_cutoff(now)), int(k),
+                            self.n_clusters, self.queue_len,
+                            self.delta_cap)
+        res = np.asarray(out)[:Bu][inv].astype(np.int64)
         if tel.enabled:
-            tel.observe("serving.retrieve_latency_s",
-                        tel.clock.perf() - t0)
-            tel.counter("serving.retrieve_requests")
-        return out
+            tel.observe(self._m_latency, tel.clock.perf() - t0)
+            tel.counter(self._m_requests)
+            if not known.all():
+                tel.counter(self._m_unknown_rq, float((~known).sum()))
+        return res
 
     def retrieve(self, user_id: int, now: float, k: int) -> List[int]:
         """Legacy single-request U2U2I — a batch of one."""
         row = self.retrieve_batch(np.array([user_id]), now, k)[0]
         return [int(i) for i in row if i >= 0]
+
+    def _i2i_device(self, i2i: np.ndarray):
+        """Device copy of the I2I table, cached by identity (the table is
+        rebuilt only at embedding refresh, so one transfer per swap)."""
+        cached = self._i2i_cache
+        if cached is not None and cached[0] == id(i2i):
+            return cached[1]
+        dev = jnp.asarray(np.asarray(i2i, np.int32))
+        self._i2i_cache = (id(i2i), dev)
+        return dev
+
+    def _ring_view(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Consistent host view ``(items, times, cursor)`` of the ring
+        for the Pallas kernel path (delta mode folds first so the ring
+        is complete)."""
+        if self.delta_cap:
+            with self.write_lock:
+                self._fold()
+                st = self._state
+        else:
+            st = self._state
+        return (np.asarray(st["items"]), np.asarray(st["times"]),
+                np.asarray(st["total"]).astype(np.int64))
+
+    @property
+    def items(self) -> np.ndarray:
+        return self._ring_view()[0]
+
+    @property
+    def times(self) -> np.ndarray:
+        return self._ring_view()[1]
+
+    @property
+    def cursor(self) -> np.ndarray:
+        return self._cursor_host
 
     def serve_batch(self, user_ids: np.ndarray, now: float, *,
                     n_recent: int = 8, k: int = 32,
@@ -386,40 +613,284 @@ class ClusterQueueStore:
                     ) -> Tuple[np.ndarray, np.ndarray]:
         """Full serving pass: U2U2I seeds ``(B, n_recent)`` plus — when an
         ``i2i`` table is given — the U2I2I round-robin union ``(B, k)``.
+        The default path fuses both stages into a single jitted dispatch;
         ``use_kernel=True`` routes through the fused Pallas
-        ``queue_gather`` kernel instead of the numpy path."""
+        ``queue_gather`` kernel on a host snapshot of the ring."""
         if i2i is not None and use_kernel:
             from repro.kernels.queue_gather.ops import queue_gather
+            user_ids = np.asarray(user_ids, np.int64).ravel()
             cl, known = self.clusters_of(user_ids)
-
-            def _run():
-                s, u = queue_gather(
-                    self.items, self.times, self.cursor, cl, i2i,
-                    cutoff=self.rel_cutoff(now), n_recent=n_recent, k=k)
-                return np.asarray(s, np.int64), np.asarray(u, np.int64)
-
-            # same seqlock discipline as the numpy path: the kernel
-            # snapshots the store arrays at launch, so relaunch on a
-            # torn read
-            seeds, union = self._seqlock_read(cl, _run)
+            items, times, cursor = self._ring_view()
+            s, u = queue_gather(items, times, cursor, cl, i2i,
+                                cutoff=self.rel_cutoff(now),
+                                n_recent=n_recent, k=k)
+            seeds = np.asarray(s, np.int64)
+            union = np.asarray(u, np.int64)
             if not known.all():
-                seeds[~known] = -1           # unknown users: empty rows
+                seeds[~known] = -1       # unknown users: empty rows
                 union[~known] = -1
                 if self.tel.enabled:
-                    self.tel.counter("serving.unknown_user_requests",
+                    self.tel.counter(self._m_unknown_rq,
                                      float((~known).sum()))
             return seeds, union
-        seeds = self.retrieve_batch(user_ids, now, n_recent)
         if i2i is None:
+            seeds = self.retrieve_batch(user_ids, now, n_recent)
             return seeds, np.full((seeds.shape[0], k), -1, np.int64)
-        return seeds, u2i2i_retrieve_batch(i2i, seeds, k)
+        tel = self.tel
+        t0 = tel.clock.perf() if tel.enabled else 0.0
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        cl_p, inv, Bu, _, known = self._padded_clusters(user_ids)
+        st = self._state
+        s, u = _serve_jit(st, jnp.asarray(cl_p), self._i2i_device(i2i),
+                          jnp.float32(self.rel_cutoff(now)),
+                          int(n_recent), int(k),
+                          self.n_clusters, self.queue_len, self.delta_cap)
+        seeds = np.asarray(s)[:Bu][inv].astype(np.int64)
+        union = np.asarray(u)[:Bu][inv].astype(np.int64)
+        if tel.enabled:
+            tel.observe(self._m_latency, tel.clock.perf() - t0)
+            tel.counter(self._m_requests)
+            if not known.all():
+                tel.counter(self._m_unknown_rq, float((~known).sum()))
+        return seeds, union
+
+    # -- introspection ------------------------------------------------------
+
+    def partitions(self) -> Tuple["ClusterQueueStore", ...]:
+        """Uniform shard view: an unsharded store is its own single
+        partition."""
+        return (self,)
+
+    def stats(self) -> Dict[str, float]:
+        fill = np.minimum(self._cursor_host, self.queue_len)
+        active = fill > 0
+        return dict(n_shards=1,
+                    n_clusters_active=int(active.sum()),
+                    mean_queue=float(fill[active].mean())
+                    if active.any() else 0.0,
+                    delta_pending=float(self.d_count))
+
+
+# ---------------------------------------------------------------------------
+# sharded store: N contiguous cluster ranges behind one router
+# ---------------------------------------------------------------------------
+
+class ShardedQueueStore:
+    """``ClusterQueueStore`` partitioned into ``n_shards`` contiguous
+    cluster ranges behind the same API.
+
+    Routing is by cluster id: ingest sorts the batch by time once, splits
+    it by owning shard, and scatters; retrieve routes each request to its
+    shard and merges rows back in request order.  Each shard holds a
+    full-length user->cluster sub-table (out-of-range users map to
+    ``-1`` = unknown), so a shard can never serve another shard's
+    cluster.  The relative-time epoch is global — fixed from the first
+    ingested batch and broadcast to every shard before any shard sees an
+    event — so timestamps, and therefore retrieve results, are bitwise
+    identical to an unsharded store over the same stream.
+
+    With a ``jax.sharding.Mesh``, shard states are placed round-robin
+    over ``mesh.devices``; on a single-device host the win comes from
+    ``delta_cap``: per-shard ingest work (delta scans, fold matrices)
+    shrinks as 1/S.
+
+    Telemetry: each shard reports under a ``.shard{i}`` suffix; the
+    facade emits the untagged aggregate series.
+    """
+
+    def __init__(self, user_clusters: np.ndarray, *, n_shards: int,
+                 queue_len: int = 256, recency_s: float = 900.0,
+                 n_clusters: Optional[int] = None, delta_cap: int = 0,
+                 telemetry=None, mesh=None):
+        self.tel = telemetry if telemetry is not None else get_telemetry()
+        self.user_clusters = np.asarray(user_clusters, np.int64)
+        if n_clusters is None:
+            n_clusters = max(int(self.user_clusters.max()) + 1, 1) \
+                if self.user_clusters.size else 1
+        self.n_clusters = max(int(n_clusters), 1)
+        self.n_shards = max(int(n_shards), 1)
+        self.queue_len = int(queue_len)
+        self.recency_s = float(recency_s)
+        self.delta_cap = int(delta_cap)
+        self.bounds = np.linspace(0, self.n_clusters,
+                                  self.n_shards + 1).astype(np.int64)
+        devices = None
+        if mesh is not None:
+            devices = list(np.asarray(mesh.devices).ravel())
+        shards = []
+        spans = []
+        uc = self.user_clusters
+        for s in range(self.n_shards):
+            lo, hi = int(self.bounds[s]), int(self.bounds[s + 1])
+            sub = np.where((uc >= lo) & (uc < hi), uc - lo, -1)
+            shards.append(ClusterQueueStore(
+                sub, queue_len=self.queue_len, recency_s=self.recency_s,
+                n_clusters=max(hi - lo, 1), telemetry=self.tel,
+                delta_cap=self.delta_cap, shard_tag=f".shard{s}",
+                device=devices[s % len(devices)] if devices else None))
+            spans.append((lo, hi))
+        self.shards: Tuple[ClusterQueueStore, ...] = tuple(shards)
+        self._spans = tuple(spans)
+        self.epoch: Optional[float] = None
+        self.write_lock = threading.RLock()
+        self.ring_seen = 0     # EventRing watermark (maintained by swap)
+
+    # -- routing ------------------------------------------------------------
+
+    def clusters_of(self, user_ids: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Global cluster ids + known mask (same contract as the
+        unsharded store)."""
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        known = (user_ids >= 0) & (user_ids < self.user_clusters.shape[0])
+        cl = self.user_clusters[np.where(known, user_ids, 0)]
+        known = known & (cl >= 0)
+        return np.where(known, cl, 0), known
+
+    def _shard_of(self, cl: np.ndarray, known: np.ndarray) -> np.ndarray:
+        sid = np.searchsorted(self.bounds, cl, side="right") - 1
+        return np.where(known, sid, -1)
+
+    # -- ingestion ----------------------------------------------------------
+
+    def ingest(self, user_ids: np.ndarray, item_ids: np.ndarray,
+               timestamps: np.ndarray) -> None:
+        """Sort the batch by time once, split by owning shard, scatter.
+        Per-shard ingests skip their own sort (``_presorted``)."""
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        item_ids = np.asarray(item_ids, np.int64).ravel()
+        ts64 = np.asarray(timestamps, np.float64).ravel()
+        cl, known = self.clusters_of(user_ids)
+        if not known.all():
+            if self.tel.enabled:
+                self.tel.counter("serving.unknown_user_events",
+                                 float((~known).sum()))
+            user_ids = user_ids[known]
+            item_ids = item_ids[known]
+            ts64 = ts64[known]
+            cl = cl[known]
+        if cl.size == 0:
+            return
+        with self.write_lock:
+            if self.epoch is None:
+                # fix the global epoch before ANY shard ingests so every
+                # shard stores identical relative timestamps
+                self.epoch = float(ts64.min())
+                for sh in self.shards:
+                    with sh.write_lock:
+                        sh.epoch = self.epoch
+            # sort by the same f32 relative key the unsharded store uses
+            # (stable), so per-shard ring order is bitwise-identical
+            rel = (ts64 - self.epoch).astype(np.float32)
+            order = np.argsort(rel, kind="stable")
+            user_ids, item_ids = user_ids[order], item_ids[order]
+            ts64, cl = ts64[order], cl[order]
+            sid = np.searchsorted(self.bounds, cl, side="right") - 1
+            for s, sh in enumerate(self.shards):
+                m = sid == s
+                if m.any():
+                    sh.ingest(user_ids[m], item_ids[m], ts64[m],
+                              _presorted=True)
+        tel = self.tel
+        if tel.enabled:
+            tel.counter("serving.ingest_events", float(cl.size))
+            fill = np.minimum(self.cursor[np.unique(cl)], self.queue_len)
+            tel.gauge("serving.queue_depth_max", float(fill.max()))
+            tel.gauge("serving.queue_depth_mean", float(fill.mean()))
+
+    # -- retrieval ----------------------------------------------------------
+
+    def rel_cutoff(self, now: float) -> float:
+        return now - self.recency_s - (self.epoch or 0.0)
+
+    def retrieve_batch(self, user_ids: np.ndarray, now: float,
+                       k: int) -> np.ndarray:
+        """Route each request to its owning shard, gather, merge back in
+        request order.  Unknown users get ``-1`` rows without touching
+        any shard."""
+        tel = self.tel
+        t0 = tel.clock.perf() if tel.enabled else 0.0
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        cl, known = self.clusters_of(user_ids)
+        sid = self._shard_of(cl, known)
+        out = np.full((user_ids.size, int(k)), -1, np.int64)
+        for s, sh in enumerate(self.shards):
+            m = sid == s
+            if m.any():
+                out[m] = sh.retrieve_batch(user_ids[m], now, k)
+        if tel.enabled:
+            tel.observe("serving.retrieve_latency_s", tel.clock.perf() - t0)
+            tel.counter("serving.retrieve_requests")
+            if not known.all():
+                tel.counter("serving.unknown_user_requests",
+                            float((~known).sum()))
+        return out
+
+    def retrieve(self, user_id: int, now: float, k: int) -> List[int]:
+        row = self.retrieve_batch(np.array([user_id]), now, k)[0]
+        return [int(i) for i in row if i >= 0]
+
+    def serve_batch(self, user_ids: np.ndarray, now: float, *,
+                    n_recent: int = 8, k: int = 32,
+                    i2i: Optional[np.ndarray] = None,
+                    use_kernel: bool = False
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Scatter the serve pass across shards and merge both outputs."""
+        user_ids = np.asarray(user_ids, np.int64).ravel()
+        cl, known = self.clusters_of(user_ids)
+        sid = self._shard_of(cl, known)
+        seeds = np.full((user_ids.size, int(n_recent)), -1, np.int64)
+        union = np.full((user_ids.size, int(k)), -1, np.int64)
+        for s, sh in enumerate(self.shards):
+            m = sid == s
+            if m.any():
+                s_out, u_out = sh.serve_batch(user_ids[m], now,
+                                              n_recent=n_recent, k=k,
+                                              i2i=i2i,
+                                              use_kernel=use_kernel)
+                seeds[m] = s_out
+                union[m] = u_out
+        return seeds, union
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def cursor(self) -> np.ndarray:
+        """Global per-cluster write counts (shard ranges are contiguous,
+        so shard cursors concatenate into the global table)."""
+        return np.concatenate(
+            [sh._cursor_host[:hi - lo]
+             for sh, (lo, hi) in zip(self.shards, self._spans)])
+
+    @property
+    def items(self) -> np.ndarray:
+        return np.concatenate(
+            [sh.items[:hi - lo]
+             for sh, (lo, hi) in zip(self.shards, self._spans)], axis=0)
+
+    @property
+    def times(self) -> np.ndarray:
+        return np.concatenate(
+            [sh.times[:hi - lo]
+             for sh, (lo, hi) in zip(self.shards, self._spans)], axis=0)
+
+    def partitions(self) -> Tuple[ClusterQueueStore, ...]:
+        return self.shards
 
     def stats(self) -> Dict[str, float]:
         fill = np.minimum(self.cursor, self.queue_len)
         active = fill > 0
-        return dict(n_clusters_active=int(active.sum()),
-                    mean_queue=float(fill[active].mean())
-                    if active.any() else 0.0)
+        out = dict(n_shards=self.n_shards,
+                   n_clusters_active=int(active.sum()),
+                   mean_queue=float(fill[active].mean())
+                   if active.any() else 0.0,
+                   delta_pending=float(sum(sh.d_count
+                                           for sh in self.shards)))
+        for s, sh in enumerate(self.shards):
+            for key, v in sh.stats().items():
+                if key != "n_shards":
+                    out[f"shard{s}.{key}"] = v
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -431,8 +902,6 @@ def _topk_scorer(kk: int, exclude_self: bool):
     """Jitted chunk scorer: cosine top-k against the full item set with
     the diagonal masked.  One compile per (k, exclude_self); chunk rows
     are padded to a fixed shape so every chunk hits the same trace."""
-    import jax
-    import jax.numpy as jnp
 
     @jax.jit
     def score(chunk_e, all_e, row0):
@@ -526,7 +995,10 @@ class ServingCostModel:
     Cluster index: assign-once per embedding refresh (amortized ~0) +
     O(1) queue read per request.  ``batch_size`` models the batched
     engine: per-launch fixed costs (cursor/metadata reads, dispatch) are
-    amortized across the request batch.
+    amortized across the request batch.  ``n_shards`` models the sharded
+    router: the single-dispatch retrieve becomes one dispatch per shard
+    touched by the batch, so launch overheads scale with the shard
+    count while per-request work does not.
     """
     d: int = 256
     active_pool: int = 5_000_000       # recently-active users (15 min)
@@ -535,6 +1007,7 @@ class ServingCostModel:
     queue_read_items: int = 64
     rq_codes: Tuple[int, ...] = (5000, 50)
     batch_size: int = 1
+    n_shards: int = 1
     launch_bytes: float = 64 * 1024.0  # per-launch metadata + dispatch
     launch_flops: float = 4 * 1024.0
 
@@ -558,14 +1031,16 @@ class ServingCostModel:
         refresh_period_s = 3 * 3600.0
         amortized = assign / max(self.qps * refresh_period_s /
                                  max(self.active_pool, 1), 1e-9)
-        return amortized + self.launch_flops / self._batch(batch_size)
+        return amortized + (max(self.n_shards, 1) * self.launch_flops
+                            / self._batch(batch_size))
 
     def cluster_bytes_per_req(self, batch_size: Optional[int] = None
                               ) -> float:
-        # queue read + code read per request; launch cost amortized over
-        # the batch the vectorized engine serves per dispatch
+        # queue read + code read per request; launch cost (one dispatch
+        # per shard) amortized over the batch served per dispatch
         return (8.0 * self.queue_read_items + 8.0
-                + self.launch_bytes / self._batch(batch_size))
+                + (max(self.n_shards, 1) * self.launch_bytes
+                   / self._batch(batch_size)))
 
     def cost_reduction(self, batch_size: Optional[int] = None) -> float:
         """Fractional serving-cost reduction (bytes+flops weighted by a

@@ -94,6 +94,14 @@ class LifecycleConfig:
                           serving-store geometry: cluster ring-buffer
                           depth, recency horizon, and how many raw
                           events are retained for swap-time re-keying;
+    ``n_shards``          serving scale-out: partition the cluster space
+                          into this many contiguous ranges, each backed
+                          by its own device-resident store behind the
+                          swap server's router (1 = unsharded);
+    ``serving_delta_cap`` per-shard delta-buffer depth (0 = direct
+                          scatter per ingest; >0 = LSM-style append +
+                          fold, the mode whose ingest cost shrinks as
+                          1/n_shards);
     ``use_kernel``        route the publication encode through the
                           Pallas ``rq_assign`` kernel (TPU) instead of
                           the jitted reference (CPU);
@@ -134,6 +142,8 @@ class LifecycleConfig:
     queue_len: int = 256
     recency_s: float = 3600.0
     ring_capacity: int = 1 << 16
+    n_shards: int = 1
+    serving_delta_cap: int = 0
     embed_batch: int = 2048
     encode_chunk: int = 8192
     use_kernel: bool = False
@@ -524,6 +534,8 @@ class LifecycleRuntime:
                     snap, queue_len=self.lcfg.queue_len,
                     recency_s=self.lcfg.recency_s,
                     ring_capacity=self.lcfg.ring_capacity,
+                    n_shards=self.lcfg.n_shards,
+                    delta_cap=self.lcfg.serving_delta_cap,
                     telemetry=self.tel, faults=self.faults)
             return dict(from_version=0.0,
                         to_version=float(snap.version),
@@ -547,6 +559,13 @@ class LifecycleRuntime:
             res, ver = self.server.retrieve_batch(
                 np.arange(n), now, min(self.lcfg.recall_k, 8))
             ok = (ver == snap.version and res.shape[0] == n)
+            # every serving partition must be wired and answering: a
+            # mis-built shard (wrong range, dead sub-table) shows up
+            # here even when the probed users all hash to healthy shards
+            store = self.server.handle.acquire().store
+            parts = store.partitions()
+            ok = ok and len(parts) == max(self.lcfg.n_shards, 1)
+            ok = ok and all(p.stats()["n_shards"] == 1 for p in parts)
         except InjectedCrash:
             raise
         except Exception as e:
@@ -589,6 +608,8 @@ class LifecycleRuntime:
                 snap, queue_len=self.lcfg.queue_len,
                 recency_s=self.lcfg.recency_s,
                 ring_capacity=self.lcfg.ring_capacity,
+                n_shards=self.lcfg.n_shards,
+                delta_cap=self.lcfg.serving_delta_cap,
                 telemetry=self.tel, faults=self.faults)
         self.version = max(self.version, snap.version)
         self._last_good = snap

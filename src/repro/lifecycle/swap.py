@@ -32,7 +32,8 @@ Concurrency contract (the multithreaded serving tier):
   race: whoever drains first applies the events, later drains skip
   them.
 * **Readers** (``retrieve_batch``/``serve_batch``) acquire the bundle
-  once and run lock-free against its store (seqlock on the store side).
+  once and run lock-free against its store (MVCC snapshot on the store
+  side: one atomic ``_state`` reference read per request batch).
 * **The swap** closes the classic lost-event race — an ingest that
   lands between the catch-up read and the flip used to be written to
   the *old* bundle's store only.  Because every event is in the ring
@@ -50,7 +51,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.serving import ClusterQueueStore
+from repro.core.serving import ClusterQueueStore, ShardedQueueStore
 from repro.faults import InjectedCrash, get_faults
 from repro.lifecycle.snapshot import IndexSnapshot
 from repro.obs import get_telemetry
@@ -175,10 +176,11 @@ class EventRing:
 @dataclasses.dataclass(frozen=True)
 class ServingBundle:
     """Everything one snapshot version needs to serve — flipped as a
-    single immutable unit."""
+    single immutable unit.  ``store`` is a ``ClusterQueueStore`` or,
+    when the server is sharded, a ``ShardedQueueStore`` (same API)."""
     version: int
     snapshot: IndexSnapshot
-    store: ClusterQueueStore
+    store: "ClusterQueueStore | ShardedQueueStore"
     i2i: np.ndarray
 
 
@@ -223,10 +225,13 @@ class SwapServer:
 
     def __init__(self, snapshot: IndexSnapshot, *, queue_len: int = 256,
                  recency_s: float = 3600.0, ring_capacity: int = 1 << 16,
+                 n_shards: int = 1, delta_cap: int = 0,
                  clock: Optional[Callable[[], float]] = None,
                  telemetry=None, faults=None):
         self.queue_len = int(queue_len)
         self.recency_s = float(recency_s)
+        self.n_shards = max(int(n_shards), 1)
+        self.delta_cap = int(delta_cap)
         self.tel = telemetry if telemetry is not None else get_telemetry()
         self.faults = faults if faults is not None else get_faults()
         # injectable so swap-report timings are replayable in tests —
@@ -242,11 +247,21 @@ class SwapServer:
         self._pre_flip_hook: Optional[Callable[[], None]] = None
 
     def _bundle(self, snapshot: IndexSnapshot) -> ServingBundle:
-        store = ClusterQueueStore(snapshot.user_clusters,
-                                  queue_len=self.queue_len,
-                                  recency_s=self.recency_s,
-                                  n_clusters=snapshot.n_clusters,
-                                  telemetry=self.tel)
+        if self.n_shards > 1:
+            store = ShardedQueueStore(snapshot.user_clusters,
+                                      n_shards=self.n_shards,
+                                      queue_len=self.queue_len,
+                                      recency_s=self.recency_s,
+                                      n_clusters=snapshot.n_clusters,
+                                      delta_cap=self.delta_cap,
+                                      telemetry=self.tel)
+        else:
+            store = ClusterQueueStore(snapshot.user_clusters,
+                                      queue_len=self.queue_len,
+                                      recency_s=self.recency_s,
+                                      n_clusters=snapshot.n_clusters,
+                                      delta_cap=self.delta_cap,
+                                      telemetry=self.tel)
         return ServingBundle(version=snapshot.version, snapshot=snapshot,
                              store=store, i2i=snapshot.i2i)
 

@@ -95,6 +95,70 @@ def test_lock_discipline_flags_missing_gen_bracket(tmp_path):
     assert "generation bump" in found[0].message
 
 
+DEVICE_STORE_HEADER = """\
+    import threading
+
+    class DeviceStore:
+        def __init__(self, n):
+            self._state = dict(items=[0] * n, total=[0] * n)
+            self._cursor_host = [0] * n
+            self.epoch = None
+            self.ring_seen = 0
+            self.d_count = 0
+            self.write_lock = threading.RLock()
+"""
+
+
+def test_lock_discipline_flags_unlocked_state_rebind(tmp_path):
+    path = _write(tmp_path, "repro/core/dstore.py",
+                  DEVICE_STORE_HEADER + """\
+
+        def bad(self, new_state, ucl, cnt):
+            self._state = new_state
+            self._cursor_host[ucl] = cnt
+""")
+    found = _findings(path, LockDisciplineRule())
+    assert len(found) == 2
+    assert found[0].line == _line_of(path, "self._state = new_state")
+    assert "_state" in found[0].message
+    assert "write_lock" in found[0].message
+    assert found[1].line == _line_of(path,
+                                     "self._cursor_host[ucl] = cnt")
+
+
+def test_lock_discipline_device_store_clean_when_locked(tmp_path):
+    path = _write(tmp_path, "repro/core/dstore.py",
+                  DEVICE_STORE_HEADER + """\
+
+        def good(self, new_state, ts, ucl, cnt):
+            with self.write_lock:
+                if self.epoch is None:
+                    self.epoch = ts
+                self._state = new_state
+                self._cursor_host[ucl] = cnt
+                self.d_count += cnt
+                self.ring_seen += 1
+
+        def reader(self, cl):
+            st = self._state          # snapshot read: no lock needed
+            return st["items"], self._cursor_host
+""")
+    assert _findings(path, LockDisciplineRule()) == []
+
+
+def test_lock_discipline_device_store_no_gen_bracket_demand(tmp_path):
+    # the device store has no seqlock: a locked _state rebind must NOT
+    # be asked for generation bumps
+    path = _write(tmp_path, "repro/core/dstore.py",
+                  DEVICE_STORE_HEADER + """\
+
+        def ingest(self, new_state):
+            with self.write_lock:
+                self._state = new_state
+""")
+    assert _findings(path, LockDisciplineRule()) == []
+
+
 def test_lock_discipline_flags_order_inversion(tmp_path):
     path = _write(tmp_path, "repro/core/ring.py", """\
         import threading

@@ -1,17 +1,21 @@
-"""Concurrent serving tier: per-thread reader pools, seqlock-guarded
-retrieval against a live-ingesting store, multi-writer EventRing, and
-the deterministic lost-event swap race regression.
+"""Concurrent serving tier: per-thread reader pools, MVCC retrieval
+against a live-ingesting device store, the preserved host engine's
+seqlock discipline, multi-writer EventRing, and the deterministic
+lost-event swap race regression (sharded and unsharded).
 
 The heavyweight R-reader/W-writer storm with throughput gating lives in
-``benchmarks/serving_concurrency.py``; these tests pin the individual
-contracts at test-tier sizes.
+``benchmarks/serving_concurrency.py`` (host engine) and
+``benchmarks/serving_scaleout.py`` (device engine); these tests pin the
+individual contracts at test-tier sizes.
 """
 import threading
 import time
 
 import numpy as np
 
-from repro.core.serving import BufPool, ClusterQueueStore, ThreadLocalPools
+from repro.core.serving import (BufPool, ClusterQueueStore,
+                                HostQueueStore, ShardedQueueStore,
+                                ThreadLocalPools, u2i2i_retrieve_batch)
 from repro.lifecycle.swap import EventRing, SwapServer
 from repro.lifecycle.snapshot import IndexSnapshot, derive_members
 from repro.obs import FixedClock, MemorySink, Telemetry
@@ -138,9 +142,10 @@ def test_retrieve_during_concurrent_ingest_then_oracle():
 def test_seqlock_fallback_under_writer_pressure():
     """The bounded-spin fallback path must return a consistent result
     even when a writer holds the write lock across the reader's whole
-    spin budget (forced via a tiny spin budget)."""
-    store = ClusterQueueStore(np.array([0, 1]), queue_len=8,
-                              recency_s=1e9)
+    spin budget (forced via a tiny spin budget).  Host engine: the
+    device store has no seqlock (MVCC)."""
+    store = HostQueueStore(np.array([0, 1]), queue_len=8,
+                           recency_s=1e9)
     store.ingest(np.array([0, 1]), np.array([5, 6]),
                  np.array([1.0, 2.0]))
     store._SEQLOCK_SPINS = 0  # always take the locked fallback
@@ -391,8 +396,85 @@ def test_swap_report_true_replay_count_and_stale_drop():
     assert rep2["ring_dropped"] == float(big - server.ring.capacity)
 
 
+def test_sharded_swap_storm_consistent_versions_and_no_lost_events():
+    """Swap storm over a 3-shard store: writers and fused-serve readers
+    race two hot swaps.  Every response must be internally
+    version-consistent (its union recomputes bitwise from the returned
+    version's i2i table — a bundle mixing versions would not), and after
+    the storm every shard must hold exactly what a sharded oracle fed
+    the same stream holds (zero lost, zero duplicated, per shard)."""
+    rng = np.random.default_rng(11)
+    n_users, n_items, n_shards = 48, 40, 3
+    snaps = [_mk_snapshot(rng, v, n_users, n_items, flip=v % 2)
+             for v in (1, 2, 3)]
+    server = SwapServer(snaps[0], queue_len=16, recency_s=1e9,
+                        n_shards=n_shards)
+    assert len(server.handle.acquire().store.partitions()) == n_shards
+    i2i_by_ver = {s.version: s.i2i for s in snaps}
+    per_writer = [[] for _ in range(2)]
+    errs = []
+
+    def writer(w):
+        # writer w owns users with u % 2 == w: disjoint clusters under
+        # both flip parities, strictly increasing ts within the writer,
+        # so per-cluster apply order is deterministic across drains
+        try:
+            r = np.random.default_rng(100 + w)
+            for step in range(40):
+                n = int(r.integers(1, 10))
+                u = (r.integers(0, n_users // 2, n) * 2 + w).astype(np.int64)
+                it = r.integers(0, n_items, n).astype(np.int64)
+                ts = (step * 16 + np.arange(n)) * 2.0 + w
+                per_writer[w].append((u, it, ts))
+                server.ingest(u, it, ts)
+        except Exception as e:                  # pragma: no cover
+            errs.append(e)
+
+    def reader():
+        try:
+            r = np.random.default_rng(7)
+            for _ in range(30):
+                users = r.integers(0, n_users, 16)
+                seeds, union, ver = server.serve_batch(
+                    users, now=1e6, n_recent=4, k=8)
+                np.testing.assert_array_equal(
+                    union, u2i2i_retrieve_batch(i2i_by_ver[ver], seeds, 8))
+        except Exception as e:                  # pragma: no cover
+            errs.append(e)
+
+    threads = ([threading.Thread(target=writer, args=(w,))
+                for w in range(2)]
+               + [threading.Thread(target=reader) for _ in range(2)])
+    for t in threads:
+        t.start()
+    for snap in snaps[1:]:                      # the storm races the I/O
+        time.sleep(0.02)
+        server.swap_to(snap, now=1e6)
+    for t in threads:
+        t.join()
+    assert not errs, errs
+
+    final = server.handle.acquire()
+    assert final.version == 3
+    ev = [np.concatenate(arrs) for arrs in
+          zip(*(batch for batches in per_writer for batch in batches))]
+    order = np.argsort(ev[2], kind="stable")
+    oracle = ShardedQueueStore(snaps[-1].user_clusters,
+                               n_shards=n_shards, queue_len=16,
+                               recency_s=1e9,
+                               n_clusters=snaps[-1].n_clusters)
+    oracle.ingest(ev[0][order], ev[1][order], ev[2][order])
+    users = np.arange(n_users)
+    np.testing.assert_array_equal(
+        final.store.retrieve_batch(users, 1e6, 16),
+        oracle.retrieve_batch(users, 1e6, 16))
+    for got, want in zip(final.store.partitions(), oracle.partitions()):
+        np.testing.assert_array_equal(got.cursor, want.cursor)
+    assert int(final.store.cursor.sum()) == ev[0].size
+
+
 # ---------------------------------------------------------------------------
-# seqlock telemetry: retry / fallback counters
+# seqlock telemetry: retry / fallback counters (host engine white-box)
 # ---------------------------------------------------------------------------
 
 def test_seqlock_retry_counter_counts_gen_moves():
@@ -400,8 +482,8 @@ def test_seqlock_retry_counter_counts_gen_moves():
     it retries exactly once and ticks ``serving.seqlock_retries``, and
     the returned value comes from the consistent re-read."""
     tel = Telemetry()                         # NullSink: metrics only
-    store = ClusterQueueStore(np.array([0]), queue_len=8,
-                              recency_s=1e9, telemetry=tel)
+    store = HostQueueStore(np.array([0]), queue_len=8,
+                           recency_s=1e9, telemetry=tel)
     calls = {"n": 0}
 
     def fn():
@@ -421,8 +503,8 @@ def test_seqlock_odd_gen_exhausts_spins_then_falls_back():
     whole spin budget — every collision counted — then takes exactly
     one locked fallback."""
     tel = Telemetry()
-    store = ClusterQueueStore(np.array([0]), queue_len=8,
-                              recency_s=1e9, telemetry=tel)
+    store = HostQueueStore(np.array([0]), queue_len=8,
+                           recency_s=1e9, telemetry=tel)
     store.gen[0] = 1                          # permanently mid-flight
     assert store._seqlock_read(np.array([0]), lambda: 9) == 9
     counters = tel.snapshot()["counters"]
@@ -436,8 +518,8 @@ def test_seqlock_fallback_counter_and_retrieve_metrics():
     counter but no retries; the retrieve wrapper records the request
     count and a latency observation either way."""
     tel = Telemetry()
-    store = ClusterQueueStore(np.array([0, 1]), queue_len=8,
-                              recency_s=1e9, telemetry=tel)
+    store = HostQueueStore(np.array([0, 1]), queue_len=8,
+                           recency_s=1e9, telemetry=tel)
     store.ingest(np.array([0, 1]), np.array([5, 6]),
                  np.array([1.0, 2.0]))
     store._SEQLOCK_SPINS = 0
@@ -460,8 +542,8 @@ def test_seqlock_counters_move_under_writer_racing_readers():
     completes and is counted."""
     tel = Telemetry()
     n_users, C = 64, 8
-    store = ClusterQueueStore(np.arange(n_users) % C, queue_len=16,
-                              recency_s=1e9, telemetry=tel)
+    store = HostQueueStore(np.arange(n_users) % C, queue_len=16,
+                           recency_s=1e9, telemetry=tel)
     store.ingest(np.arange(n_users), np.arange(n_users),
                  np.arange(n_users, dtype=float))
     stop = threading.Event()

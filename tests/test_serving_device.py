@@ -1,0 +1,282 @@
+"""Device-resident serving engine vs the preserved host engine.
+
+The device ``ClusterQueueStore`` (MVCC snapshots + one jitted dispatch
+per request batch) must be an observably identical replacement for the
+seqlock ``HostQueueStore`` on every retrieval it serves.  For
+non-decreasing-timestamp streams the contract is *bitwise* equality —
+pinned here across seeds, ring wraps, dup-heavy streams, unknown and
+post-snapshot user ids, recency-cutoff edges, and empty queues — in
+direct mode, delta (LSM) mode, and through the sharded router.
+
+The one documented tolerance: the engines dedup at different times
+(device at ingest, latest-ingest-wins; host at retrieve,
+newest-timestamp-wins), so a duplicate ``(cluster, item)`` re-ingested
+in a *later batch* with an *older timestamp* diverges iff the recency
+cutoff falls between the two timestamps.  That exact window is pinned
+below too.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.serving import (ClusterQueueStore, HostQueueStore,
+                                ServingCostModel, ShardedQueueStore,
+                                u2i2i_retrieve_batch)
+from repro.obs.telemetry import Telemetry
+
+
+# ---------------------------------------------------------------------------
+# stream + comparison helpers
+# ---------------------------------------------------------------------------
+
+N_USERS, N_CLUSTERS, N_ITEMS = 32, 6, 10      # tiny item space: dup-heavy
+
+
+def _clusters(rng):
+    return rng.integers(0, N_CLUSTERS, N_USERS).astype(np.int64)
+
+
+def _batches(rng, n_batches, t0=0.0, span=10.0, id_hi=N_USERS + 4):
+    """Batched event stream with globally non-decreasing timestamps.
+    ``id_hi`` past the table size mixes in post-snapshot (unknown) ids;
+    empty batches exercise the no-op ingest path."""
+    out, t = [], t0
+    for b in range(n_batches):
+        n = int(rng.integers(0, 40))          # 0 => empty-batch edge
+        u = rng.integers(0, id_hi, n)
+        it = rng.integers(0, N_ITEMS, n)
+        ts = t + np.sort(rng.random(n)) * span
+        t += span
+        out.append((u, it, ts))
+    return out
+
+
+# probe users: known, repeated, never-ingested clusters, post-snapshot
+# ids, and a negative id — every row class the engines must agree on
+_PROBES = np.array([0, 1, 1, 5, 17, 31, N_USERS, N_USERS + 9, -1])
+
+
+def _assert_parity(dev, host, now, ks=(4, 8)):
+    for k in ks:
+        np.testing.assert_array_equal(
+            dev.retrieve_batch(_PROBES, now, k),
+            host.retrieve_batch(_PROBES, now, k))
+    np.testing.assert_array_equal(dev.cursor, host.cursor)
+
+
+def _run_stream_parity(dev, host, rng):
+    """Ingest the same stream into both engines, checking parity after
+    every batch at recency-edge ``now`` values (cutoff before, inside,
+    and after the retained window)."""
+    for u, it, ts in _batches(rng, 7):
+        dev.ingest(u, it, ts)
+        host.ingest(u, it, ts)
+        t_end = float(ts[-1]) if ts.size else 70.0
+        for now in (t_end, t_end + 25.0, t_end + 49.9, t_end + 200.0):
+            _assert_parity(dev, host, now)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_direct_mode_matches_host_bitwise(seed):
+    rng = np.random.default_rng(seed)
+    flat = _clusters(rng)
+    # queue_len 8 << events per cluster: every cluster wraps repeatedly
+    dev = ClusterQueueStore(flat, queue_len=8, recency_s=50.0)
+    host = HostQueueStore(flat, queue_len=8, recency_s=50.0)
+    _run_stream_parity(dev, host, rng)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_delta_mode_matches_host_bitwise(seed):
+    """LSM writes: small ``delta_cap`` forces mid-stream folds; reads
+    that see a part-filled delta must still match the host."""
+    rng = np.random.default_rng(100 + seed)
+    flat = _clusters(rng)
+    dev = ClusterQueueStore(flat, queue_len=8, recency_s=50.0,
+                            delta_cap=16)
+    host = HostQueueStore(flat, queue_len=8, recency_s=50.0)
+    _run_stream_parity(dev, host, rng)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sharded_router_matches_host_bitwise(seed):
+    """3 shards over 6 clusters: scatter-ingest + gather-merge retrieve
+    must be transparent — bitwise equal to the unsharded host."""
+    rng = np.random.default_rng(200 + seed)
+    flat = _clusters(rng)
+    dev = ShardedQueueStore(flat, n_shards=3, queue_len=8,
+                            recency_s=50.0)
+    host = HostQueueStore(flat, queue_len=8, recency_s=50.0)
+    assert len(dev.partitions()) == 3
+    _run_stream_parity(dev, host, rng)
+
+
+def test_empty_store_unknown_users_and_retrieve_list_api():
+    flat = _clusters(np.random.default_rng(0))
+    dev = ClusterQueueStore(flat, queue_len=8, recency_s=50.0)
+    host = HostQueueStore(flat, queue_len=8, recency_s=50.0)
+    # nothing ingested: every row is all -1 on both engines
+    _assert_parity(dev, host, now=10.0)
+    assert (dev.retrieve_batch(_PROBES, 10.0, 4) == -1).all()
+    dev.ingest(np.array([0]), np.array([3]), np.array([1.0]))
+    host.ingest(np.array([0]), np.array([3]), np.array([1.0]))
+    assert dev.retrieve(0, 2.0, 4) == host.retrieve(0, 2.0, 4)
+    assert dev.retrieve(N_USERS + 1, 2.0, 4) == []   # post-snapshot id
+
+
+def test_ts_regression_cross_batch_is_the_documented_tolerance():
+    """The one permitted divergence, pinned to its exact window: a
+    duplicate re-ingested in a later batch with an older timestamp.
+    Device keeps the re-ingested (older) stamp, host keeps the newest;
+    they disagree iff the cutoff lands between the two stamps."""
+    flat = np.zeros(1, np.int64)
+    dev = ClusterQueueStore(flat, queue_len=8, recency_s=50.0)
+    host = HostQueueStore(flat, queue_len=8, recency_s=50.0)
+    for s in (dev, host):
+        s.ingest(np.array([0]), np.array([7]), np.array([10.0]))
+        s.ingest(np.array([0]), np.array([7]), np.array([5.0]))  # older!
+    u = np.array([0])
+    # cutoff below both stamps (now=54 -> cutoff 4): both return it
+    np.testing.assert_array_equal(dev.retrieve_batch(u, 54.0, 4),
+                                  host.retrieve_batch(u, 54.0, 4))
+    # cutoff between the stamps (now=57 -> cutoff 7): the divergence
+    assert host.retrieve_batch(u, 57.0, 4)[0, 0] == 7
+    assert (dev.retrieve_batch(u, 57.0, 4) == -1).all()
+    # cutoff above both (now=61 -> cutoff 11): both empty again
+    np.testing.assert_array_equal(dev.retrieve_batch(u, 61.0, 4),
+                                  host.retrieve_batch(u, 61.0, 4))
+
+
+def _ingest_both(stores, rng, n_batches=5):
+    for u, it, ts in _batches(rng, n_batches):
+        for s in stores:
+            s.ingest(u, it, ts)
+
+
+def test_fused_serve_matches_host_u2i2i():
+    """The single-dispatch serve (retrieve + U2I2I union in one jit)
+    must be bitwise equal to the host's two-step path."""
+    rng = np.random.default_rng(7)
+    flat = _clusters(rng)
+    dev = ClusterQueueStore(flat, queue_len=8, recency_s=1e9)
+    shd = ShardedQueueStore(flat, n_shards=2, queue_len=8, recency_s=1e9)
+    host = HostQueueStore(flat, queue_len=8, recency_s=1e9)
+    _ingest_both((dev, shd, host), rng)
+    i2i = rng.integers(0, N_ITEMS, (N_ITEMS, 3)).astype(np.int64)
+    hs, hu = host.serve_batch(_PROBES, 100.0, n_recent=4, k=8, i2i=i2i)
+    for store in (dev, shd):
+        seeds, union = store.serve_batch(_PROBES, 100.0, n_recent=4,
+                                         k=8, i2i=i2i)
+        np.testing.assert_array_equal(seeds, hs)
+        np.testing.assert_array_equal(union, hu)
+        np.testing.assert_array_equal(
+            union, u2i2i_retrieve_batch(i2i, seeds, 8))
+    # no i2i table: seeds only, union all -1
+    seeds, union = dev.serve_batch(_PROBES, 100.0, n_recent=4, k=8)
+    np.testing.assert_array_equal(seeds, hs)
+    assert (union == -1).all()
+
+
+def test_kernel_serve_path_matches_fused():
+    """``use_kernel=True`` routes the device store's ring view through
+    the fused Pallas ``queue_gather`` kernel — same answers."""
+    rng = np.random.default_rng(9)
+    flat = _clusters(rng)
+    dev = ClusterQueueStore(flat, queue_len=8, recency_s=1e9)
+    _ingest_both((dev,), rng)
+    i2i = rng.integers(0, N_ITEMS, (N_ITEMS, 3)).astype(np.int64)
+    s0, u0 = dev.serve_batch(_PROBES, 100.0, n_recent=4, k=8, i2i=i2i)
+    s1, u1 = dev.serve_batch(_PROBES, 100.0, n_recent=4, k=8, i2i=i2i,
+                             use_kernel=True)
+    np.testing.assert_array_equal(s1, s0)
+    np.testing.assert_array_equal(u1, u0)
+
+
+# ---------------------------------------------------------------------------
+# stats, telemetry, cost model, mesh placement
+# ---------------------------------------------------------------------------
+
+def test_stats_per_shard_and_delta_pending():
+    rng = np.random.default_rng(3)
+    flat = _clusters(rng)
+    shd = ShardedQueueStore(flat, n_shards=3, queue_len=8,
+                            recency_s=1e9, delta_cap=64)
+    _ingest_both((shd,), rng, n_batches=3)
+    st = shd.stats()
+    assert st["n_shards"] == 3.0
+    for s in range(3):
+        assert f"shard{s}.n_clusters_active" in st
+        assert f"shard{s}.mean_queue" in st
+    assert sum(st[f"shard{s}.n_clusters_active"] for s in range(3)) \
+        == st["n_clusters_active"]
+    # folding drains the pending delta
+    pending = [p.stats()["delta_pending"] for p in shd.partitions()]
+    for p in shd.partitions():
+        p._fold()
+    assert any(x > 0 for x in pending) or shd.cursor.sum() == 0
+    assert all(p.stats()["delta_pending"] == 0.0
+               for p in shd.partitions())
+
+
+def test_sharded_telemetry_tagged_counters_and_gauges():
+    """Shards emit ``.shardN``-tagged metrics; the facade emits the
+    untagged aggregates — tagged ingest counts must sum to the
+    aggregate, and every shard publishes its own depth gauges."""
+    rng = np.random.default_rng(5)
+    flat = _clusters(rng)
+    tel = Telemetry()
+    shd = ShardedQueueStore(flat, n_shards=2, queue_len=8,
+                            recency_s=1e9, telemetry=tel)
+    u = rng.integers(0, N_USERS, 64)
+    it = rng.integers(0, N_ITEMS, 64)
+    shd.ingest(u, it, np.sort(rng.random(64) * 10.0))
+    shd.retrieve_batch(np.arange(8), 20.0, 4)
+    snap = tel.snapshot()
+    c, g = snap["counters"], snap["gauges"]
+    assert c["serving.ingest_events"] == 64.0
+    assert (c.get("serving.ingest_events.shard0", 0.0)
+            + c.get("serving.ingest_events.shard1", 0.0)) == 64.0
+    assert c["serving.retrieve_requests"] == 1.0
+    assert "serving.queue_depth_max" in g
+    for s in range(2):
+        if c.get(f"serving.ingest_events.shard{s}", 0.0):
+            assert f"serving.queue_depth_max.shard{s}" in g
+    assert snap["hists"]["serving.retrieve_latency_s"].get("n", 0) >= 1
+
+
+def test_cost_model_shard_and_batch_scaling():
+    """Launch overheads scale with the shard count and amortize with
+    the dispatch batch; per-request queue work does neither."""
+    one = ServingCostModel(batch_size=1, n_shards=1)
+    four = ServingCostModel(batch_size=1, n_shards=4)
+    per_req_bytes = 8.0 * one.queue_read_items + 8.0
+    assert four.cluster_bytes_per_req() - per_req_bytes \
+        == pytest.approx(4 * (one.cluster_bytes_per_req()
+                              - per_req_bytes))
+    assert four.cluster_flops_per_req() > one.cluster_flops_per_req()
+    # batching amortizes the extra dispatches away
+    assert four.cluster_bytes_per_req(batch_size=256) \
+        < one.cluster_bytes_per_req(batch_size=1)
+    assert four.cost_reduction(batch_size=256) \
+        > four.cost_reduction(batch_size=1)
+    assert one.cost_reduction(batch_size=256) > 0.99
+
+
+def test_mesh_placement_smoke():
+    """With a mesh, shard state is placed round-robin over its devices
+    and answers are unchanged."""
+    rng = np.random.default_rng(13)
+    flat = _clusters(rng)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("shards",))
+    shd = ShardedQueueStore(flat, n_shards=2, queue_len=8,
+                            recency_s=1e9, mesh=mesh)
+    host = HostQueueStore(flat, queue_len=8, recency_s=1e9)
+    _ingest_both((shd, host), rng, n_batches=3)
+    np.testing.assert_array_equal(
+        shd.retrieve_batch(_PROBES, 100.0, 8),
+        host.retrieve_batch(_PROBES, 100.0, 8))
+    devs = set(np.asarray(mesh.devices).ravel().tolist())
+    for p in shd.partitions():
+        arr = p._state["items"]
+        assert set(arr.devices()) <= devs
